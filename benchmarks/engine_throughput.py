@@ -1,0 +1,101 @@
+"""Simulator engine throughput (paper §3.1 "low-cost" claim, and the
+headline §Perf hillclimb): paper-faithful tick loop vs event-skip vs
+vmap fleet, in simulated-seconds per wall-second and ticks/second."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import SimParams, TICKS_PER_SECOND, fleet_run, generate_workload, run
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps
+
+
+def main(print_rows: bool = True) -> list[dict]:
+    rows = []
+    params = SimParams(
+        duration=1.0,
+        waiting_ticks_mean=2500,
+        op_base_seconds_mean=0.03,
+        op_ram_gb_mean=2.0,
+        max_pipelines=128,
+        max_containers=64,
+        scheduling_algo="priority",
+    )
+    wl = generate_workload(params)
+    horizon = params.horizon_ticks
+
+    def tick_run():
+        jax.block_until_ready(
+            run(params, workload=wl, engine="tick").state.done_count
+        )
+
+    def event_run():
+        jax.block_until_ready(
+            run(params, workload=wl, engine="event").state.done_count
+        )
+
+    t_tick = _time(tick_run, reps=1)
+    t_event = _time(event_run)
+    rows.append(
+        {
+            "engine": "tick (paper-faithful)",
+            "wall_s": round(t_tick, 4),
+            "ticks_per_s": round(horizon / t_tick),
+            "sim_s_per_wall_s": round(params.duration / t_tick, 2),
+        }
+    )
+    rows.append(
+        {
+            "engine": "event-skip",
+            "wall_s": round(t_event, 4),
+            "ticks_per_s": round(horizon / t_event),
+            "sim_s_per_wall_s": round(params.duration / t_event, 2),
+            "speedup_vs_tick": round(t_tick / t_event, 1),
+        }
+    )
+
+    # python reference engine
+    t0 = time.time()
+    run(params, workload=wl, engine="python")
+    t_py = time.time() - t0
+    rows.append(
+        {
+            "engine": "python (reference)",
+            "wall_s": round(t_py, 4),
+            "ticks_per_s": round(horizon / t_py),
+            "sim_s_per_wall_s": round(params.duration / t_py, 2),
+        }
+    )
+
+    # vmap fleet: 64 simulations at once
+    seeds = list(range(64))
+
+    def fleet():
+        jax.block_until_ready(fleet_run(params, seeds).done_count)
+
+    t_fleet = _time(fleet)
+    rows.append(
+        {
+            "engine": "vmap fleet x64",
+            "wall_s": round(t_fleet, 4),
+            "ticks_per_s": round(64 * horizon / t_fleet),
+            "sim_s_per_wall_s": round(64 * params.duration / t_fleet, 2),
+            "speedup_vs_serial_event": round(64 * t_event / t_fleet, 1),
+        }
+    )
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Kernel microbenchmarks: chunked/oracle implementations wall-time on
+CPU (the Pallas kernels themselves target TPU; their interpret-mode
+correctness is covered in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import flash_attention_ref, mha_reference
+from repro.kernels.rwkv6_scan.ops import _rwkv6_chunked
+from repro.kernels.rwkv6_scan.ref import rwkv6_ref
+from repro.kernels.sim_tick.ref import fleet_tick_ref
+from repro.kernels.ssm_scan.ops import _ssm_chunked
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def _bench(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def main(print_rows: bool = True) -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention: blocked ref vs naive (memory-feasible shape)
+    B, S, H, KV, D = 1, 2048, 8, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    t_naive = _bench(lambda: mha_reference(q, k, v, causal=True))
+    t_flash = _bench(
+        lambda: flash_attention_ref(q, k, v, causal=True, block_k=512)
+    )
+    rows.append({"name": "attention_naive_2k", "us_per_call": round(t_naive)})
+    rows.append({"name": "attention_flashref_2k", "us_per_call": round(t_flash)})
+
+    # rwkv6: sequential oracle vs chunked
+    B, S, Hh, N = 2, 1024, 8, 64
+    r_, k_, v_ = (
+        jax.random.normal(kk, (B, S, Hh, N), jnp.float32)
+        for kk in jax.random.split(ks[0], 3)
+    )
+    w_ = jnp.exp(-jnp.exp(jax.random.uniform(ks[1], (B, S, Hh, N), minval=-3, maxval=1)))
+    u_ = jax.random.normal(ks[2], (Hh, N)) * 0.3
+    t_seq = _bench(lambda: rwkv6_ref(r_, k_, v_, w_, u_), reps=2)
+    t_chk = _bench(lambda: _rwkv6_chunked(r_, k_, v_, w_, u_,
+                                          jnp.zeros((B, Hh, N, N)), chunk=32))
+    rows.append({"name": "rwkv6_sequential_1k", "us_per_call": round(t_seq)})
+    rows.append({
+        "name": "rwkv6_chunked_1k",
+        "us_per_call": round(t_chk),
+        "derived": f"cpu_ratio={t_seq / t_chk:.2f}x_(chunked_form_targets_MXU_matmuls)",
+    })
+
+    # mamba ssm
+    B, S, dim, N = 2, 1024, 128, 16
+    x = jax.random.normal(ks[0], (B, S, dim))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, dim)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (dim, N)))
+    Bm = jax.random.normal(ks[0], (B, S, N))
+    Cm = jax.random.normal(ks[1], (B, S, N))
+    Dm = jax.random.normal(ks[2], (dim,))
+    t_seq = _bench(lambda: ssm_scan_ref(x, dt, A, Bm, Cm, Dm), reps=2)
+    t_chk = _bench(
+        lambda: _ssm_chunked(x, dt, A, Bm, Cm, Dm,
+                             jnp.zeros((B, dim, N)), chunk=256)
+    )
+    rows.append({"name": "ssm_sequential_1k", "us_per_call": round(t_seq)})
+    rows.append({
+        "name": "ssm_chunked_1k",
+        "us_per_call": round(t_chk),
+        "derived": f"cpu_ratio={t_seq / t_chk:.2f}x_(chunked_form_targets_MXU_matmuls)",
+    })
+
+    # sim_tick fleet update
+    F, MC, NP = 4096, 64, 2
+    ks2 = jax.random.split(key, 7)
+    status = jax.random.randint(ks2[0], (F, MC), 0, 2)
+    end = jax.random.randint(ks2[1], (F, MC), 0, 1000)
+    oom = jnp.full((F, MC), 2**31 - 1, jnp.int32)
+    cpus = jax.random.uniform(ks2[2], (F, MC)) * 4
+    ram = jax.random.uniform(ks2[3], (F, MC)) * 8
+    pool = jax.random.randint(ks2[4], (F, MC), 0, NP)
+    tick = jnp.arange(F, dtype=jnp.int32)
+    t = _bench(
+        lambda: fleet_tick_ref(status, end, oom, cpus, ram, pool, tick,
+                               num_pools=NP)
+    )
+    rows.append({
+        "name": "sim_tick_fleet4096",
+        "us_per_call": round(t),
+        "derived": f"{F / (t / 1e6) / 1e6:.1f}M sims-ticks/s",
+    })
+
+    if print_rows:
+        for r in rows:
+            print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

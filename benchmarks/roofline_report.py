@@ -1,0 +1,84 @@
+"""Render the §Dry-run / §Roofline markdown tables from the dry-run JSON
+reports.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report \
+        reports/dryrun_optimized.json [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def fmt_ms(s):
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    return f"{s*1e3:.1f}ms"
+
+
+def render(path: str, mesh: str = "single", out_md: bool = True) -> str:
+    rows = json.loads(pathlib.Path(path).read_text())
+    rows = [r for r in rows if r.get("mesh") == mesh]
+    lines = []
+    hdr = (
+        "| arch | shape | status | peak GiB/dev | fits | t_comp | t_mem |"
+        " t_coll | bound | useful | roofline |"
+    )
+    lines.append(hdr)
+    lines.append("|" + "---|" * 11)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}) |"
+                + " — |" * 8
+            )
+            continue
+        if r["status"] == "error":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ERROR | — | — | — | — | — |"
+                f" — | — | — |"
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok |"
+            f" {fmt_bytes(r['peak_bytes_per_device'])} |"
+            f" {'Y' if r['fits_hbm'] else 'N'} |"
+            f" {fmt_ms(r['t_compute_s'])} | {fmt_ms(r['t_memory_s'])} |"
+            f" {fmt_ms(r['t_collective_s'])} | {r['dominant'][:4]} |"
+            f" {r['useful_flops_fraction']*100:.0f}% |"
+            f" {r['roofline_fraction']*100:.1f}% |"
+        )
+    return "\n".join(lines)
+
+
+def summarize(path: str) -> str:
+    rows = json.loads(pathlib.Path(path).read_text())
+    ok = [r for r in rows if r["status"] == "ok"]
+    sk = [r for r in rows if r["status"] == "skipped"]
+    er = [r for r in rows if r["status"] == "error"]
+    fits = [r for r in ok if r.get("fits_hbm")]
+    return (
+        f"{len(rows)} cells: {len(ok)} compiled ok ({len(fits)} fit 16 GiB/chip), "
+        f"{len(sk)} documented skips, {len(er)} errors"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("report")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    print(summarize(args.report))
+    print()
+    print(render(args.report, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark plus the
+section tables used by EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _csv(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slower benches (tick engine, fleet)")
+    args = ap.parse_args()
+
+    print("== tpch_validation (paper Fig. 3) ==")
+    from benchmarks import tpch_validation
+
+    t0 = time.time()
+    out = tpch_validation.main(print_rows=False)
+    _csv(
+        "tpch_validation",
+        (time.time() - t0) * 1e6 / max(out["n_queries"], 1),
+        f"mean_err={out['mean_err_pct']:.2f}%_paper_band=0.44-3.08%",
+    )
+
+    print("== scheduler_comparison (paper §4.1.2) ==")
+    from benchmarks import scheduler_comparison
+
+    rows = scheduler_comparison.main(print_rows=False)
+    for r in rows:
+        _csv(
+            f"sched_{r['scheduler']}",
+            r["wall_s"] * 1e6,
+            f"thr={r['throughput_per_s']}/s_p99={r['p99_latency_s']}s"
+            f"_pre={r['preempt_events']}",
+        )
+
+    print("== interleaving (paper §2.2 / Table 1) ==")
+    from benchmarks import interleaving
+
+    out = interleaving.main(print_rows=False)
+    for k, v in out.items():
+        _csv(
+            f"interleave_{k}",
+            0.0,
+            f"thr={v['throughput_per_s']:.1f}/s"
+            f"_interlat={v['interactive_latency_s']:.4f}s"
+            f"_util={v['cpu_utilization']:.3f}",
+        )
+
+    print("== engine_throughput (§Perf headline) ==")
+    from benchmarks import engine_throughput
+
+    if not args.fast:
+        rows = engine_throughput.main(print_rows=False)
+        for r in rows:
+            _csv(
+                f"engine_{r['engine'].split()[0]}",
+                r["wall_s"] * 1e6,
+                f"ticks/s={r['ticks_per_s']}",
+            )
+
+    print("== kernels ==")
+    from benchmarks import kernels_bench
+
+    rows = kernels_bench.main(print_rows=False)
+    for r in rows:
+        _csv(r["name"], r["us_per_call"], r.get("derived", ""))
+
+    print("== serving policy pick (bridge) ==")
+    from repro.serving.bridge import ServeRequest, evaluate_policies, pick_policy
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    trace = [
+        ServeRequest(
+            arrival_s=float(i * 0.2),
+            prompt_tokens=int(rng.integers(64, 512)),
+            new_tokens=64,
+            interactive=bool(rng.random() < 0.5),
+        )
+        for i in range(32)
+    ]
+    from repro.configs.registry import get_arch
+
+    t0 = time.time()
+    res = evaluate_policies(trace, get_arch("gemma3_12b").model)
+    pol = pick_policy(res)
+    _csv("serving_policy_eval", (time.time() - t0) * 1e6 / 3, f"picked={pol}")
+
+    print("benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Scheduler comparison (paper §4.1.2): the three built-ins on one
+workload mix, plus the per-priority latency view that motivates the
+priority/preemption design."""
+from __future__ import annotations
+
+import time
+
+from repro.core import SimParams, generate_workload, run
+
+
+def main(print_rows: bool = True) -> list[dict]:
+    rows = []
+    base = SimParams(
+        duration=2.0,
+        waiting_ticks_mean=2500,
+        op_base_seconds_mean=0.03,
+        op_ram_gb_mean=2.0,
+        max_pipelines=256,
+        max_containers=64,
+        seed=11,
+    )
+    for algo in ("naive", "priority", "priority_pool", "sjf"):
+        params = base.replace(
+            scheduling_algo=algo,
+            num_pools=2 if algo == "priority_pool" else 1,
+        )
+        wl = generate_workload(params)
+        t0 = time.time()
+        res = run(params, workload=wl, engine="event")
+        wall = time.time() - t0
+        s = res.summary()
+        row = {
+            "scheduler": algo,
+            "done": s["done"],
+            "throughput_per_s": round(s["throughput_per_s"], 2),
+            "mean_latency_s": round(s["mean_latency_s"], 4),
+            "p99_latency_s": round(s["p99_latency_s"], 4),
+            "interactive_latency_s": round(
+                s["per_priority"]["interactive"]["mean_latency_s"], 4
+            ),
+            "batch_latency_s": round(
+                s["per_priority"]["batch"]["mean_latency_s"], 4
+            ),
+            "cpu_utilization": round(s["cpu_utilization"], 3),
+            "oom_events": s["oom_events"],
+            "preempt_events": s["preempt_events"],
+            "wall_s": round(wall, 3),
+        }
+        rows.append(row)
+        if print_rows:
+            print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

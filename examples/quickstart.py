@@ -1,0 +1,27 @@
+"""Quickstart — paper Listing 3, verbatim.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import eudoxia
+
+
+def main():
+    paramfile = str(pathlib.Path(__file__).parent / "project.toml")
+    result = eudoxia.run_simulator(paramfile)
+    summary = result.summary()
+    print("Eudoxia simulation complete:")
+    for k in (
+        "submitted", "done", "failed", "throughput_per_s",
+        "mean_latency_s", "p99_latency_s", "cpu_utilization",
+        "oom_events", "preempt_events", "cost_dollars",
+    ):
+        print(f"  {k:18s} {summary[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Paper-verbatim facade: ``import eudoxia`` (Listings 3-6).
+
+Everything re-exports from :mod:`repro.core`, where the implementation
+lives; this package exists so the paper's code snippets run unchanged::
+
+    import eudoxia
+
+    def main():
+        paramfile = "project.toml"
+        eudoxia.run_simulator(paramfile)
+"""
+from repro.core import *  # noqa: F401,F403
+from repro.core import run_simulator, SimResult  # noqa: F401
+
+from . import algorithm, core  # noqa: F401

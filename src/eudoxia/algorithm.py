@@ -1,0 +1,10 @@
+"""``from eudoxia.algorithm import register_scheduler,
+register_scheduler_init`` (paper Listing 4)."""
+from repro.core.algorithm import (  # noqa: F401
+    register_scheduler,
+    register_scheduler_init,
+)
+from repro.core.scheduler import (  # noqa: F401
+    register_vector_scheduler,
+    register_vector_scheduler_init,
+)

@@ -1,0 +1,13 @@
+"""``from eudoxia.core import Scheduler, Failure, Assignment, Pipeline``
+(paper Listing 4)."""
+from repro.core import (  # noqa: F401
+    Assignment,
+    Failure,
+    Operator,
+    Pipeline,
+    PipeStatus,
+    Priority,
+    Scheduler,
+    SimParams,
+    Suspension,
+)

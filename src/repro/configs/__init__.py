@@ -1,0 +1,3 @@
+from .registry import ALL_SHAPES, ArchSpec, get_arch, list_archs
+
+__all__ = ["ALL_SHAPES", "ArchSpec", "get_arch", "list_archs"]

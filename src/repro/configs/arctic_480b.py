@@ -1,0 +1,54 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128e top-2 + dense residual.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+Arctic's signature dense-MoE hybrid: every layer runs a (small) dense
+MLP **in parallel** with the 128-expert top-2 MoE ("moe_dense" spec).
+56 heads don't divide the 16-way model axis, so attention shards on
+head_dim (128/16=8). vocab padded 32000 -> 32000 (already 256-aligned
+via 32000 % 256 == 0 ? no — padded to 32256).
+"""
+from repro.models.common import LayerSpec, MoEConfig, ModelConfig
+from .registry import ArchSpec, pad_vocab, register
+
+register(
+    ArchSpec(
+        model=ModelConfig(
+            name="arctic_480b",
+            family="moe",
+            n_layers=35,
+            d_model=7168,
+            # 56 semantic heads padded to 64 so Q/O shard 16-way on the
+            # model axis (head_dim sharding all-reduces every score panel —
+            # measured 11.4 TB/step wire; see EXPERIMENTS.md §Perf). The
+            # faithful 56-head baseline is recorded in dryrun_baseline.json.
+            n_heads=64,
+            n_kv_heads=8,
+            head_dim=128,
+            d_ff=4864,
+            vocab=pad_vocab(32000),
+            moe=MoEConfig(
+                n_experts=128, top_k=2, expert_ff=4864, capacity_factor=1.25
+            ),
+            pattern=(LayerSpec("attn", "moe_dense"),),
+        ),
+        smoke=ModelConfig(
+            name="arctic_480b_smoke",
+            family="moe",
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=2,
+            d_ff=96,
+            vocab=512,
+            moe=MoEConfig(n_experts=8, top_k=2, expert_ff=96),
+            pattern=(LayerSpec("attn", "moe_dense"),),
+            attn_impl="ref",
+        ),
+        optimizer="adafactor",
+        opt_state_dtype="bfloat16",
+        train_microbatches=8,
+        skip={"long_500k": "full attention (quadratic)"},
+        notes="dense residual MLP parallel to 128e top-2 MoE every layer.",
+    )
+)

@@ -1,0 +1,49 @@
+"""whisper-small [audio]: 12L d_model=768 12H (kv=12) d_ff=3072
+vocab=51865 — enc-dec, conv frontend (stub). [arXiv:2212.04356; unverified]
+
+12L = 12 encoder + 12 decoder layers (whisper-small's actual split).
+The conv frontend is stubbed: input_specs() provides precomputed frame
+embeddings [B, seq_len, 1024]; decoder length = max(64, seq_len // 8).
+vocab padded 51865 -> 51968. long_500k skipped: the decoder's
+cross-attention is linear per decode step, but it presupposes a 500k-
+frame *encoder* pass, which is quadratic self-attention.
+"""
+from repro.models.common import LayerSpec, ModelConfig
+from .registry import ArchSpec, pad_vocab, register
+
+register(
+    ArchSpec(
+        model=ModelConfig(
+            name="whisper_small",
+            family="audio",
+            n_layers=12,
+            n_enc_layers=12,
+            d_model=768,
+            n_heads=12,
+            n_kv_heads=12,
+            head_dim=64,
+            d_ff=3072,
+            vocab=pad_vocab(51865),
+            mlp_type="gelu",
+            pattern=(LayerSpec("attn", "dense"),),
+        ),
+        smoke=ModelConfig(
+            name="whisper_small_smoke",
+            family="audio",
+            n_layers=2,
+            n_enc_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=4,
+            d_ff=128,
+            vocab=512,
+            mlp_type="gelu",
+            pattern=(LayerSpec("attn", "dense"),),
+            attn_impl="ref",
+        ),
+        optimizer="adamw",
+        skip={"long_500k": "500k-frame encoder self-attention is quadratic"},
+        notes="12 heads not divisible by model=16 -> attention projections "
+        "replicate across TP; ff/vocab still shard (768-dim model is tiny).",
+    )
+)

@@ -1,0 +1,79 @@
+"""Eudoxia core: deterministic FaaS scheduling simulator in JAX.
+
+Public API mirrors the paper (§4.1): ``run_simulator(paramfile)``,
+the ``Scheduler`` class, the ``Failure``/``Assignment``/``Pipeline``
+records and the registration decorators in ``repro.core.algorithm``.
+"""
+from .algorithm import (
+    register_scheduler,
+    register_scheduler_init,
+)
+from .engine import SimResult, run
+from .engine_python import Scheduler
+from .metrics import completion_table, summarize
+from .params import SimParams, load_params
+from .scheduler import (
+    SchedDecision,
+    register_vector_scheduler,
+    register_vector_scheduler_init,
+)
+from .state import SimState, Workload, container_schedule, init_state
+from .sweep import fleet_run, fleet_summary, make_workload_batch
+from .types import (
+    Assignment,
+    Failure,
+    Operator,
+    Pipeline,
+    PipeStatus,
+    Priority,
+    Suspension,
+    TICKS_PER_SECOND,
+)
+from . import extra_schedulers  # noqa: F401 — registers 'sjf'
+from .workload import (
+    generate_workload,
+    load_trace,
+    workload_from_pipelines,
+    workload_from_trace_records,
+)
+
+
+def run_simulator(paramfile, **kw) -> SimResult:
+    """Paper Listing 3 entry point."""
+    return run(paramfile, **kw)
+
+
+__all__ = [
+    "run_simulator",
+    "run",
+    "SimResult",
+    "SimParams",
+    "load_params",
+    "Scheduler",
+    "SchedDecision",
+    "SimState",
+    "Workload",
+    "Assignment",
+    "Failure",
+    "Operator",
+    "Pipeline",
+    "PipeStatus",
+    "Priority",
+    "Suspension",
+    "TICKS_PER_SECOND",
+    "register_scheduler",
+    "register_scheduler_init",
+    "register_vector_scheduler",
+    "register_vector_scheduler_init",
+    "generate_workload",
+    "workload_from_pipelines",
+    "workload_from_trace_records",
+    "load_trace",
+    "container_schedule",
+    "init_state",
+    "summarize",
+    "completion_table",
+    "fleet_run",
+    "fleet_summary",
+    "make_workload_batch",
+]

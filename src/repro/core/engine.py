@@ -1,0 +1,180 @@
+"""Simulation engines.
+
+Two compiled engines advance the same transition functions:
+
+* **tick** — the paper-faithful loop: one `lax.scan` iteration per 10 µs
+  tick ("Each iteration represents 1 CPU tick", §3.2).
+* **event** — an event-skip engine (`lax.while_loop`) that jumps straight
+  to the next arrival / completion / OOM / suspension-release / decision
+  follow-up tick. Because scheduler decisions are pure functions of the
+  state and the state is constant between events, both engines produce
+  identical metrics — a property the test-suite checks. This is the
+  headline performance optimisation over the paper's implementation
+  (see EXPERIMENTS.md §Perf).
+
+Both are pure JAX: a whole simulation is one XLA program, so fleets of
+simulations vmap/shard over devices (see ``sweep.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import executor
+from .params import SimParams, load_params
+from .scheduler import (
+    SchedDecision,
+    get_vector_scheduler,
+    get_vector_scheduler_init,
+)
+from .state import INF_TICK, SimState, Workload, init_state
+from .types import ContainerStatus, PipeStatus
+from .workload import get_workload
+
+
+@dataclasses.dataclass
+class SimResult:
+    state: SimState
+    workload: Workload
+    params: SimParams
+    sched_state: Any = None
+
+    def summary(self) -> dict:
+        from .metrics import summarize
+
+        return summarize(self.state, self.workload, self.params)
+
+
+# ---------------------------------------------------------------------------
+# One tick worth of work (shared by both engines).
+# ---------------------------------------------------------------------------
+def _tick_body(
+    state: SimState,
+    sched_state: Any,
+    wl: Workload,
+    params: SimParams,
+    scheduler_fn: Callable,
+    tick: jax.Array,
+):
+    state = executor.process_arrivals(state, wl, tick)
+    state = executor.process_releases(state, tick)
+    state = executor.process_completions(state, wl, tick)
+    sched_state, dec = scheduler_fn(sched_state, state, wl, params)
+    state = executor.apply_decision(state, wl, dec, tick, params)
+    acted = (
+        jnp.any(dec.suspend)
+        | jnp.any(dec.reject)
+        | jnp.any(dec.assign_pipe >= 0)
+    )
+    return state, sched_state, acted
+
+
+def _next_event(state: SimState, wl: Workload, tick: jax.Array, acted) -> jax.Array:
+    """Earliest tick strictly after ``tick`` at which state can change."""
+    pending = state.pipe_status == int(PipeStatus.EMPTY)
+    arr = jnp.where(pending & (wl.arrival > tick), wl.arrival, INF_TICK)
+    next_arrival = jnp.min(arr)
+
+    running = state.ctr_status == int(ContainerStatus.RUNNING)
+    ends = jnp.where(running, jnp.minimum(state.ctr_end, state.ctr_oom), INF_TICK)
+    next_retire = jnp.min(ends)
+
+    suspended = state.pipe_status == int(PipeStatus.SUSPENDED)
+    rel = jnp.where(suspended, state.pipe_release, INF_TICK)
+    next_release = jnp.min(rel)
+
+    nxt = jnp.minimum(jnp.minimum(next_arrival, next_retire), next_release)
+    # if the scheduler acted, it may act again next tick (queue longer than
+    # one decision's capacity, freshly freed resources, ...)
+    nxt = jnp.where(acted, jnp.minimum(nxt, tick + 1), nxt)
+    return jnp.maximum(nxt, tick + 1)
+
+
+# ---------------------------------------------------------------------------
+# Engines.
+# ---------------------------------------------------------------------------
+def _run_tick_engine(params, wl, scheduler_fn, sched_state0):
+    horizon = params.horizon_ticks
+
+    def step(carry, tick):
+        state, sched_state = carry
+        state, sched_state, _ = _tick_body(
+            state, sched_state, wl, params, scheduler_fn, tick
+        )
+        state = executor.integrate(state, tick, tick + 1, params, exact_buckets=False)
+        return (state, sched_state), None
+
+    state0 = init_state(params)
+    (state, sched_state), _ = jax.lax.scan(
+        step,
+        (state0, sched_state0),
+        jnp.arange(horizon, dtype=jnp.int32),
+    )
+    state = state._replace(tick=jnp.asarray(horizon, jnp.int32))
+    return state, sched_state
+
+
+def _run_event_engine(params, wl, scheduler_fn, sched_state0):
+    horizon = jnp.int32(params.horizon_ticks)
+
+    def cond(carry):
+        state, _ = carry
+        return state.tick < horizon
+
+    def body(carry):
+        state, sched_state = carry
+        tick = state.tick
+        state, sched_state, acted = _tick_body(
+            state, sched_state, wl, params, scheduler_fn, tick
+        )
+        nxt = jnp.minimum(_next_event(state, wl, tick, acted), horizon)
+        state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
+        state = state._replace(tick=nxt)
+        return state, sched_state
+
+    state0 = init_state(params)
+    state, sched_state = jax.lax.while_loop(cond, body, (state0, sched_state0))
+    return state, sched_state
+
+
+@functools.partial(jax.jit, static_argnames=("params", "scheduler_key", "engine"))
+def _run_compiled(
+    params: SimParams,
+    wl: Workload,
+    scheduler_key: str,
+    engine: str,
+    sched_state0: Any,
+):
+    scheduler_fn = get_vector_scheduler(scheduler_key)
+    if engine == "tick":
+        return _run_tick_engine(params, wl, scheduler_fn, sched_state0)
+    if engine == "event":
+        return _run_event_engine(params, wl, scheduler_fn, sched_state0)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def run(
+    paramfile: str | dict | SimParams,
+    workload: Workload | None = None,
+    engine: str | None = None,
+) -> SimResult:
+    """Run one simulation; this is what ``eudoxia.run_simulator`` wraps."""
+    params = load_params(paramfile)
+    engine = engine or params.engine
+    wl = workload if workload is not None else get_workload(params)
+    if engine == "python":
+        from .engine_python import run_python_engine
+
+        return run_python_engine(params, wl)
+    sched_state0 = get_vector_scheduler_init(params.scheduling_algo)(params)
+    state, sched_state = _run_compiled(
+        params, wl, params.scheduling_algo, engine, sched_state0
+    )
+    return SimResult(state=state, workload=wl, params=params, sched_state=sched_state)
+
+
+__all__ = ["SimResult", "run", "_tick_body", "_next_event"]

@@ -1,0 +1,525 @@
+"""Reference Python engine — the paper's exact developer experience.
+
+This engine runs user schedulers with the paper's Listing-4 signature
+(``(sch, failures, new_pipelines) -> (suspends, assignments)``) on plain
+Python objects. It is event-driven but semantically identical to the
+compiled engines (the property suite checks builtin-for-builtin metric
+equality against the vector engines), and doubles as the readable
+executable specification of the simulator's semantics.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from .algorithm import (
+    get_python_scheduler,
+    get_python_scheduler_init,
+    register_scheduler,
+    register_scheduler_init,
+)
+from .params import SimParams
+from .state import INF_TICK, SimState, Workload, init_state
+from .types import (
+    Assignment,
+    ContainerStatus,
+    Failure,
+    Operator,
+    Pipeline,
+    PipeStatus,
+    Priority,
+    Suspension,
+    TICKS_PER_SECOND,
+)
+
+EPS = 1e-5
+
+
+class Container:
+    __slots__ = ("slot", "pipe", "pool", "cpus", "ram", "start", "end", "oom")
+
+    def __init__(self, slot, pipe, pool, cpus, ram, start, end, oom):
+        self.slot = slot
+        self.pipe = pipe
+        self.pool = pool
+        self.cpus = cpus
+        self.ram = ram
+        self.start = start
+        self.end = end
+        self.oom = oom
+
+
+class Scheduler:
+    """The object handed to user scheduler functions (paper Listing 4).
+
+    Exposes the queues and pool state a policy needs; ``self.data`` is
+    free storage for user state initialised by the init function.
+    """
+
+    def __init__(self, params: SimParams, pipelines: List[Pipeline]):
+        self.params = params
+        self.num_pools = params.num_pools
+        factor = params.cloud_scale_max_factor if params.cloud_scaling else 1.0
+        # all resource arithmetic is float32, bit-matching the compiled
+        # engines (engine-equivalence property tests rely on this)
+        f32 = np.float32
+        self.pool_cpu_cap = np.full(params.num_pools, params.pool_cpus * factor, f32)
+        self.pool_ram_cap = np.full(
+            params.num_pools, params.pool_ram_gb * factor, f32
+        )
+        self.pool_cpu_free = self.pool_cpu_cap.copy()
+        self.pool_ram_free = self.pool_ram_cap.copy()
+        self.pipelines = pipelines
+        self.status = {p.pid: PipeStatus.PENDING for p in pipelines}
+        self.entered = {p.pid: INF_TICK for p in pipelines}
+        self.running: dict[int, Container] = {}  # pid -> container
+        self.data: dict = {}
+
+    # -- queue views ------------------------------------------------------
+    def waiting_pids(self) -> list[int]:
+        """Waiting queue in scheduling order: priority desc, entry asc, pid."""
+        pids = [pid for pid, st in self.status.items() if st == PipeStatus.WAITING]
+        pids.sort(
+            key=lambda pid: (
+                -int(self.pipelines[pid].priority),
+                self.entered[pid],
+                pid,
+            )
+        )
+        return pids
+
+    def pipeline(self, pid: int) -> Pipeline:
+        return self.pipelines[pid]
+
+    @property
+    def total_cpus(self) -> np.float32:
+        return np.sum(self.pool_cpu_cap, dtype=np.float32)
+
+    @property
+    def total_ram_gb(self) -> np.float32:
+        return np.sum(self.pool_ram_cap, dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Container runtime model — numpy mirror of state.container_schedule (f32
+# math so the engines agree bit-for-bit on tick counts).
+# ---------------------------------------------------------------------------
+def container_schedule_py(pipe: Pipeline, cpus: float, ram: float):
+    f32 = np.float32
+    levels: dict[int, list[Operator]] = {}
+    for o in pipe.ops:
+        levels.setdefault(o.level, []).append(o)
+    duration = 0
+    oom_offset: Optional[int] = None
+    cum = f32(0.0)
+    for lvl in sorted(levels):
+        ops = levels[lvl]
+        width = f32(len(ops))
+        c_eff = max(f32(cpus) / max(width, f32(1.0)), f32(1e-6))
+        t_level = f32(0.0)
+        ram_level = f32(0.0)
+        for o in ops:
+            t_op = f32(o.base_ticks) / np.power(c_eff, f32(o.alpha), dtype=f32)
+            t_level = max(t_level, f32(t_op))
+            ram_level = f32(ram_level + f32(o.ram_gb))
+        t_level = f32(np.ceil(max(t_level, f32(1.0))))
+        if oom_offset is None and ram_level > f32(ram) + f32(1e-6):
+            oom_offset = max(int(cum), 1)
+        cum = f32(cum + t_level)
+        duration += int(t_level)
+    duration = max(duration, 1)
+    if oom_offset is not None:
+        oom_offset = min(oom_offset, duration)
+    return duration, oom_offset
+
+
+# ---------------------------------------------------------------------------
+# Built-in schedulers, paper-API edition (cross-validated vs. vector ones).
+# ---------------------------------------------------------------------------
+@register_scheduler_init(key="naive")
+def _naive_init(sch: Scheduler) -> None:
+    pass
+
+
+@register_scheduler(key="naive")
+def _naive(sch: Scheduler, failures: List[Failure], new: List[Pipeline]):
+    suspends: list[Suspension] = []
+    assignments: list[Assignment] = []
+    rejects = [
+        pid
+        for pid in sch.waiting_pids()
+        if sch.pipelines[pid].failed_before
+    ]
+    sch.data["rejects"] = rejects
+    if sch.running:
+        return suspends, assignments
+    for pid in sch.waiting_pids():
+        if pid in rejects:
+            continue
+        assignments.append(
+            Assignment(
+                pipeline=sch.pipelines[pid],
+                pool=0,
+                cpus=sch.pool_cpu_cap[0],
+                ram_gb=sch.pool_ram_cap[0],
+            )
+        )
+        break
+    return suspends, assignments
+
+
+def _priority_like_py(sch: Scheduler, multi_pool: bool):
+    params = sch.params
+    f32 = np.float32
+    K = params.max_assignments_per_tick
+    total_cpu = sch.total_cpus
+    total_ram = sch.total_ram_gb
+    chunk_cpu, chunk_ram = f32(0.10) * total_cpu, f32(0.10) * total_ram
+    cap_cpu, cap_ram = f32(0.50) * total_cpu, f32(0.50) * total_ram
+    eps = f32(EPS)
+
+    suspends: list[Suspension] = []
+    assignments: list[Assignment] = []
+    free_cpu = sch.pool_cpu_free.copy()
+    free_ram = sch.pool_ram_free.copy()
+    live = dict(sch.running)  # pid -> Container, shrinks as we preempt
+    rejects = [
+        pid
+        for pid in sch.waiting_pids()
+        if sch.pipelines[pid].failed_before
+        and f32(sch.pipelines[pid].last_ram_gb) >= cap_ram - eps
+    ]
+    sch.data["rejects"] = rejects
+    tried: set[int] = set(rejects)
+
+    for _ in range(K):
+        cands = [pid for pid in sch.waiting_pids() if pid not in tried]
+        if not cands:
+            break
+        pid = cands[0]
+        tried.add(pid)
+        p = sch.pipelines[pid]
+        if p.failed_before:
+            want_cpu = np.minimum(f32(2.0) * f32(p.last_cpus), cap_cpu)
+            want_ram = np.minimum(f32(2.0) * f32(p.last_ram_gb), cap_ram)
+        elif p.last_ram_gb > 0.0:
+            want_cpu, want_ram = f32(p.last_cpus), f32(p.last_ram_gb)
+        else:
+            want_cpu, want_ram = chunk_cpu, chunk_ram
+
+        if multi_pool:
+            score = free_cpu / np.maximum(sch.pool_cpu_cap, eps) + (
+                free_ram / np.maximum(sch.pool_ram_cap, eps)
+            )
+            pool = int(np.argmax(score))
+        else:
+            pool = 0
+        fits = free_cpu[pool] >= want_cpu - eps and free_ram[pool] >= want_ram - eps
+
+        if fits:
+            assignments.append(Assignment(p, pool, want_cpu, want_ram))
+            free_cpu[pool] -= want_cpu
+            free_ram[pool] -= want_ram
+            continue
+
+        # preemption path (high-priority arrivals only, paper §4.1.2)
+        if p.priority <= Priority.BATCH:
+            continue
+        victims = [
+            c
+            for c in live.values()
+            if int(sch.pipelines[c.pipe].priority) < int(p.priority)
+        ]
+        if not victims:
+            continue
+        victims.sort(
+            key=lambda c: (int(sch.pipelines[c.pipe].priority), -c.start, c.slot)
+        )
+        v = victims[0]
+        f_cpu2 = free_cpu.copy()
+        f_ram2 = free_ram.copy()
+        f_cpu2[v.pool] += f32(v.cpus)
+        f_ram2[v.pool] += f32(v.ram)
+        pool2 = v.pool if multi_pool else pool
+        if f_cpu2[pool2] >= want_cpu - eps and f_ram2[pool2] >= want_ram - eps:
+            suspends.append(Suspension(sch.pipelines[v.pipe]))
+            del live[v.pipe]
+            free_cpu, free_ram = f_cpu2, f_ram2
+            assignments.append(Assignment(p, pool2, want_cpu, want_ram))
+            free_cpu[pool2] -= want_cpu
+            free_ram[pool2] -= want_ram
+    return suspends, assignments
+
+
+@register_scheduler_init(key="priority")
+def _priority_init(sch: Scheduler) -> None:
+    pass
+
+
+@register_scheduler(key="priority")
+def _priority(sch: Scheduler, failures, new):
+    return _priority_like_py(sch, multi_pool=False)
+
+
+@register_scheduler_init(key="priority_pool")
+def _priority_pool_init(sch: Scheduler) -> None:
+    pass
+
+
+@register_scheduler(key="priority_pool")
+def _priority_pool(sch: Scheduler, failures, new):
+    return _priority_like_py(sch, multi_pool=True)
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+def pipelines_from_workload(wl: Workload) -> List[Pipeline]:
+    arrival = np.asarray(wl.arrival)
+    prio = np.asarray(wl.prio)
+    n_ops = np.asarray(wl.n_ops)
+    valid = np.asarray(wl.op_valid)
+    level = np.asarray(wl.op_level)
+    ram = np.asarray(wl.op_ram)
+    base = np.asarray(wl.op_base)
+    alpha = np.asarray(wl.op_alpha)
+    out = []
+    for i in range(arrival.shape[0]):
+        ops = [
+            Operator(
+                ram_gb=float(ram[i, j]),
+                base_ticks=float(base[i, j]),
+                alpha=float(alpha[i, j]),
+                level=int(level[i, j]),
+            )
+            for j in range(valid.shape[1])
+            if valid[i, j]
+        ]
+        out.append(
+            Pipeline(
+                pid=i,
+                priority=Priority(int(prio[i])),
+                arrival_tick=int(arrival[i]),
+                ops=ops,
+            )
+        )
+    return out
+
+
+def run_python_engine(params: SimParams, wl: Workload):
+    from .engine import SimResult
+
+    horizon = params.horizon_ticks
+    pipelines = pipelines_from_workload(wl)
+    sch = Scheduler(params, pipelines)
+    algo = get_python_scheduler(params.scheduling_algo)
+    get_python_scheduler_init(params.scheduling_algo)(sch)
+
+    MP = params.max_pipelines
+    MC = params.max_containers
+    NP = params.num_pools
+    free_slots = list(range(MC))
+    heapq.heapify(free_slots)
+    release: dict[int, int] = {}  # pid -> release tick
+    completion = np.full((MP,), INF_TICK, np.int64)
+    first_start = np.full((MP,), INF_TICK, np.int64)
+    fails = np.zeros((MP,), np.int64)
+    preempts = np.zeros((MP,), np.int64)
+    done_count = failed_count = oom_events = preempt_events = 0
+    util_cpu_s = np.zeros((NP,))
+    util_ram_s = np.zeros((NP,))
+    util_log = np.zeros((params.util_log_buckets, NP, 2))
+    cost = 0.0
+    sum_lat = 0.0
+    sum_lat_prio = np.zeros((3,))
+    done_prio = np.zeros((3,), np.int64)
+
+    arrivals_sorted = sorted(
+        (p.arrival_tick, p.pid) for p in pipelines if p.arrival_tick < horizon
+    )
+    arr_ix = 0
+
+    tick = 0
+    while tick < horizon:
+        # ---- arrivals -----------------------------------------------------
+        new_pipes: list[Pipeline] = []
+        while arr_ix < len(arrivals_sorted) and arrivals_sorted[arr_ix][0] <= tick:
+            _, pid = arrivals_sorted[arr_ix]
+            arr_ix += 1
+            sch.status[pid] = PipeStatus.WAITING
+            sch.entered[pid] = pipelines[pid].arrival_tick
+            new_pipes.append(pipelines[pid])
+        # ---- suspension releases -----------------------------------------
+        for pid in [p for p, r in release.items() if r <= tick]:
+            sch.status[pid] = PipeStatus.WAITING
+            sch.entered[pid] = release.pop(pid)
+        # ---- completions / OOMs -------------------------------------------
+        failures: list[Failure] = []
+        for pid, c in list(sch.running.items()):
+            fire_oom = c.oom is not None and c.oom <= tick
+            fire_end = c.end <= tick
+            if not (fire_oom or fire_end):
+                continue
+            sch.pool_cpu_free[c.pool] += c.cpus
+            sch.pool_ram_free[c.pool] += c.ram
+            heapq.heappush(free_slots, c.slot)
+            del sch.running[pid]
+            p = pipelines[pid]
+            if fire_oom:
+                sch.status[pid] = PipeStatus.WAITING
+                sch.entered[pid] = tick
+                p.failed_before = True
+                fails[pid] += 1
+                oom_events += 1
+                failures.append(Failure(p, tick, c.cpus, c.ram))
+            else:
+                sch.status[pid] = PipeStatus.DONE
+                completion[pid] = c.end
+                done_count += 1
+                lat = (c.end - p.arrival_tick) / TICKS_PER_SECOND
+                sum_lat += lat
+                sum_lat_prio[int(p.priority)] += lat
+                done_prio[int(p.priority)] += 1
+
+        # ---- scheduler ------------------------------------------------------
+        suspends, assignments = algo(sch, failures, new_pipes)
+        acted = bool(suspends or assignments or sch.data.get("rejects"))
+
+        # rejects (permanent failures back to the user)
+        for pid in sch.data.pop("rejects", []):
+            if sch.status[pid] == PipeStatus.WAITING:
+                sch.status[pid] = PipeStatus.FAILED
+                completion[pid] = tick
+                failed_count += 1
+
+        # suspensions
+        for s in suspends:
+            pid = s.pipeline.pid
+            c = sch.running.pop(pid, None)
+            if c is None:
+                continue
+            sch.pool_cpu_free[c.pool] += c.cpus
+            sch.pool_ram_free[c.pool] += c.ram
+            heapq.heappush(free_slots, c.slot)
+            sch.status[pid] = PipeStatus.SUSPENDED
+            release[pid] = tick + 1
+            preempts[pid] += 1
+            preempt_events += 1
+
+        # assignments
+        for a in assignments:
+            pid = a.pipeline.pid
+            if sch.status[pid] != PipeStatus.WAITING or not free_slots:
+                continue
+            slot = heapq.heappop(free_slots)
+            cpus, ram_gb = np.float32(a.cpus), np.float32(a.ram_gb)
+            dur, oom_off = container_schedule_py(a.pipeline, cpus, ram_gb)
+            c = Container(
+                slot,
+                pid,
+                a.pool,
+                cpus,
+                ram_gb,
+                tick,
+                tick + dur,
+                (tick + oom_off) if oom_off is not None else None,
+            )
+            sch.running[pid] = c
+            sch.status[pid] = PipeStatus.RUNNING
+            a.pipeline.last_cpus = a.cpus
+            a.pipeline.last_ram_gb = a.ram_gb
+            a.pipeline.failed_before = False
+            first_start[pid] = min(first_start[pid], tick)
+            sch.pool_cpu_free[a.pool] -= a.cpus
+            sch.pool_ram_free[a.pool] -= a.ram_gb
+
+        # ---- next event -----------------------------------------------------
+        nxt = horizon
+        if arr_ix < len(arrivals_sorted):
+            nxt = min(nxt, arrivals_sorted[arr_ix][0])
+        for c in sch.running.values():
+            nxt = min(nxt, c.end if c.oom is None else min(c.end, c.oom))
+        for r in release.values():
+            nxt = min(nxt, r)
+        if acted:
+            nxt = min(nxt, tick + 1)
+        nxt = max(nxt, tick + 1)
+        nxt = min(nxt, horizon)
+
+        # ---- integrate utilisation over [tick, nxt) -------------------------
+        dt_s = (nxt - tick) / TICKS_PER_SECOND
+        used_cpu = np.zeros((NP,))
+        used_ram = np.zeros((NP,))
+        for c in sch.running.values():
+            used_cpu[c.pool] += c.cpus
+            used_ram[c.pool] += c.ram
+        util_cpu_s += used_cpu * dt_s
+        util_ram_s += used_ram * dt_s
+        base_cpu = params.pool_cpus
+        over = np.maximum(used_cpu - base_cpu, 0.0)
+        cost += (
+            float(np.sum(np.minimum(used_cpu, base_cpu) + params.cloud_premium_factor * over))
+            * params.cloud_cost_per_cpu_second
+            * dt_s
+        )
+        B = params.util_log_buckets
+        edges = np.linspace(0.0, float(horizon), B + 1)
+        lo = np.maximum(edges[:-1], tick)
+        hi = np.minimum(edges[1:], nxt)
+        overlap_s = np.maximum(hi - lo, 0.0) / TICKS_PER_SECOND
+        util_log += overlap_s[:, None, None] * np.stack(
+            [used_cpu, used_ram], axis=-1
+        )[None, :, :]
+
+        tick = nxt
+
+    # ---- pack a SimState for uniform downstream consumption ----------------
+    import jax.numpy as jnp
+
+    st = init_state(params)
+    status_arr = np.full((MP,), int(PipeStatus.EMPTY), np.int32)
+    for pid, s in sch.status.items():
+        # not-yet-arrived pipelines are indistinguishable from empty slots
+        # in the SoA representation — normalise for engine equivalence
+        status_arr[pid] = int(PipeStatus.EMPTY if s == PipeStatus.PENDING else s)
+    st = st._replace(
+        tick=jnp.asarray(horizon, jnp.int32),
+        pipe_status=jnp.asarray(status_arr),
+        pipe_completion=jnp.asarray(
+            np.minimum(completion, INF_TICK).astype(np.int32)
+        ),
+        pipe_first_start=jnp.asarray(
+            np.minimum(first_start, INF_TICK).astype(np.int32)
+        ),
+        pipe_fails=jnp.asarray(fails.astype(np.int32)),
+        pipe_preempts=jnp.asarray(preempts.astype(np.int32)),
+        pipe_fail_flag=jnp.asarray(
+            np.array([pipelines[i].failed_before for i in range(MP)])
+        ),
+        pool_cpu_free=jnp.asarray(np.array(sch.pool_cpu_free, np.float32)),
+        pool_ram_free=jnp.asarray(np.array(sch.pool_ram_free, np.float32)),
+        done_count=jnp.asarray(done_count, jnp.int32),
+        failed_count=jnp.asarray(failed_count, jnp.int32),
+        oom_events=jnp.asarray(oom_events, jnp.int32),
+        preempt_events=jnp.asarray(preempt_events, jnp.int32),
+        sum_latency_s=jnp.asarray(sum_lat, jnp.float32),
+        sum_latency_s_prio=jnp.asarray(sum_lat_prio.astype(np.float32)),
+        done_prio=jnp.asarray(done_prio.astype(np.int32)),
+        util_cpu_s=jnp.asarray(util_cpu_s.astype(np.float32)),
+        util_ram_s=jnp.asarray(util_ram_s.astype(np.float32)),
+        cost_dollars=jnp.asarray(cost, jnp.float32),
+        util_log=jnp.asarray(util_log.astype(np.float32)),
+    )
+    return SimResult(state=st, workload=wl, params=params, sched_state=sch)
+
+
+__all__ = [
+    "Scheduler",
+    "Container",
+    "container_schedule_py",
+    "pipelines_from_workload",
+    "run_python_engine",
+]

@@ -1,0 +1,275 @@
+"""Executor (paper §3.2.2): manager of the simulated physical resources.
+
+Pure-JAX transition functions shared by the tick engine and the
+event-skip engine. Order inside one tick:
+
+    arrivals -> suspension releases -> completions/OOMs ->
+    scheduler -> apply (suspend, reject, assign) -> integrate utilisation
+
+Containers compute their completion tick and (if the RAM allocation is
+insufficient) their OOM tick *at creation time*, exactly as §3.2.2
+describes, via :func:`repro.core.state.container_schedule`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import SimParams
+from .scheduler import SchedDecision
+from .state import (
+    INF_TICK,
+    SimState,
+    Workload,
+    container_schedule,
+    used_resources,
+)
+from .types import ContainerStatus, PipeStatus, TICKS_PER_SECOND
+
+
+def process_arrivals(state: SimState, wl: Workload, tick: jax.Array) -> SimState:
+    """PENDING/EMPTY slots whose arrival tick has come join the queue."""
+    fresh = (state.pipe_status == int(PipeStatus.EMPTY)) & (wl.arrival <= tick)
+    return state._replace(
+        pipe_status=jnp.where(
+            fresh, int(PipeStatus.WAITING), state.pipe_status
+        ),
+        pipe_entered=jnp.where(fresh, wl.arrival, state.pipe_entered),
+    )
+
+
+def process_releases(state: SimState, tick: jax.Array) -> SimState:
+    """Suspended pipelines re-enter the waiting queue after their 1-tick
+    stay in the suspending queue (paper §4.1.3 (1))."""
+    rel = (state.pipe_status == int(PipeStatus.SUSPENDED)) & (
+        state.pipe_release <= tick
+    )
+    return state._replace(
+        pipe_status=jnp.where(rel, int(PipeStatus.WAITING), state.pipe_status),
+        pipe_entered=jnp.where(rel, state.pipe_release, state.pipe_entered),
+        pipe_release=jnp.where(rel, INF_TICK, state.pipe_release),
+    )
+
+
+def process_completions(
+    state: SimState, wl: Workload, tick: jax.Array
+) -> SimState:
+    """Retire containers whose OOM or completion tick has arrived."""
+    running = state.ctr_status == int(ContainerStatus.RUNNING)
+    oomed = running & (state.ctr_oom <= tick)
+    done = running & ~oomed & (state.ctr_end <= tick)
+    retired = oomed | done
+
+    # ---- free pool resources ------------------------------------------------
+    NP = state.pool_cpu_cap.shape[0]
+    pool_oh = (
+        state.ctr_pool[None, :] == jnp.arange(NP, dtype=jnp.int32)[:, None]
+    ) & retired[None, :]
+    freed_cpu = jnp.sum(jnp.where(pool_oh, state.ctr_cpus[None, :], 0.0), axis=1)
+    freed_ram = jnp.sum(jnp.where(pool_oh, state.ctr_ram[None, :], 0.0), axis=1)
+
+    # ---- per-pipeline effects (scatter via segment-sum over containers) ----
+    MP = state.pipe_status.shape[0]
+    pid = jnp.where(retired, state.ctr_pipe, MP)  # out-of-range = dropped
+    oom_hit = (
+        jnp.zeros((MP,), jnp.int32)
+        .at[pid]
+        .add(oomed.astype(jnp.int32), mode="drop")
+    ) > 0
+    done_hit = (
+        jnp.zeros((MP,), jnp.int32)
+        .at[pid]
+        .add(done.astype(jnp.int32), mode="drop")
+    ) > 0
+    end_of = (
+        jnp.full((MP,), 0, jnp.int32)
+        .at[pid]
+        .max(jnp.where(done, state.ctr_end, 0), mode="drop")
+    )
+
+    lat_s = (end_of - wl.arrival).astype(jnp.float32) / TICKS_PER_SECOND
+    lat_s = jnp.where(done_hit, lat_s, 0.0)
+    prio_oh = (
+        wl.prio[None, :] == jnp.arange(3, dtype=jnp.int32)[:, None]
+    )  # [3, MP]
+
+    state = state._replace(
+        pipe_status=jnp.where(
+            oom_hit,
+            int(PipeStatus.WAITING),
+            jnp.where(done_hit, int(PipeStatus.DONE), state.pipe_status),
+        ),
+        pipe_entered=jnp.where(oom_hit, tick, state.pipe_entered),
+        pipe_fail_flag=state.pipe_fail_flag | oom_hit,
+        pipe_fails=state.pipe_fails + oom_hit.astype(jnp.int32),
+        pipe_completion=jnp.where(done_hit, end_of, state.pipe_completion),
+        ctr_status=jnp.where(
+            retired, int(ContainerStatus.EMPTY), state.ctr_status
+        ),
+        ctr_pipe=jnp.where(retired, -1, state.ctr_pipe),
+        ctr_end=jnp.where(retired, INF_TICK, state.ctr_end),
+        ctr_oom=jnp.where(retired, INF_TICK, state.ctr_oom),
+        ctr_start=jnp.where(retired, INF_TICK, state.ctr_start),
+        ctr_prio=jnp.where(retired, -1, state.ctr_prio),
+        pool_cpu_free=state.pool_cpu_free + freed_cpu,
+        pool_ram_free=state.pool_ram_free + freed_ram,
+        done_count=state.done_count + jnp.sum(done_hit).astype(jnp.int32),
+        oom_events=state.oom_events + jnp.sum(oom_hit).astype(jnp.int32),
+        sum_latency_s=state.sum_latency_s + jnp.sum(lat_s),
+        sum_latency_s_prio=state.sum_latency_s_prio
+        + jnp.sum(jnp.where(prio_oh, lat_s[None, :], 0.0), axis=1),
+        done_prio=state.done_prio
+        + jnp.sum(prio_oh & done_hit[None, :], axis=1).astype(jnp.int32),
+    )
+    return state
+
+
+def apply_decision(
+    state: SimState,
+    wl: Workload,
+    dec: SchedDecision,
+    tick: jax.Array,
+    params: SimParams,
+) -> SimState:
+    # ---- 1. suspensions (preemptions) --------------------------------------
+    susp = dec.suspend & (state.ctr_status == int(ContainerStatus.RUNNING))
+    NP = params.num_pools
+    pool_oh = (
+        state.ctr_pool[None, :] == jnp.arange(NP, dtype=jnp.int32)[:, None]
+    ) & susp[None, :]
+    freed_cpu = jnp.sum(jnp.where(pool_oh, state.ctr_cpus[None, :], 0.0), axis=1)
+    freed_ram = jnp.sum(jnp.where(pool_oh, state.ctr_ram[None, :], 0.0), axis=1)
+    MP = params.max_pipelines
+    pid = jnp.where(susp, state.ctr_pipe, MP)
+    susp_hit = (
+        jnp.zeros((MP,), jnp.int32).at[pid].add(susp.astype(jnp.int32), mode="drop")
+    ) > 0
+
+    state = state._replace(
+        pipe_status=jnp.where(
+            susp_hit, int(PipeStatus.SUSPENDED), state.pipe_status
+        ),
+        pipe_release=jnp.where(susp_hit, tick + 1, state.pipe_release),
+        pipe_preempts=state.pipe_preempts + susp_hit.astype(jnp.int32),
+        ctr_status=jnp.where(susp, int(ContainerStatus.EMPTY), state.ctr_status),
+        ctr_pipe=jnp.where(susp, -1, state.ctr_pipe),
+        ctr_end=jnp.where(susp, INF_TICK, state.ctr_end),
+        ctr_oom=jnp.where(susp, INF_TICK, state.ctr_oom),
+        ctr_start=jnp.where(susp, INF_TICK, state.ctr_start),
+        ctr_prio=jnp.where(susp, -1, state.ctr_prio),
+        pool_cpu_free=state.pool_cpu_free + freed_cpu,
+        pool_ram_free=state.pool_ram_free + freed_ram,
+        preempt_events=state.preempt_events + jnp.sum(susp).astype(jnp.int32),
+    )
+
+    # ---- 2. rejections (failures returned to the user) ---------------------
+    rej = dec.reject & (state.pipe_status == int(PipeStatus.WAITING))
+    state = state._replace(
+        pipe_status=jnp.where(rej, int(PipeStatus.FAILED), state.pipe_status),
+        pipe_completion=jnp.where(rej, tick, state.pipe_completion),
+        failed_count=state.failed_count + jnp.sum(rej).astype(jnp.int32),
+    )
+
+    # ---- 3. assignments ------------------------------------------------------
+    def assign_one(k, st: SimState) -> SimState:
+        pipe = dec.assign_pipe[k]
+        valid = pipe >= 0
+        pipe_c = jnp.maximum(pipe, 0)
+        # only assign pipelines still waiting (belt & braces vs. stale dec)
+        valid = valid & (st.pipe_status[pipe_c] == int(PipeStatus.WAITING))
+        empty = st.ctr_status == int(ContainerStatus.EMPTY)
+        has_slot = jnp.any(empty)
+        slot = jnp.argmax(empty).astype(jnp.int32)
+        valid = valid & has_slot
+        pool = dec.assign_pool[k]
+        cpus = dec.assign_cpus[k]
+        ram = dec.assign_ram[k]
+        dur, oom_off = container_schedule(wl, pipe_c, cpus, ram)
+        end = tick + dur
+        oom = jnp.where(
+            oom_off == INF_TICK, INF_TICK, tick + jnp.minimum(oom_off, dur)
+        )
+
+        def commit(st: SimState) -> SimState:
+            return st._replace(
+                pipe_status=st.pipe_status.at[pipe_c].set(int(PipeStatus.RUNNING)),
+                pipe_last_cpus=st.pipe_last_cpus.at[pipe_c].set(cpus),
+                pipe_last_ram=st.pipe_last_ram.at[pipe_c].set(ram),
+                pipe_fail_flag=st.pipe_fail_flag.at[pipe_c].set(False),
+                pipe_first_start=st.pipe_first_start.at[pipe_c].min(tick),
+                ctr_status=st.ctr_status.at[slot].set(int(ContainerStatus.RUNNING)),
+                ctr_pipe=st.ctr_pipe.at[slot].set(pipe_c),
+                ctr_pool=st.ctr_pool.at[slot].set(pool),
+                ctr_cpus=st.ctr_cpus.at[slot].set(cpus),
+                ctr_ram=st.ctr_ram.at[slot].set(ram),
+                ctr_start=st.ctr_start.at[slot].set(tick),
+                ctr_end=st.ctr_end.at[slot].set(end),
+                ctr_oom=st.ctr_oom.at[slot].set(oom),
+                ctr_prio=st.ctr_prio.at[slot].set(wl.prio[pipe_c]),
+                pool_cpu_free=st.pool_cpu_free.at[pool].add(-cpus),
+                pool_ram_free=st.pool_ram_free.at[pool].add(-ram),
+            )
+
+        return jax.lax.cond(valid, commit, lambda s: s, st)
+
+    state = jax.lax.fori_loop(
+        0, params.max_assignments_per_tick, assign_one, state
+    )
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Utilisation / cost integration over [t0, t1).
+# ---------------------------------------------------------------------------
+def integrate(
+    state: SimState,
+    t0: jax.Array,
+    t1: jax.Array,
+    params: SimParams,
+    exact_buckets: bool,
+) -> SimState:
+    dt_s = (t1 - t0).astype(jnp.float32) / TICKS_PER_SECOND
+    used_cpu, used_ram = used_resources(state)
+
+    # cost model: base-rate for capacity within the un-scaled pool, premium
+    # rate for cloud-scaled overflow (paper §3.2.2 "additional monetary cost")
+    base_cpu = jnp.full_like(used_cpu, params.pool_cpus)
+    over = jnp.maximum(used_cpu - base_cpu, 0.0)
+    base_used = jnp.minimum(used_cpu, base_cpu)
+    rate = params.cloud_cost_per_cpu_second
+    cost = jnp.sum(base_used + params.cloud_premium_factor * over) * rate * dt_s
+
+    B = params.util_log_buckets
+    horizon = max(params.horizon_ticks, 1)
+    if exact_buckets:
+        # exact overlap of [t0, t1) with every bucket (event engine)
+        edges = jnp.linspace(0.0, float(horizon), B + 1)
+        lo = jnp.maximum(edges[:-1], t0.astype(jnp.float32))
+        hi = jnp.minimum(edges[1:], t1.astype(jnp.float32))
+        overlap_s = jnp.maximum(hi - lo, 0.0) / TICKS_PER_SECOND  # [B]
+        add = overlap_s[:, None, None] * jnp.stack(
+            [used_cpu, used_ram], axis=-1
+        )[None, :, :]
+        util_log = state.util_log + add
+    else:
+        # tick engine: the whole tick lands in one bucket (scatter-add)
+        b = jnp.clip(t0 * B // horizon, 0, B - 1)
+        util_log = state.util_log.at[b].add(
+            dt_s * jnp.stack([used_cpu, used_ram], axis=-1)
+        )
+
+    return state._replace(
+        util_cpu_s=state.util_cpu_s + used_cpu * dt_s,
+        util_ram_s=state.util_ram_s + used_ram * dt_s,
+        cost_dollars=state.cost_dollars + cost,
+        util_log=util_log,
+    )
+
+
+__all__ = [
+    "process_arrivals",
+    "process_releases",
+    "process_completions",
+    "apply_decision",
+    "integrate",
+]

@@ -1,0 +1,153 @@
+"""Beyond-paper built-in schedulers, registered in BOTH worlds (vector
+for the compiled engines, Python for the reference engine) — the
+extension path the paper's registry design enables.
+
+* **sjf** — smallest-job-first: order the waiting queue by op count
+  (fewest first), then priority, then arrival. Classic mean-latency
+  optimiser; the custom-scheduler example showed a user-space version,
+  this is the production twin with OOM-retry doubling and 25 % chunks.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+from .algorithm import register_scheduler, register_scheduler_init
+from .engine_python import Scheduler
+from .params import SimParams
+from .scheduler import (
+    EPS,
+    SchedDecision,
+    empty_decision,
+    register_vector_scheduler,
+)
+from .state import INF_TICK, SimState, Workload
+from .types import Failure, Pipeline, PipeStatus, Suspension
+
+CHUNK = 0.25
+CAP = 0.50
+
+
+def _select_sjf(mask, n_ops, prio, entered):
+    """Fewest ops, then highest priority, then earliest entry, then pid."""
+    any_ = jnp.any(mask)
+    n = jnp.where(mask, n_ops, jnp.int32(2**30))
+    m1 = mask & (n_ops == jnp.min(n))
+    p = jnp.where(m1, prio, -1)
+    m2 = m1 & (prio == jnp.max(p))
+    e = jnp.where(m2, entered, INF_TICK)
+    m3 = m2 & (entered == jnp.min(e))
+    idx = jnp.argmax(m3).astype(jnp.int32)
+    return jnp.where(any_, idx, -1)
+
+
+@register_vector_scheduler("sjf")
+def sjf_vector(sched_state: Any, sim: SimState, wl: Workload, params: SimParams):
+    K = params.max_assignments_per_tick
+    total_cpu = jnp.sum(sim.pool_cpu_cap)
+    total_ram = jnp.sum(sim.pool_ram_cap)
+    chunk_cpu, chunk_ram = CHUNK * total_cpu, CHUNK * total_ram
+    cap_cpu, cap_ram = CAP * total_cpu, CAP * total_ram
+
+    dec = empty_decision(params)
+    waiting0 = sim.pipe_status == int(PipeStatus.WAITING)
+    reject = waiting0 & sim.pipe_fail_flag & (sim.pipe_last_ram >= cap_ram - EPS)
+    dec = dec._replace(reject=reject)
+
+    def body(k, carry):
+        dec, free_cpu, free_ram, tried = carry
+        mask = waiting0 & ~reject & ~tried
+        pipe = _select_sjf(mask, wl.n_ops, wl.prio, sim.pipe_entered)
+        valid = pipe >= 0
+        pipe_c = jnp.maximum(pipe, 0)
+        failed = sim.pipe_fail_flag[pipe_c]
+        seen = sim.pipe_last_ram[pipe_c] > 0.0
+        want_cpu = jnp.where(
+            failed, jnp.minimum(2.0 * sim.pipe_last_cpus[pipe_c], cap_cpu),
+            jnp.where(seen, sim.pipe_last_cpus[pipe_c], chunk_cpu))
+        want_ram = jnp.where(
+            failed, jnp.minimum(2.0 * sim.pipe_last_ram[pipe_c], cap_ram),
+            jnp.where(seen, sim.pipe_last_ram[pipe_c], chunk_ram))
+        fits = (free_cpu[0] >= want_cpu - EPS) & (free_ram[0] >= want_ram - EPS)
+        do = valid & fits
+        dec = dec._replace(
+            assign_pipe=dec.assign_pipe.at[k].set(jnp.where(do, pipe_c, -1)),
+            assign_pool=dec.assign_pool.at[k].set(0),
+            assign_cpus=dec.assign_cpus.at[k].set(want_cpu),
+            assign_ram=dec.assign_ram.at[k].set(want_ram),
+        )
+        free_cpu = jnp.where(do, free_cpu.at[0].add(-want_cpu), free_cpu)
+        free_ram = jnp.where(do, free_ram.at[0].add(-want_ram), free_ram)
+        tried = jnp.where(valid, tried.at[pipe_c].set(True), tried)
+        return dec, free_cpu, free_ram, tried
+
+    tried0 = jnp.zeros((params.max_pipelines,), bool)
+    dec, *_ = jax.lax.fori_loop(
+        0, K, body, (dec, sim.pool_cpu_free, sim.pool_ram_free, tried0)
+    )
+    return sched_state, dec
+
+
+@register_scheduler_init(key="sjf")
+def _sjf_init(sch: Scheduler) -> None:
+    pass
+
+
+@register_scheduler(key="sjf")
+def sjf_python(sch: Scheduler, failures: List[Failure], new: List[Pipeline]):
+    import numpy as np
+
+    f32 = np.float32
+    total_cpu, total_ram = sch.total_cpus, sch.total_ram_gb
+    chunk_cpu, chunk_ram = f32(CHUNK) * total_cpu, f32(CHUNK) * total_ram
+    cap_cpu, cap_ram = f32(CAP) * total_cpu, f32(CAP) * total_ram
+    eps = f32(EPS)
+
+    suspends: list[Suspension] = []
+    assignments = []
+    free_cpu = sch.pool_cpu_free.copy()
+    free_ram = sch.pool_ram_free.copy()
+    rejects = [
+        pid for pid in sch.waiting_pids()
+        if sch.pipelines[pid].failed_before
+        and f32(sch.pipelines[pid].last_ram_gb) >= cap_ram - eps
+    ]
+    sch.data["rejects"] = rejects
+    tried = set(rejects)
+    for _ in range(sch.params.max_assignments_per_tick):
+        cands = [
+            pid for pid in sch.status
+            if sch.status[pid] == PipeStatus.WAITING and pid not in tried
+        ]
+        if not cands:
+            break
+        pid = min(
+            cands,
+            key=lambda pid: (
+                sch.pipelines[pid].num_ops,
+                -int(sch.pipelines[pid].priority),
+                sch.entered[pid],
+                pid,
+            ),
+        )
+        tried.add(pid)
+        p = sch.pipelines[pid]
+        if p.failed_before:
+            want_cpu = np.minimum(f32(2.0) * f32(p.last_cpus), cap_cpu)
+            want_ram = np.minimum(f32(2.0) * f32(p.last_ram_gb), cap_ram)
+        elif p.last_ram_gb > 0.0:
+            want_cpu, want_ram = f32(p.last_cpus), f32(p.last_ram_gb)
+        else:
+            want_cpu, want_ram = chunk_cpu, chunk_ram
+        if free_cpu[0] >= want_cpu - eps and free_ram[0] >= want_ram - eps:
+            from .types import Assignment
+
+            assignments.append(Assignment(p, 0, want_cpu, want_ram))
+            free_cpu[0] -= want_cpu
+            free_ram[0] -= want_ram
+    return suspends, assignments
+
+
+__all__ = ["sjf_vector", "sjf_python"]

@@ -1,0 +1,81 @@
+"""Derived metrics ("execution statistics" consumed by visualisers and
+downstream applications, paper Fig. 2)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .params import SimParams
+from .state import INF_TICK, SimState, Workload
+from .types import PipeStatus, Priority, TICKS_PER_SECOND
+
+
+def summarize(state: SimState, wl: Workload, params: SimParams) -> dict:
+    status = np.asarray(state.pipe_status)
+    arrival = np.asarray(wl.arrival)
+    completion = np.asarray(state.pipe_completion)
+    prio = np.asarray(wl.prio)
+
+    submitted = int(np.sum(arrival < INF_TICK))
+    done = status == int(PipeStatus.DONE)
+    failed = status == int(PipeStatus.FAILED)
+    lat_ticks = np.where(done, completion - arrival, 0)
+    lat_s = lat_ticks[done] / TICKS_PER_SECOND
+
+    per_prio = {}
+    for p in Priority:
+        sel = done & (prio == int(p))
+        per_prio[p.name.lower()] = {
+            "done": int(np.sum(sel)),
+            "submitted": int(np.sum((arrival < INF_TICK) & (prio == int(p)))),
+            "mean_latency_s": float(
+                np.mean((completion - arrival)[sel] / TICKS_PER_SECOND)
+            )
+            if np.any(sel)
+            else float("nan"),
+        }
+
+    dur_s = params.duration
+    cap_cpu_s = float(np.sum(np.asarray(state.pool_cpu_cap))) * dur_s
+    cap_ram_s = float(np.sum(np.asarray(state.pool_ram_cap))) * dur_s
+    util_cpu = float(np.sum(np.asarray(state.util_cpu_s)))
+    util_ram = float(np.sum(np.asarray(state.util_ram_s)))
+
+    return {
+        "submitted": submitted,
+        "done": int(np.sum(done)),
+        "failed": int(np.sum(failed)),
+        "in_flight": int(
+            np.sum(
+                (arrival < INF_TICK)
+                & ~done
+                & ~failed
+                & (status != int(PipeStatus.EMPTY))
+            )
+        ),
+        "throughput_per_s": float(np.sum(done)) / dur_s,
+        "mean_latency_s": float(np.mean(lat_s)) if lat_s.size else float("nan"),
+        "p50_latency_s": float(np.percentile(lat_s, 50)) if lat_s.size else float("nan"),
+        "p99_latency_s": float(np.percentile(lat_s, 99)) if lat_s.size else float("nan"),
+        "oom_events": int(state.oom_events),
+        "preempt_events": int(state.preempt_events),
+        "cpu_utilization": util_cpu / cap_cpu_s if cap_cpu_s else 0.0,
+        "ram_utilization": util_ram / cap_ram_s if cap_ram_s else 0.0,
+        "cost_dollars": float(state.cost_dollars),
+        "per_priority": per_prio,
+    }
+
+
+def completion_table(state: SimState, wl: Workload) -> np.ndarray:
+    """[MP, 4] array: (arrival, completion, status, priority) for analysis."""
+    return np.stack(
+        [
+            np.asarray(wl.arrival),
+            np.asarray(state.pipe_completion),
+            np.asarray(state.pipe_status),
+            np.asarray(wl.prio),
+        ],
+        axis=1,
+    )
+
+
+__all__ = ["summarize", "completion_table"]

@@ -1,0 +1,116 @@
+"""Simulation parameters + TOML loading (paper §4.1.1).
+
+The paper configures Eudoxia through a TOML file with ``parameter = value``
+lines; the most important knobs called out in §4.1.1 are ``duration``,
+``waiting_ticks_mean``, ``num_pools`` and ``scheduling_algo``. We keep
+those names verbatim (case-insensitive on load) and add the distribution
+parameters §3.2.1 alludes to ("a wide range of parameters ... how many
+resources pipelines require, how long pipelines will take ...").
+
+Every stochastic quantity is drawn from a distribution *centred at a
+user-provided (or default) parameter* — exactly the paper's phrasing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import tomllib
+from typing import Any
+
+from .types import TICKS_PER_SECOND
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    # ---- paper-named core knobs (§4.1.1) ----------------------------------
+    duration: float = 1.0              # simulated SECONDS
+    waiting_ticks_mean: float = 5_000  # mean ticks between pipeline arrivals
+    num_pools: int = 1
+    scheduling_algo: str = "priority"
+
+    # ---- resources (executor, §3.2.2) --------------------------------------
+    total_cpus: float = 16.0           # summed over all pools
+    total_ram_gb: float = 32.0         # summed over all pools
+    cloud_scaling: bool = False        # may more resources be bought?
+    cloud_scale_max_factor: float = 2.0
+    cloud_cost_per_cpu_second: float = 0.000011  # ~c5ad.4xlarge $/vCPU-s
+    cloud_premium_factor: float = 1.5  # premium on scaled resources
+
+    # ---- workload generator (§3.2.1) ---------------------------------------
+    seed: int = 0
+    max_pipelines: int = 256           # capacity of the arrival table
+    max_ops_per_pipeline: int = 8
+    mean_ops_per_pipeline: float = 3.0
+    chain_prob: float = 0.65           # P(op starts a new DAG level)
+    op_ram_gb_mean: float = 2.0        # lognormal centre
+    op_ram_gb_sigma: float = 0.6
+    op_base_seconds_mean: float = 0.5  # lognormal centre of 1-CPU runtime
+    op_base_seconds_sigma: float = 0.8
+    # CPU scaling exponents and their probabilities: IO-bound ops do not
+    # scale (alpha=0), some scale sub-linearly, stateless ops ~linearly.
+    alpha_choices: tuple[float, ...] = (0.0, 0.5, 1.0)
+    alpha_probs: tuple[float, ...] = (0.25, 0.35, 0.40)
+    # priority mix: (BATCH, QUERY, INTERACTIVE)
+    priority_probs: tuple[float, ...] = (0.6, 0.25, 0.15)
+    # interactive queries are typically much shorter / smaller:
+    interactive_scale: float = 0.15
+    query_scale: float = 0.5
+
+    # ---- engine -------------------------------------------------------------
+    engine: str = "event"              # "tick" | "event" | "python"
+    max_containers: int = 64
+    max_assignments_per_tick: int = 16
+    util_log_buckets: int = 512        # downsampled utilisation log length
+    trace_path: str = ""               # optional: replay a trace instead
+
+    # -------------------------------------------------------------------------
+    @property
+    def horizon_ticks(self) -> int:
+        return int(round(self.duration * TICKS_PER_SECOND))
+
+    @property
+    def pool_cpus(self) -> float:
+        return self.total_cpus / self.num_pools
+
+    @property
+    def pool_ram_gb(self) -> float:
+        return self.total_ram_gb / self.num_pools
+
+    def replace(self, **kw: Any) -> "SimParams":
+        return dataclasses.replace(self, **kw)
+
+    # -------------------------------------------------------------------------
+    @staticmethod
+    def from_toml(path: str | pathlib.Path) -> "SimParams":
+        raw = tomllib.loads(pathlib.Path(path).read_text())
+        return SimParams.from_dict(raw)
+
+    @staticmethod
+    def from_dict(raw: dict[str, Any]) -> "SimParams":
+        fields = {f.name: f for f in dataclasses.fields(SimParams)}
+        kw: dict[str, Any] = {}
+        for key, value in raw.items():
+            k = key.lower()
+            if k not in fields:
+                raise KeyError(
+                    f"unknown Eudoxia parameter {key!r}; "
+                    f"known: {sorted(fields)}"
+                )
+            ftype = fields[k].type
+            if isinstance(value, list):
+                value = tuple(value)
+            if ftype in ("float", float) and isinstance(value, int):
+                value = float(value)
+            kw[k] = value
+        return SimParams(**kw)
+
+
+def load_params(paramfile: str | pathlib.Path | dict | SimParams) -> SimParams:
+    if isinstance(paramfile, SimParams):
+        return paramfile
+    if isinstance(paramfile, dict):
+        return SimParams.from_dict(paramfile)
+    return SimParams.from_toml(paramfile)
+
+
+__all__ = ["SimParams", "load_params"]

@@ -1,0 +1,317 @@
+"""Schedulers (paper §3.2.3, §4.1.2).
+
+A scheduler "accept[s] a set of Pipelines from the workload generator,
+and output[s] a list of new Container allocations and Container
+preemptions to the Executor". In the compiled engines this is a pure
+function over the struct-of-arrays state:
+
+    fn(sched_state, sim: SimState, wl: Workload, params) ->
+        (sched_state, SchedDecision)
+
+``SchedDecision`` carries fixed-capacity arrays (suspension mask over
+containers, rejection mask over pipelines, up to K new assignments).
+
+Three built-ins mirror §4.1.2:
+
+* ``naive``          — one pool; all resources to the head of the queue.
+* ``priority``       — 10 % chunks, OOM-retry doubling capped at 50 %,
+                       preemption of lower-priority containers.
+* ``priority_pool``  — ditto, but allocates on the pool with the most
+                       available resources.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import SimParams
+from .state import INF_TICK, SimState, Workload
+from .types import ContainerStatus, PipeStatus, Priority
+
+EPS = 1e-5
+
+
+class SchedDecision(NamedTuple):
+    suspend: jax.Array      # [MC] bool — containers to preempt
+    reject: jax.Array       # [MP] bool — pipelines failed back to the user
+    assign_pipe: jax.Array  # [K] int32 (-1 = unused slot)
+    assign_pool: jax.Array  # [K] int32
+    assign_cpus: jax.Array  # [K] f32
+    assign_ram: jax.Array   # [K] f32
+
+
+def empty_decision(params: SimParams) -> SchedDecision:
+    K = params.max_assignments_per_tick
+    return SchedDecision(
+        suspend=jnp.zeros((params.max_containers,), bool),
+        reject=jnp.zeros((params.max_pipelines,), bool),
+        assign_pipe=jnp.full((K,), -1, jnp.int32),
+        assign_pool=jnp.zeros((K,), jnp.int32),
+        assign_cpus=jnp.zeros((K,), jnp.float32),
+        assign_ram=jnp.zeros((K,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Masked selection helpers (queue semantics without materialised queues):
+# waiting order = priority desc, then (re-)entry tick asc, then pid asc.
+# ---------------------------------------------------------------------------
+def select_next_pipe(mask: jax.Array, prio: jax.Array, entered: jax.Array):
+    any_ = jnp.any(mask)
+    p = jnp.where(mask, prio, -1)
+    m2 = mask & (prio == jnp.max(p))
+    e = jnp.where(m2, entered, INF_TICK)
+    m3 = m2 & (entered == jnp.min(e))
+    idx = jnp.argmax(m3).astype(jnp.int32)
+    return jnp.where(any_, idx, -1)
+
+
+def select_victim(
+    live: jax.Array, ctr_prio: jax.Array, ctr_start: jax.Array, below_prio: jax.Array
+):
+    """Preemption victim: lowest priority, then latest start (least progress
+    lost). ``below_prio`` is the exclusive priority upper bound."""
+    m = live & (ctr_prio < below_prio)
+    any_ = jnp.any(m)
+    p = jnp.where(m, ctr_prio, jnp.int32(2**30))
+    m2 = m & (ctr_prio == jnp.min(p))
+    s = jnp.where(m2, ctr_start, -1)
+    m3 = m2 & (ctr_start == jnp.max(s))
+    idx = jnp.argmax(m3).astype(jnp.int32)
+    return jnp.where(any_, idx, -1)
+
+
+# ---------------------------------------------------------------------------
+# NAIVE (paper §4.1.2): single pool, everything to the queue head, no
+# concurrency, no preemption. A pipeline that OOMed with all resources can
+# never succeed -> permanent failure.
+# ---------------------------------------------------------------------------
+def naive_scheduler(
+    sched_state: Any, sim: SimState, wl: Workload, params: SimParams
+):
+    dec = empty_decision(params)
+    waiting = sim.pipe_status == int(PipeStatus.WAITING)
+    # fail-back: it already had every resource, doubling is impossible
+    reject = waiting & sim.pipe_fail_flag
+    waiting = waiting & ~reject
+
+    idle = ~jnp.any(sim.ctr_status == int(ContainerStatus.RUNNING))
+    pipe = select_next_pipe(waiting, wl.prio, sim.pipe_entered)
+    do = idle & (pipe >= 0)
+    dec = dec._replace(
+        reject=reject,
+        assign_pipe=dec.assign_pipe.at[0].set(jnp.where(do, pipe, -1)),
+        assign_pool=dec.assign_pool.at[0].set(0),
+        assign_cpus=dec.assign_cpus.at[0].set(sim.pool_cpu_cap[0]),
+        assign_ram=dec.assign_ram.at[0].set(sim.pool_ram_cap[0]),
+    )
+    return sched_state, dec
+
+
+# ---------------------------------------------------------------------------
+# PRIORITY / PRIORITY-POOL (paper §4.1.2).
+# ---------------------------------------------------------------------------
+def _priority_like(multi_pool: bool):
+    def scheduler(
+        sched_state: Any, sim: SimState, wl: Workload, params: SimParams
+    ):
+        K = params.max_assignments_per_tick
+        NP = params.num_pools
+        total_cpu = jnp.sum(sim.pool_cpu_cap)
+        total_ram = jnp.sum(sim.pool_ram_cap)
+        chunk_cpu = 0.10 * total_cpu
+        chunk_ram = 0.10 * total_ram
+        cap_cpu = 0.50 * total_cpu
+        cap_ram = 0.50 * total_ram
+
+        dec = empty_decision(params)
+        free_cpu = sim.pool_cpu_free
+        free_ram = sim.pool_ram_free
+        live = sim.ctr_status == int(ContainerStatus.RUNNING)
+        waiting0 = sim.pipe_status == int(PipeStatus.WAITING)
+        # OOMed at the RAM cap already -> return failure to the user.
+        reject = waiting0 & sim.pipe_fail_flag & (sim.pipe_last_ram >= cap_ram - EPS)
+        dec = dec._replace(reject=reject)
+
+        def body(k, carry):
+            dec, free_cpu, free_ram, live, tried = carry
+            mask = (
+                waiting0
+                & ~reject
+                & ~tried
+            )
+            pipe = select_next_pipe(mask, wl.prio, sim.pipe_entered)
+            valid = pipe >= 0
+            pipe_c = jnp.maximum(pipe, 0)
+
+            failed = sim.pipe_fail_flag[pipe_c]
+            seen = sim.pipe_last_ram[pipe_c] > 0.0
+            # doubling for OOM retries; same-as-last for preempted pipes;
+            # 10% chunk for fresh arrivals (paper §4.1.2)
+            want_cpu = jnp.where(
+                failed,
+                jnp.minimum(2.0 * sim.pipe_last_cpus[pipe_c], cap_cpu),
+                jnp.where(seen, sim.pipe_last_cpus[pipe_c], chunk_cpu),
+            )
+            want_ram = jnp.where(
+                failed,
+                jnp.minimum(2.0 * sim.pipe_last_ram[pipe_c], cap_ram),
+                jnp.where(seen, sim.pipe_last_ram[pipe_c], chunk_ram),
+            )
+
+            if multi_pool:
+                score = free_cpu / jnp.maximum(sim.pool_cpu_cap, EPS) + (
+                    free_ram / jnp.maximum(sim.pool_ram_cap, EPS)
+                )
+                pool = jnp.argmax(score).astype(jnp.int32)
+            else:
+                pool = jnp.int32(0)
+
+            fits = (free_cpu[pool] >= want_cpu - EPS) & (
+                free_ram[pool] >= want_ram - EPS
+            )
+
+            # ---- preemption path: high-priority pipe, no room ------------
+            can_preempt = valid & ~fits & (wl.prio[pipe_c] > int(Priority.BATCH))
+            victim = select_victim(
+                live, sim.ctr_prio, sim.ctr_start, wl.prio[pipe_c]
+            )
+            has_victim = can_preempt & (victim >= 0)
+            victim_c = jnp.maximum(victim, 0)
+            vpool = sim.ctr_pool[victim_c]
+            free_cpu2 = jnp.where(
+                has_victim, free_cpu.at[vpool].add(sim.ctr_cpus[victim_c]), free_cpu
+            )
+            free_ram2 = jnp.where(
+                has_victim, free_ram.at[vpool].add(sim.ctr_ram[victim_c]), free_ram
+            )
+            live2 = jnp.where(
+                has_victim, live.at[victim_c].set(False), live
+            )
+            if multi_pool:
+                score2 = free_cpu2 / jnp.maximum(sim.pool_cpu_cap, EPS) + (
+                    free_ram2 / jnp.maximum(sim.pool_ram_cap, EPS)
+                )
+                pool2 = jnp.where(has_victim, vpool, jnp.argmax(score2)).astype(
+                    jnp.int32
+                )
+            else:
+                pool2 = pool
+            fits2 = (free_cpu2[pool2] >= want_cpu - EPS) & (
+                free_ram2[pool2] >= want_ram - EPS
+            )
+
+            do = valid & (fits | (has_victim & fits2))
+            use_pool = jnp.where(fits, pool, pool2)
+            # commit preemption only when it actually enables the assignment
+            commit_victim = has_victim & ~fits & fits2
+            suspend = jnp.where(
+                commit_victim,
+                dec.suspend.at[victim_c].set(True),
+                dec.suspend,
+            )
+            free_cpu3 = jnp.where(commit_victim, free_cpu2, free_cpu)
+            free_ram3 = jnp.where(commit_victim, free_ram2, free_ram)
+            live3 = jnp.where(commit_victim, live2, live)
+
+            free_cpu4 = jnp.where(
+                do, free_cpu3.at[use_pool].add(-want_cpu), free_cpu3
+            )
+            free_ram4 = jnp.where(
+                do, free_ram3.at[use_pool].add(-want_ram), free_ram3
+            )
+            dec = dec._replace(
+                suspend=suspend,
+                assign_pipe=dec.assign_pipe.at[k].set(jnp.where(do, pipe_c, -1)),
+                assign_pool=dec.assign_pool.at[k].set(use_pool),
+                assign_cpus=dec.assign_cpus.at[k].set(want_cpu),
+                assign_ram=dec.assign_ram.at[k].set(want_ram),
+            )
+            # whether assigned or blocked, don't reconsider this pipe today
+            tried = jnp.where(valid, tried.at[pipe_c].set(True), tried)
+            return dec, free_cpu4, free_ram4, live3, tried
+
+        tried0 = jnp.zeros((params.max_pipelines,), bool)
+        dec, *_ = jax.lax.fori_loop(
+            0, K, body, (dec, free_cpu, free_ram, live, tried0)
+        )
+        return sched_state, dec
+
+    return scheduler
+
+
+priority_scheduler = _priority_like(multi_pool=False)
+priority_pool_scheduler = _priority_like(multi_pool=True)
+
+
+# ---------------------------------------------------------------------------
+# Vector-scheduler registry (compiled engines). The Python-API registry
+# (paper Listing 4 decorators) lives in ``algorithm.py``.
+# ---------------------------------------------------------------------------
+VectorScheduler = Callable[
+    [Any, SimState, Workload, SimParams], tuple[Any, SchedDecision]
+]
+
+_VECTOR_SCHEDULERS: dict[str, VectorScheduler] = {}
+_VECTOR_INITS: dict[str, Callable[[SimParams], Any]] = {}
+
+
+def register_vector_scheduler(key: str):
+    def deco(fn: VectorScheduler) -> VectorScheduler:
+        _VECTOR_SCHEDULERS[_norm(key)] = fn
+        return fn
+
+    return deco
+
+
+def register_vector_scheduler_init(key: str):
+    def deco(fn: Callable[[SimParams], Any]):
+        _VECTOR_INITS[_norm(key)] = fn
+        return fn
+
+    return deco
+
+
+def _norm(key: str) -> str:
+    return key.replace("-", "_").lower()
+
+
+def get_vector_scheduler(key: str) -> VectorScheduler:
+    k = _norm(key)
+    if k not in _VECTOR_SCHEDULERS:
+        raise KeyError(
+            f"unknown scheduler {key!r}; registered: "
+            f"{sorted(_VECTOR_SCHEDULERS)}"
+        )
+    return _VECTOR_SCHEDULERS[k]
+
+
+def get_vector_scheduler_init(key: str) -> Callable[[SimParams], Any]:
+    return _VECTOR_INITS.get(_norm(key), lambda params: None)
+
+
+def has_vector_scheduler(key: str) -> bool:
+    return _norm(key) in _VECTOR_SCHEDULERS
+
+
+register_vector_scheduler("naive")(naive_scheduler)
+register_vector_scheduler("priority")(priority_scheduler)
+register_vector_scheduler("priority_pool")(priority_pool_scheduler)
+
+
+__all__ = [
+    "SchedDecision",
+    "empty_decision",
+    "select_next_pipe",
+    "select_victim",
+    "naive_scheduler",
+    "priority_scheduler",
+    "priority_pool_scheduler",
+    "register_vector_scheduler",
+    "register_vector_scheduler_init",
+    "get_vector_scheduler",
+    "get_vector_scheduler_init",
+    "has_vector_scheduler",
+]

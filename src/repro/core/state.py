@@ -1,0 +1,231 @@
+"""Struct-of-arrays simulator state.
+
+The original Eudoxia is a Python object graph; here the whole simulation
+world is a pytree of dense arrays so the engine can be a single compiled
+XLA program, ``vmap``-ed into fleets and sharded across a TPU mesh.
+
+Capacity convention: tables are fixed-size (``max_pipelines``,
+``max_ops_per_pipeline``, ``max_containers``, ``num_pools``); validity is
+encoded in status columns. ``INF_TICK`` marks "never".
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import SimParams
+from .types import ContainerStatus, PipeStatus, TICKS_PER_SECOND
+
+INF_TICK = np.int32(2**31 - 1)
+
+
+class Workload(NamedTuple):
+    """Immutable arrival table produced by the workload generator.
+
+    Shapes: MP = max_pipelines, MO = max_ops_per_pipeline.
+    """
+
+    arrival: jax.Array      # [MP] int32 arrival tick (INF_TICK = unused slot)
+    prio: jax.Array         # [MP] int32 Priority
+    n_ops: jax.Array        # [MP] int32
+    op_valid: jax.Array     # [MP, MO] bool
+    op_level: jax.Array     # [MP, MO] int32 topological level
+    op_ram: jax.Array       # [MP, MO] f32 GB
+    op_base: jax.Array      # [MP, MO] f32 runtime ticks at 1 CPU
+    op_alpha: jax.Array     # [MP, MO] f32 CPU-scaling exponent
+
+    @property
+    def max_pipelines(self) -> int:
+        return self.arrival.shape[0]
+
+    @property
+    def max_ops(self) -> int:
+        return self.op_valid.shape[1]
+
+
+class SimState(NamedTuple):
+    """Full dynamic state advanced by the engine (one pytree)."""
+
+    tick: jax.Array               # [] int32 current tick
+
+    # ---- pipelines -------------------------------------------------------
+    pipe_status: jax.Array        # [MP] int32 PipeStatus
+    pipe_entered: jax.Array       # [MP] int32 tick it (re-)entered waiting
+    pipe_fail_flag: jax.Array     # [MP] bool OOM-failed before (paper §4.1.2)
+    pipe_last_cpus: jax.Array     # [MP] f32 last container CPU allocation
+    pipe_last_ram: jax.Array      # [MP] f32 last container RAM allocation
+    pipe_release: jax.Array       # [MP] int32 suspension release tick
+    pipe_completion: jax.Array    # [MP] int32 completion tick (INF = not yet)
+    pipe_first_start: jax.Array   # [MP] int32 first scheduling tick
+    pipe_fails: jax.Array         # [MP] int32 OOM count
+    pipe_preempts: jax.Array      # [MP] int32 preemption count
+
+    # ---- containers ------------------------------------------------------
+    ctr_status: jax.Array         # [MC] int32 ContainerStatus
+    ctr_pipe: jax.Array           # [MC] int32 pipeline index (-1)
+    ctr_pool: jax.Array           # [MC] int32
+    ctr_cpus: jax.Array           # [MC] f32
+    ctr_ram: jax.Array            # [MC] f32
+    ctr_start: jax.Array          # [MC] int32
+    ctr_end: jax.Array            # [MC] int32 completion tick
+    ctr_oom: jax.Array            # [MC] int32 OOM tick (INF = will not OOM)
+    ctr_prio: jax.Array           # [MC] int32 cached pipeline priority
+
+    # ---- pools -----------------------------------------------------------
+    pool_cpu_cap: jax.Array       # [NP] f32
+    pool_ram_cap: jax.Array       # [NP] f32
+    pool_cpu_free: jax.Array      # [NP] f32
+    pool_ram_free: jax.Array      # [NP] f32
+
+    # ---- metrics ---------------------------------------------------------
+    done_count: jax.Array         # [] int32
+    failed_count: jax.Array       # [] int32
+    oom_events: jax.Array         # [] int32
+    preempt_events: jax.Array     # [] int32
+    sum_latency_s: jax.Array      # [] f32  Σ (completion - arrival) seconds
+    sum_latency_s_prio: jax.Array  # [3] f32 per-priority latency sums
+    done_prio: jax.Array          # [3] int32 per-priority completions
+    util_cpu_s: jax.Array         # [NP] f32 ∫ used_cpus dt (cpu-seconds)
+    util_ram_s: jax.Array         # [NP] f32 ∫ used_ram dt (GB-seconds)
+    cost_dollars: jax.Array       # [] f32 allocated-resource cost integral
+    util_log: jax.Array           # [B, NP, 2] f32 bucketed (cpu, ram) usage-s
+
+    @property
+    def max_containers(self) -> int:
+        return self.ctr_status.shape[0]
+
+
+def init_state(params: SimParams) -> SimState:
+    MP = params.max_pipelines
+    MC = params.max_containers
+    NP = params.num_pools
+    B = params.util_log_buckets
+    f32 = jnp.float32
+    i32 = jnp.int32
+    # cloud scaling (§3.2.2): extra capacity is available at a cost premium;
+    # the cost integral charges the premium for usage beyond the base cap.
+    factor = params.cloud_scale_max_factor if params.cloud_scaling else 1.0
+    pool_cpu = jnp.full((NP,), params.pool_cpus * factor, f32)
+    pool_ram = jnp.full((NP,), params.pool_ram_gb * factor, f32)
+    return SimState(
+        tick=jnp.asarray(0, i32),
+        pipe_status=jnp.full((MP,), int(PipeStatus.EMPTY), i32),
+        pipe_entered=jnp.full((MP,), INF_TICK, i32),
+        pipe_fail_flag=jnp.zeros((MP,), bool),
+        pipe_last_cpus=jnp.zeros((MP,), f32),
+        pipe_last_ram=jnp.zeros((MP,), f32),
+        pipe_release=jnp.full((MP,), INF_TICK, i32),
+        pipe_completion=jnp.full((MP,), INF_TICK, i32),
+        pipe_first_start=jnp.full((MP,), INF_TICK, i32),
+        pipe_fails=jnp.zeros((MP,), i32),
+        pipe_preempts=jnp.zeros((MP,), i32),
+        ctr_status=jnp.full((MC,), int(ContainerStatus.EMPTY), i32),
+        ctr_pipe=jnp.full((MC,), -1, i32),
+        ctr_pool=jnp.zeros((MC,), i32),
+        ctr_cpus=jnp.zeros((MC,), f32),
+        ctr_ram=jnp.zeros((MC,), f32),
+        ctr_start=jnp.full((MC,), INF_TICK, i32),
+        ctr_end=jnp.full((MC,), INF_TICK, i32),
+        ctr_oom=jnp.full((MC,), INF_TICK, i32),
+        ctr_prio=jnp.full((MC,), -1, i32),
+        pool_cpu_cap=pool_cpu,
+        pool_ram_cap=pool_ram,
+        pool_cpu_free=pool_cpu,
+        pool_ram_free=pool_ram,
+        done_count=jnp.asarray(0, i32),
+        failed_count=jnp.asarray(0, i32),
+        oom_events=jnp.asarray(0, i32),
+        preempt_events=jnp.asarray(0, i32),
+        sum_latency_s=jnp.asarray(0.0, f32),
+        sum_latency_s_prio=jnp.zeros((3,), f32),
+        done_prio=jnp.zeros((3,), i32),
+        util_cpu_s=jnp.zeros((NP,), f32),
+        util_ram_s=jnp.zeros((NP,), f32),
+        cost_dollars=jnp.asarray(0.0, f32),
+        util_log=jnp.zeros((B, NP, 2), f32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Container runtime model (paper §3.2.2): at creation, the container uses
+# its operator set + allocation to compute completion / OOM ticks.
+# DAG semantics (DESIGN.md §2): ops grouped by topological level; same-level
+# ops share CPUs evenly; level RAM = Σ op RAM; OOM at first over-RAM level.
+# ---------------------------------------------------------------------------
+def container_schedule(
+    wl: Workload,
+    pipe: jax.Array,
+    cpus: jax.Array,
+    ram: jax.Array,
+    ops_mask: jax.Array | None = None,
+):
+    """Return (duration_ticks, oom_offset_ticks) for running ``pipe``.
+
+    ``oom_offset`` is INF_TICK when the allocation is RAM-sufficient.
+    All inputs may be traced; vectorise with vmap over assignments.
+    """
+    MO = wl.max_ops
+    valid = wl.op_valid[pipe]
+    if ops_mask is not None:
+        valid = valid & ops_mask
+    level = wl.op_level[pipe]
+    ram_op = wl.op_ram[pipe]
+    base = wl.op_base[pipe]
+    alpha = wl.op_alpha[pipe]
+
+    levels = jnp.arange(MO, dtype=jnp.int32)
+    onehot = (level[None, :] == levels[:, None]) & valid[None, :]  # [MO, MO]
+    width = jnp.sum(onehot, axis=1).astype(jnp.float32)            # [MO]
+    has_level = width > 0
+    c_eff = cpus / jnp.maximum(width, 1.0)                          # [MO]
+    c_eff = jnp.maximum(c_eff, 1e-6)
+    # per-op runtime at its level's effective CPUs
+    t_op = base / jnp.power(c_eff[level], alpha)                    # [MO]
+    t_op = jnp.where(valid, t_op, 0.0)
+    t_level = jnp.max(jnp.where(onehot, t_op[None, :], 0.0), axis=1)  # [MO]
+    t_level = jnp.where(has_level, jnp.ceil(jnp.maximum(t_level, 1.0)), 0.0)
+    ram_level = jnp.sum(jnp.where(onehot, ram_op[None, :], 0.0), axis=1)
+
+    cum_start = jnp.cumsum(t_level) - t_level                       # [MO]
+    duration = jnp.sum(t_level).astype(jnp.int32)
+    duration = jnp.maximum(duration, 1)
+
+    oom_at = has_level & (ram_level > ram + 1e-6)
+    oom_start = jnp.where(oom_at, cum_start, jnp.inf)
+    oom_min = jnp.min(oom_start)
+    oom_offset = jnp.where(
+        jnp.isinf(oom_min),
+        INF_TICK,
+        jnp.maximum(oom_min.astype(jnp.int32), 1),
+    )
+    return duration, oom_offset
+
+
+def used_resources(state: SimState):
+    """Per-pool (used_cpus, used_ram) from live containers."""
+    NP = state.pool_cpu_cap.shape[0]
+    live = state.ctr_status == int(ContainerStatus.RUNNING)
+    pool_onehot = (
+        state.ctr_pool[None, :] == jnp.arange(NP, dtype=jnp.int32)[:, None]
+    ) & live[None, :]
+    used_cpu = jnp.sum(jnp.where(pool_onehot, state.ctr_cpus[None, :], 0.0), axis=1)
+    used_ram = jnp.sum(jnp.where(pool_onehot, state.ctr_ram[None, :], 0.0), axis=1)
+    return used_cpu, used_ram
+
+
+def seconds(ticks: jax.Array) -> jax.Array:
+    return ticks.astype(jnp.float32) / TICKS_PER_SECOND
+
+
+__all__ = [
+    "INF_TICK",
+    "Workload",
+    "SimState",
+    "init_state",
+    "container_schedule",
+    "used_resources",
+    "seconds",
+]

@@ -1,0 +1,98 @@
+"""Simulation fleets: the TPU-native payoff of the SoA redesign.
+
+The paper pitches Eudoxia as "a cheap mechanism for developers to
+evaluate different scheduling algorithms against their infrastructure".
+On a TPU pod, *cheap* becomes *massively parallel*: because one
+simulation is a pure JAX program over fixed-shape arrays, we can
+
+* ``vmap`` it over seeds / workload parameters -> Monte-Carlo policy
+  evaluation in a single XLA program, and
+* ``shard_map`` that batch over the ``data`` axis of a production mesh,
+  scaling to thousands of concurrent simulations.
+
+``fleet_run`` is also what the serving layer uses to pick an admission /
+preemption policy before it touches the real cluster (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import _run_event_engine, _run_tick_engine
+from .params import SimParams
+from .scheduler import get_vector_scheduler, get_vector_scheduler_init
+from .state import SimState, Workload
+from .workload import generate_workload
+
+
+@functools.partial(
+    jax.jit, static_argnames=("params", "scheduler_key", "engine")
+)
+def _fleet_compiled(
+    params: SimParams,
+    workloads: Workload,  # batched: leading axis = fleet
+    scheduler_key: str,
+    engine: str,
+):
+    scheduler_fn = get_vector_scheduler(scheduler_key)
+    sched_state0 = get_vector_scheduler_init(scheduler_key)(params)
+    runner = _run_event_engine if engine == "event" else _run_tick_engine
+
+    def one(wl: Workload) -> SimState:
+        state, _ = runner(params, wl, scheduler_fn, sched_state0)
+        return state
+
+    return jax.vmap(one)(workloads)
+
+
+def make_workload_batch(params: SimParams, seeds: Sequence[int]) -> Workload:
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    return jax.vmap(lambda k: generate_workload(params, k))(keys)
+
+
+def fleet_run(
+    params: SimParams,
+    seeds: Sequence[int],
+    scheduler_key: str | None = None,
+    engine: str = "event",
+    mesh: jax.sharding.Mesh | None = None,
+    axis: str = "data",
+) -> SimState:
+    """Run len(seeds) simulations in parallel; optionally sharded on a mesh.
+
+    Returns the batched final SimState (leading axis = fleet member).
+    """
+    scheduler_key = scheduler_key or params.scheduling_algo
+    wls = make_workload_batch(params, seeds)
+    if mesh is not None:
+        pspec = jax.sharding.PartitionSpec(axis)
+        sharding = jax.sharding.NamedSharding(mesh, pspec)
+        wls = jax.tree.map(lambda x: jax.device_put(x, sharding), wls)
+    return _fleet_compiled(params, wls, scheduler_key, engine)
+
+
+def fleet_summary(states: SimState, params: SimParams) -> dict:
+    """Aggregate fleet statistics (mean/std across fleet members)."""
+    done = np.asarray(states.done_count)
+    lat = np.asarray(states.sum_latency_s) / np.maximum(done, 1)
+    util = np.asarray(states.util_cpu_s).sum(-1) / (
+        params.total_cpus * params.duration
+    )
+    return {
+        "fleet_size": int(done.shape[0]),
+        "throughput_per_s_mean": float(done.mean() / params.duration),
+        "throughput_per_s_std": float(done.std() / params.duration),
+        "mean_latency_s_mean": float(lat.mean()),
+        "mean_latency_s_std": float(lat.std()),
+        "cpu_utilization_mean": float(util.mean()),
+        "oom_events_mean": float(np.asarray(states.oom_events).mean()),
+        "preempt_events_mean": float(np.asarray(states.preempt_events).mean()),
+        "cost_dollars_mean": float(np.asarray(states.cost_dollars).mean()),
+    }
+
+
+__all__ = ["fleet_run", "fleet_summary", "make_workload_batch"]

@@ -1,0 +1,149 @@
+"""Core datatypes for the Eudoxia simulator.
+
+The paper (§3.2) models the world with three abstractions:
+
+* **Pipeline** — a DAG of *Operators* submitted by a user, carrying a
+  priority level (BATCH < QUERY < INTERACTIVE).
+* **Operator** — one SQL/Python function; carries a minimum RAM
+  requirement and a CPU-scaling function ``t(cpus) = base / cpus**alpha``.
+* **Container** — a (CPUs, RAM, operator-set) allocation on a resource
+  pool, created by the Scheduler and managed by the Executor.
+
+Two representations exist side by side:
+
+1. The **struct-of-arrays** (``state.SimState``) used by the compiled
+   engines — every field below appears as a column there.
+2. The lightweight Python views in this module (``Pipeline``,
+   ``Failure``, ``Assignment``, ``Suspension``) which mirror the paper's
+   public API (Listing 4) for user-written schedulers running in the
+   Python engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Time base (paper §3.2: one loop iteration == 1 tick ~= 10 microseconds).
+# ---------------------------------------------------------------------------
+TICK_SECONDS: float = 10e-6
+TICKS_PER_SECOND: int = int(round(1.0 / TICK_SECONDS))  # 100_000
+
+
+class Priority(enum.IntEnum):
+    """Ascending priority order (paper §3.2.1 / §4.1.2)."""
+
+    BATCH = 0        # batch data pipelines (throughput-oriented)
+    QUERY = 1        # iterative data pipelines (dev loops)
+    INTERACTIVE = 2  # interactive queries (latency-critical)
+
+
+class PipeStatus(enum.IntEnum):
+    EMPTY = 0      # slot unused / pipeline never materialises
+    PENDING = 1    # generated, has not arrived yet (arrival tick in future)
+    WAITING = 2    # in the scheduler's waiting queue
+    RUNNING = 3    # assigned to a live container
+    SUSPENDED = 4  # preempted; sits 1 tick in the suspending queue
+    DONE = 5       # completed successfully
+    FAILED = 6     # permanently failed back to the user (OOM at cap)
+
+
+class ContainerStatus(enum.IntEnum):
+    EMPTY = 0
+    RUNNING = 1
+
+
+# ---------------------------------------------------------------------------
+# Python-facing records (paper Listing 4 signature compatibility).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Operator:
+    """One function node of a pipeline DAG."""
+
+    ram_gb: float          # max RAM required to avoid OOM
+    base_ticks: int        # runtime at exactly 1 CPU
+    alpha: float           # CPU-scaling exponent: t(c) = base / c**alpha
+    level: int             # topological depth inside the pipeline DAG
+
+    def runtime_ticks(self, cpus: float) -> int:
+        eff = max(float(cpus), 1e-6)
+        return max(1, int(np.ceil(self.base_ticks / (eff ** self.alpha))))
+
+
+@dataclasses.dataclass
+class Pipeline:
+    """User-submitted DAG of operators (paper §3.2.1)."""
+
+    pid: int
+    priority: Priority
+    arrival_tick: int
+    ops: list[Operator]
+    # -- retry bookkeeping (priority scheduler, paper §4.1.2) --
+    failed_before: bool = False
+    last_cpus: float = 0.0
+    last_ram_gb: float = 0.0
+
+    @property
+    def num_ops(self) -> int:
+        return len(self.ops)
+
+    @property
+    def total_ram_gb(self) -> float:
+        return float(sum(o.ram_gb for o in self.ops))
+
+    def level_ram(self) -> list[float]:
+        if not self.ops:
+            return [0.0]
+        depth = max(o.level for o in self.ops) + 1
+        out = [0.0] * depth
+        for o in self.ops:
+            out[o.level] += o.ram_gb
+        return out
+
+
+@dataclasses.dataclass
+class Failure:
+    """An executor-reported failure (OOM) from the previous tick."""
+
+    pipeline: Pipeline
+    tick: int
+    cpus: float
+    ram_gb: float
+    reason: str = "oom"
+
+
+@dataclasses.dataclass
+class Assignment:
+    """Scheduler -> Executor: create this container (paper §4.1.3 (2))."""
+
+    pipeline: Pipeline
+    pool: int
+    cpus: float
+    ram_gb: float
+    # Optional subset of operator indices to run (None == whole pipeline).
+    op_indices: Optional[list[int]] = None
+
+
+@dataclasses.dataclass
+class Suspension:
+    """Scheduler -> Executor: preempt the container running this pipeline."""
+
+    pipeline: Pipeline
+    reason: str = "preempted"
+
+
+__all__ = [
+    "TICK_SECONDS",
+    "TICKS_PER_SECOND",
+    "Priority",
+    "PipeStatus",
+    "ContainerStatus",
+    "Operator",
+    "Pipeline",
+    "Failure",
+    "Assignment",
+    "Suspension",
+]

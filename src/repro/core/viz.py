@@ -1,0 +1,93 @@
+"""Execution-statistics visualisation (paper Fig. 2: "visualizers or
+other downstream applications can access execution statistics").
+
+Text/CSV renderings of the per-pool utilisation timeline (the bucketed
+`util_log` integral) and the pipeline latency distribution — what a
+platform engineer actually looks at after a policy simulation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .engine import SimResult
+from .state import INF_TICK
+from .types import PipeStatus, Priority, TICKS_PER_SECOND
+
+BLOCKS = " ▁▂▃▄▅▆▇█"
+
+
+def utilization_timeline(res: SimResult, *, width: int = 64) -> str:
+    """Unicode sparkline of CPU (and RAM) utilisation per pool."""
+    log = np.asarray(res.state.util_log)          # [B, NP, 2] resource-sec
+    B, NP, _ = log.shape
+    caps_c = np.asarray(res.state.pool_cpu_cap)
+    caps_r = np.asarray(res.state.pool_ram_cap)
+    bucket_s = res.params.duration / B
+    lines = []
+    # resample to `width` buckets
+    ix = np.linspace(0, B, width + 1).astype(int)
+    for pool in range(NP):
+        for ri, (name, cap) in enumerate(
+            (("cpu", caps_c[pool]), ("ram", caps_r[pool]))
+        ):
+            frac = []
+            for i in range(width):
+                seg = log[ix[i]: max(ix[i + 1], ix[i] + 1), pool, ri]
+                denom = cap * bucket_s * max(len(seg), 1)
+                frac.append(min(seg.sum() / denom, 1.0) if denom else 0.0)
+            bars = "".join(BLOCKS[int(f * (len(BLOCKS) - 1))] for f in frac)
+            lines.append(f"pool{pool} {name} |{bars}| "
+                         f"mean {np.mean(frac) * 100:5.1f}%")
+    return "\n".join(lines)
+
+
+def latency_histogram(res: SimResult, *, bins: int = 10) -> str:
+    comp = np.asarray(res.state.pipe_completion)
+    arr = np.asarray(res.workload.arrival)
+    done = np.asarray(res.state.pipe_status) == int(PipeStatus.DONE)
+    if not done.any():
+        return "(no completed pipelines)"
+    lat = (comp[done] - arr[done]) / TICKS_PER_SECOND
+    hist, edges = np.histogram(lat, bins=bins)
+    peak = hist.max() or 1
+    lines = []
+    for h, lo, hi in zip(hist, edges[:-1], edges[1:]):
+        bar = "#" * int(40 * h / peak)
+        lines.append(f"{lo:8.3f}-{hi:8.3f}s |{bar} {h}")
+    return "\n".join(lines)
+
+
+def per_priority_table(res: SimResult) -> str:
+    s = res.summary()
+    rows = [f"{'priority':12s} {'submitted':>9s} {'done':>6s} {'mean lat':>10s}"]
+    for p in Priority:
+        v = s["per_priority"][p.name.lower()]
+        rows.append(
+            f"{p.name:12s} {v['submitted']:9d} {v['done']:6d} "
+            f"{v['mean_latency_s']:10.4f}"
+        )
+    return "\n".join(rows)
+
+
+def timeline_csv(res: SimResult) -> str:
+    """CSV: bucket_start_s, pool, cpu_util, ram_util."""
+    log = np.asarray(res.state.util_log)
+    B, NP, _ = log.shape
+    caps_c = np.asarray(res.state.pool_cpu_cap)
+    caps_r = np.asarray(res.state.pool_ram_cap)
+    bucket_s = res.params.duration / B
+    out = ["t_s,pool,cpu_util,ram_util"]
+    for b in range(B):
+        for pool in range(NP):
+            cu = log[b, pool, 0] / max(caps_c[pool] * bucket_s, 1e-12)
+            ru = log[b, pool, 1] / max(caps_r[pool] * bucket_s, 1e-12)
+            out.append(f"{b * bucket_s:.4f},{pool},{cu:.4f},{ru:.4f}")
+    return "\n".join(out)
+
+
+__all__ = [
+    "utilization_timeline",
+    "latency_histogram",
+    "per_priority_table",
+    "timeline_csv",
+]

@@ -1,0 +1,199 @@
+"""Workload generation (paper §3.2.1) and trace ingestion.
+
+"In a real setup, various users submit pipelines to the system at random
+intervals." The generator materialises the *entire* arrival table up
+front from a single PRNG key — a pre-pass rather than per-tick sampling —
+so every engine (tick, event-skip, Python, vmap fleet) replays the exact
+same deterministic workload. Per-tick sampling and a pre-materialised
+arrival table are observationally equivalent for an open-loop arrival
+process, and the pre-pass vectorises.
+
+Every random quantity is "drawn from a distribution centered at one of
+the user-provided (or system default) parameters" (§3.2.1):
+
+* inter-arrival ticks   ~ Exponential(mean = waiting_ticks_mean)
+* ops per pipeline      ~ 1 + Poisson(mean_ops_per_pipeline - 1), clipped
+* DAG shape             ~ each op chains (new level) w.p. chain_prob else
+                          joins the previous level (parallel fan-out)
+* op RAM                ~ LogNormal centred at op_ram_gb_mean
+* op base runtime       ~ LogNormal centred at op_base_seconds_mean
+* CPU-scaling alpha     ~ Categorical(alpha_choices, alpha_probs)
+* priority              ~ Categorical(priority_probs); interactive/query
+                          pipelines are scaled shorter & smaller.
+
+Traces: ``load_trace`` accepts a list of dicts (or a JSON/TOML file) with
+explicit pipelines — the TPC-H validation benchmark uses this path.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import SimParams
+from .state import INF_TICK, Workload
+from .types import Pipeline, Operator, Priority, TICKS_PER_SECOND
+
+
+def generate_workload(params: SimParams, key: jax.Array | None = None) -> Workload:
+    """Vectorised random workload table."""
+    if key is None:
+        key = jax.random.PRNGKey(params.seed)
+    MP, MO = params.max_pipelines, params.max_ops_per_pipeline
+    k_arr, k_prio, k_nops, k_chain, k_ram, k_base, k_alpha = jax.random.split(key, 7)
+
+    # --- arrivals ----------------------------------------------------------
+    gaps = jax.random.exponential(k_arr, (MP,)) * params.waiting_ticks_mean
+    arrival = jnp.cumsum(gaps).astype(jnp.int32)
+    horizon = params.horizon_ticks
+    in_horizon = arrival < horizon
+    arrival = jnp.where(in_horizon, arrival, INF_TICK)
+
+    # --- priorities --------------------------------------------------------
+    pprobs = jnp.asarray(params.priority_probs, jnp.float32)
+    pprobs = pprobs / jnp.sum(pprobs)
+    prio = jax.random.categorical(k_prio, jnp.log(pprobs), shape=(MP,)).astype(
+        jnp.int32
+    )
+
+    # --- DAG shapes ---------------------------------------------------------
+    lam = max(params.mean_ops_per_pipeline - 1.0, 0.0)
+    n_ops = 1 + jax.random.poisson(k_nops, lam, (MP,)).astype(jnp.int32)
+    n_ops = jnp.clip(n_ops, 1, MO)
+    op_idx = jnp.arange(MO, dtype=jnp.int32)[None, :]
+    op_valid = op_idx < n_ops[:, None]
+    chains = jax.random.bernoulli(k_chain, params.chain_prob, (MP, MO))
+    chains = chains.at[:, 0].set(True)  # first op opens level 0
+    op_level = jnp.cumsum(chains.astype(jnp.int32), axis=1) - 1
+    op_level = jnp.where(op_valid, op_level, 0)
+
+    # --- per-priority scale factors (interactive queries are small/short) --
+    scale = jnp.asarray(
+        [1.0, params.query_scale, params.interactive_scale], jnp.float32
+    )[prio][:, None]
+
+    # --- op RAM / runtime / scaling ----------------------------------------
+    ram = (
+        jnp.exp(jax.random.normal(k_ram, (MP, MO)) * params.op_ram_gb_sigma)
+        * params.op_ram_gb_mean
+        * scale
+    )
+    ram = jnp.maximum(ram, 0.05)
+    base_s = (
+        jnp.exp(jax.random.normal(k_base, (MP, MO)) * params.op_base_seconds_sigma)
+        * params.op_base_seconds_mean
+        * scale
+    )
+    base = jnp.maximum(base_s * TICKS_PER_SECOND, 1.0)
+    aprobs = jnp.asarray(params.alpha_probs, jnp.float32)
+    aprobs = aprobs / jnp.sum(aprobs)
+    alpha_ix = jax.random.categorical(k_alpha, jnp.log(aprobs), shape=(MP, MO))
+    alpha = jnp.asarray(params.alpha_choices, jnp.float32)[alpha_ix]
+
+    zero_f = jnp.zeros((MP, MO), jnp.float32)
+    return Workload(
+        arrival=arrival,
+        prio=prio,
+        n_ops=n_ops,
+        op_valid=op_valid,
+        op_level=op_level,
+        op_ram=jnp.where(op_valid, ram, zero_f),
+        op_base=jnp.where(op_valid, base, zero_f),
+        op_alpha=jnp.where(op_valid, alpha, zero_f),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Trace ingestion (paper §3.2.1: "this interface allows users to format
+# existing traces and feed them into the simulator").
+# ---------------------------------------------------------------------------
+def workload_from_pipelines(
+    pipelines: Sequence[Pipeline], params: SimParams
+) -> Workload:
+    MP, MO = params.max_pipelines, params.max_ops_per_pipeline
+    if len(pipelines) > MP:
+        raise ValueError(f"trace has {len(pipelines)} pipelines > capacity {MP}")
+    arrival = np.full((MP,), INF_TICK, np.int32)
+    prio = np.zeros((MP,), np.int32)
+    n_ops = np.zeros((MP,), np.int32)
+    op_valid = np.zeros((MP, MO), bool)
+    op_level = np.zeros((MP, MO), np.int32)
+    op_ram = np.zeros((MP, MO), np.float32)
+    op_base = np.zeros((MP, MO), np.float32)
+    op_alpha = np.zeros((MP, MO), np.float32)
+    for i, p in enumerate(pipelines):
+        if len(p.ops) > MO:
+            raise ValueError(f"pipeline {p.pid} has {len(p.ops)} ops > {MO}")
+        arrival[i] = p.arrival_tick
+        prio[i] = int(p.priority)
+        n_ops[i] = len(p.ops)
+        for j, o in enumerate(p.ops):
+            op_valid[i, j] = True
+            op_level[i, j] = o.level
+            op_ram[i, j] = o.ram_gb
+            op_base[i, j] = o.base_ticks
+            op_alpha[i, j] = o.alpha
+    return Workload(
+        arrival=jnp.asarray(arrival),
+        prio=jnp.asarray(prio),
+        n_ops=jnp.asarray(n_ops),
+        op_valid=jnp.asarray(op_valid),
+        op_level=jnp.asarray(op_level),
+        op_ram=jnp.asarray(op_ram),
+        op_base=jnp.asarray(op_base),
+        op_alpha=jnp.asarray(op_alpha),
+    )
+
+
+def load_trace(path: str | pathlib.Path, params: SimParams) -> Workload:
+    """Load a JSON trace: [{arrival_s, priority, ops: [{ram_gb, base_s,
+    alpha, level}]}]."""
+    raw = json.loads(pathlib.Path(path).read_text())
+    return workload_from_trace_records(raw, params)
+
+
+def workload_from_trace_records(
+    records: Sequence[dict[str, Any]], params: SimParams
+) -> Workload:
+    pipelines = []
+    for i, rec in enumerate(records):
+        ops = [
+            Operator(
+                ram_gb=float(o["ram_gb"]),
+                base_ticks=int(round(float(o["base_s"]) * TICKS_PER_SECOND)),
+                alpha=float(o.get("alpha", 0.5)),
+                level=int(o.get("level", j)),
+            )
+            for j, o in enumerate(rec["ops"])
+        ]
+        pri = rec.get("priority", "QUERY")
+        if isinstance(pri, str):
+            pri = Priority[pri.upper()]
+        pipelines.append(
+            Pipeline(
+                pid=i,
+                priority=Priority(int(pri)),
+                arrival_tick=int(round(float(rec["arrival_s"]) * TICKS_PER_SECOND)),
+                ops=ops,
+            )
+        )
+    return workload_from_pipelines(pipelines, params)
+
+
+def get_workload(params: SimParams) -> Workload:
+    if params.trace_path:
+        return load_trace(params.trace_path, params)
+    return generate_workload(params)
+
+
+__all__ = [
+    "generate_workload",
+    "workload_from_pipelines",
+    "workload_from_trace_records",
+    "load_trace",
+    "get_workload",
+]

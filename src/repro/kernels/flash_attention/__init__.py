@@ -1,0 +1,3 @@
+from .ops import flash_attention, flash_attention_ref, mha_reference
+
+__all__ = ["flash_attention", "flash_attention_ref", "mha_reference"]

@@ -1,0 +1,197 @@
+"""Pallas TPU flash-attention kernel (GQA, causal, sliding-window).
+
+TPU-native layout decisions (vs. a CUDA port):
+
+* Grid = (batch, q_head, q_block, k_block); the k_block axis is the
+  innermost "arbitrary" dimension so the online-softmax accumulators
+  live in VMEM scratch across k steps and the MXU sees back-to-back
+  [block_q, D] x [D, block_k] matmuls.
+* GQA is expressed in the BlockSpec index_map (``h // group``) — the
+  shared KV block is fetched once per q-head group from HBM; no
+  materialised head expansion.
+* Block shapes default to (512, 512) on the sequence dims and keep the
+  full head_dim (128/256): q/k/v/acc tiles fit comfortably in ~16 MB
+  VMEM and every matmul dim is a multiple of the 128-lane MXU.
+* Causal + sliding-window block pruning happens on the grid: fully
+  masked k-blocks are skipped with ``pl.when`` (a TPU-friendly
+  alternative to CUDA early-exit warps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    causal: bool,
+    window: int,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # block-level pruning: causal (k entirely in the future) and window
+    # (k entirely too far in the past)
+    live = k_start < kv_len
+    if causal:
+        live &= k_start <= q_start + block_q - 1
+    if window > 0:
+        live &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [BQ, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                    # [BQ, BK]
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = k_pos < kv_len
+        if causal:
+            ok &= k_pos <= q_pos
+        if window > 0:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "block_q",
+        "block_k",
+        "interpret",
+    ),
+)
+def flash_attention_kernel(
+    q: jax.Array,          # [B, Sq, H, D]
+    k: jax.Array,          # [B, Skv, KV, D]
+    v: jax.Array,          # [B, Skv, KV, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    assert H % KV == 0
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq = (Sq + block_q - 1) // block_q
+    nk = (Skv + block_k - 1) // block_k
+
+    # head-major layout for clean [S, D] tiles
+    qt = q.transpose(0, 2, 1, 3)  # [B, H, Sq, D]
+    kt = k.transpose(0, 2, 1, 3)  # [B, KV, Skv, D]
+    vt = v.transpose(0, 2, 1, 3)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Skv
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        scale=1.0 / (D ** 0.5),
+        block_q=block_q,
+        block_k=block_k,
+        kv_len=Skv,
+        num_k_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, D), lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, D), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q,), jnp.float32),
+            _vmem((block_q, D), jnp.float32),
+        ],
+        compiler_params=_compiler_params(interpret),
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :Sq].transpose(0, 2, 1, 3)  # [B, Sq, H, D]
+    return out
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+    )

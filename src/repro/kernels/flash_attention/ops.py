@@ -1,0 +1,41 @@
+"""Public entry point: dispatches Pallas kernel on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref, mha_reference  # noqa: F401
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset=0,
+    kv_len=None,
+    impl: str = "auto",
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    """q [B,Sq,H,D], k/v [B,Skv,KV,D] -> [B,Sq,H,D]."""
+    use_kernel = impl == "kernel" or (
+        impl == "auto"
+        and jax.default_backend() == "tpu"
+        # the kernel path currently assumes q starts at position 0 and a
+        # full-length KV (training / full prefill); other cases fall back
+        and (isinstance(q_offset, int) and q_offset == 0)
+        and kv_len is None
+    )
+    if use_kernel:
+        return flash_attention_kernel(
+            q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k
+        )
+    return flash_attention_ref(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, kv_len=kv_len
+    )
+
+
+__all__ = ["flash_attention", "flash_attention_ref", "mha_reference"]

@@ -1,0 +1,280 @@
+"""Pure-jnp oracle for flash attention (GQA + causal + sliding window).
+
+This is simultaneously (a) the numerics oracle the Pallas kernel is
+tested against, and (b) the XLA fallback used on non-TPU backends and in
+the CPU dry-runs. It is written flash-style — an online-softmax scan
+over KV blocks — so its *memory* profile matches the kernel (O(S·block)
+rather than O(S^2)) and its HLO FLOPs match full attention, which keeps
+the roofline numbers honest.
+
+Shapes: q [B, Sq, H, D]; k, v [B, Skv, KV, D]; H = KV * G (GQA).
+``q_offset`` positions the query block inside the KV timeline (prefill
+continuation / decode). ``window > 0`` enables sliding-window locality
+(gemma3-style local layers): key j is visible to query i iff
+i - window < j <= i.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: int):
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return ok
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Public entry. For the static train/prefill case (q_offset == 0,
+    no kv_len) this routes through a custom-VJP flash implementation
+    whose backward *recomputes* score blocks — O(S·block) residuals
+    instead of O(S^2) saved softmax panels."""
+    if isinstance(q_offset, int) and q_offset == 0 and kv_len is None:
+        return _flash_custom(causal, window, min(block_k, k.shape[1]))(q, k, v)
+    return _flash_attention_scan(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        kv_len=kv_len, block_k=block_k,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_k")
+)
+def _flash_attention_scan(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    block_k: int = 1024,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Skv, KV, Dk = k.shape
+    assert Dk == D and H % KV == 0
+    G = H // KV
+    block_k = min(block_k, Skv)
+    n_blocks = (Skv + block_k - 1) // block_k
+    pad = n_blocks * block_k - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    scale = 1.0 / (D ** 0.5)
+    qf = (q * scale).astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)
+
+    # scan over KV blocks with running (max, denom, acc)
+    kb = k.reshape(B, n_blocks, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, blk_ix = xs
+        k_pos = blk_ix * block_k + jnp.arange(block_k)
+        s = jnp.einsum(
+            "bqkgd,bckd->bqkgc",
+            qf,
+            kblk.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        ok = _block_mask(q_pos, k_pos, causal, window)  # [Sq, C]
+        if kv_len is not None:
+            ok &= k_pos[None, :] < jnp.asarray(kv_len)[..., None, None]
+        elif pad:
+            ok &= (k_pos < Skv)[None, :]
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd",
+            p,
+            vblk.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, acc0),
+        (kb, vb, jnp.arange(n_blocks)),
+    )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Custom-VJP flash attention: the backward recomputes score blocks from
+# (q, k, v, out, lse) instead of letting autodiff save every softmax
+# panel — O(S*block) residual memory, the flash-attention backward.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _flash_custom(causal: bool, window: int, block_k: int):
+    @jax.custom_vjp
+    def attn(q, k, v):
+        out, _ = _forward_with_lse(q, k, v, causal, window, block_k)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _forward_with_lse(q, k, v, causal, window, block_k)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        return _flash_backward(
+            q, k, v, out, lse, dout, causal, window, block_k
+        )
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def _forward_with_lse(q, k, v, causal, window, block_k):
+    """Online-softmax forward; returns (out, lse [B,Sq,KV,G])."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    block_k = min(block_k, Skv)
+    n_blocks = (Skv + block_k - 1) // block_k
+    pad = n_blocks * block_k - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / (D ** 0.5)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, D)
+    q_pos = jnp.arange(Sq)
+    kb = k.reshape(B, n_blocks, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, blk_ix = xs
+        k_pos = blk_ix * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qf, kblk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        ok = _block_mask(q_pos, k_pos, causal, window) & (k_pos < Skv)[None, :]
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p, vblk.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                  (kb, vb, jnp.arange(n_blocks)))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    out = (acc / jnp.maximum(l[..., None], 1e-30)).reshape(B, Sq, H, D)
+    return out.astype(q.dtype), lse
+
+
+def _flash_backward(q, k, v, out, lse, dout, causal, window, block_k):
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    block_k = min(block_k, Skv)
+    n_blocks = (Skv + block_k - 1) // block_k
+    pad = n_blocks * block_k - Skv
+    kp, vp = k, v
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / (D ** 0.5)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    do = dout.astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    of = out.astype(jnp.float32).reshape(B, Sq, KV, G, D)
+    D_term = jnp.sum(do * of, axis=-1)                     # [B,Sq,KV,G]
+    q_pos = jnp.arange(Sq)
+    kb = kp.reshape(B, n_blocks, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, n_blocks, block_k, KV, D).transpose(1, 0, 2, 3, 4)
+
+    def step(dq_acc, xs):
+        kblk, vblk, blk_ix = xs
+        k_pos = blk_ix * block_k + jnp.arange(block_k)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qf * scale,
+                       kblk.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        ok = _block_mask(q_pos, k_pos, causal, window) & (k_pos < Skv)[None, :]
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                     # [B,Sq,KV,G,C]
+        dv_blk = jnp.einsum("bqkgc,bqkgd->bckd", p, do,
+                            preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqkgd,bckd->bqkgc", do,
+                        vblk.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - D_term[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bqkgc,bckd->bqkgd", ds,
+                                     kblk.astype(jnp.float32),
+                                     preferred_element_type=jnp.float32)
+        dk_blk = jnp.einsum("bqkgc,bqkgd->bckd", ds, qf,
+                            preferred_element_type=jnp.float32)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Sq, KV, G, D), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        step, dq0, (kb, vb, jnp.arange(n_blocks))
+    )
+    dk = dk_b.transpose(1, 0, 2, 3, 4).reshape(B, n_blocks * block_k, KV, D)
+    dv = dv_b.transpose(1, 0, 2, 3, 4).reshape(B, n_blocks * block_k, KV, D)
+    if pad:
+        dk, dv = dk[:, :Skv], dv[:, :Skv]
+    return (
+        dq.reshape(B, Sq, H, D).astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+    )
+
+
+def mha_reference(
+    q, k, v, *, causal=True, window=0, q_offset=0, kv_len=None
+) -> jax.Array:
+    """Naive O(S^2)-memory reference (for small-shape kernel tests only)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    kx = jnp.repeat(k, G, axis=2).astype(jnp.float32)
+    vx = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx) / (D ** 0.5)
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len is not None:
+        ok &= (k_pos < kv_len)[None, :]
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+    return out.astype(q.dtype)

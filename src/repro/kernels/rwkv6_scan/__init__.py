@@ -1,0 +1,4 @@
+from .ops import rwkv6_scan, rwkv6_decode_step
+from .ref import rwkv6_ref
+
+__all__ = ["rwkv6_scan", "rwkv6_decode_step", "rwkv6_ref"]

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel for the chunked RWKV-6 scan.
+
+Grid = (B*H, n_chunks): heads are embarrassingly parallel, the chunk
+axis is 'arbitrary' (sequential) with the [N, N] recurrent state held in
+VMEM scratch between chunk steps — the TPU-native substitute for the
+GPU kernel's per-SM shared-memory state. All chunk math is three MXU
+matmuls plus a triangular-matmul cumsum (no in-kernel cumsum primitive
+needed); everything is f32 in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ops import LOG_W_MIN
+
+
+def _rwkv6_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+    out_ref, sout_ref,
+    state_scr,
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    C = chunk
+    f32 = jnp.float32
+    r_ = r_ref[0].astype(f32)          # [C, N]
+    k_ = k_ref[0].astype(f32)
+    v_ = v_ref[0].astype(f32)
+    w_ = w_ref[0].astype(f32)
+    u_ = u_ref[0].astype(f32)          # [N]
+    S_ = state_scr[...]                # [N, N]
+
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    tri_excl = (iota_j < iota_i).astype(f32)
+    mask_strict = iota_j < iota_i
+
+    logw = jnp.maximum(jnp.log(jnp.maximum(w_, 1e-30)), LOG_W_MIN)
+    Lx = jax.lax.dot_general(
+        tri_excl, logw, (((1,), (0,)), ((), ())),
+        preferred_element_type=f32,
+    )                                   # exclusive cumsum [C, N]
+    Li = Lx + logw
+    E = jnp.exp(Lx)
+    Etot = jnp.exp(Li[-1:, :])          # [1, N]
+    q_ = r_ * E
+    k_div = k_ * jnp.exp(-Li)
+
+    A = jax.lax.dot_general(
+        q_, k_div, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    )                                   # [C, C]
+    A = jnp.where(mask_strict, A, 0.0)
+    d = jnp.sum(r_ * k_ * u_[None, :], axis=1)  # [C]
+
+    out = (
+        jax.lax.dot_general(q_, S_, (((1,), (0,)), ((), ())),
+                            preferred_element_type=f32)
+        + jax.lax.dot_general(A, v_, (((1,), (0,)), ((), ())),
+                              preferred_element_type=f32)
+        + d[:, None] * v_
+    )
+    out_ref[0] = out.astype(out_ref.dtype)
+
+    k_carry = k_div * Etot
+    S_new = Etot.T * S_ + jax.lax.dot_general(
+        k_carry, v_, (((0,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    state_scr[...] = S_new
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        sout_ref[0] = S_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan_kernel(
+    r, k, v, w, u, state0, *, chunk: int = 16, interpret: bool = False
+):
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    assert S % C == 0
+    n_chunks = S // C
+
+    def flat(x):  # [B,S,H,N] -> [B*H, S, N]
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+
+    rf, kf, vf, wf = map(flat, (r, k, v, w))
+    s0 = state0.reshape(B * H, N, N)
+
+    grid = (B * H, n_chunks)
+    seq_spec = pl.BlockSpec((1, C, N), lambda bh, c: (bh, c, 0))
+    out, sout = pl.pallas_call(
+        functools.partial(_rwkv6_kernel, chunk=C, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            seq_spec,
+            seq_spec,
+            seq_spec,
+            seq_spec,
+            pl.BlockSpec((1, N), lambda bh, c, H=H: (bh % H, 0)),
+            pl.BlockSpec((1, N, N), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, N, N), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, N), r.dtype),
+            jax.ShapeDtypeStruct((B * H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((N, N), jnp.float32)],
+        compiler_params=_compiler_params(interpret),
+        interpret=interpret,
+    )(rf, kf, vf, wf, u, s0)
+
+    out = out.reshape(B, H, S, N).transpose(0, 2, 1, 3)
+    return out, sout.reshape(B, H, N, N)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "arbitrary")
+    )

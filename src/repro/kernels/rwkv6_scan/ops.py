@@ -1,0 +1,130 @@
+"""Chunked RWKV-6 scan — jit wrapper + chunked-jnp implementation.
+
+The naive recurrence (ref.py) is O(S) sequential steps with an
+[N x N] state update each — hopeless on the MXU. The chunked form
+processes C tokens per step with three dense matmuls (TPU-native
+reformulation of the GPU "flash-linear-attention" trick):
+
+    E_j   = prod_{t<j} w_t                    (exclusive cumprod, via a
+                                               triangular matmul in-kernel)
+    out_j = (r_j . E_j) S_in                  [C,N] x [N,N]
+          + [(r.E) (k/E')^T  o  mask_strict + diag(r.(u.k))] V
+    S_out = diag(E_C) S_in + (k/E' . E_C)^T V
+
+where E'_i = E_{i+1}. Cross-chunk state is carried sequentially
+(lax.scan here; an 'arbitrary' grid dimension with VMEM scratch in the
+Pallas kernel).
+
+Numerics: ratios E_C/E' are bounded by clamping per-step log-decay at
+``LOG_W_MIN`` (RWKV-6's w = exp(-exp(x)) rarely exceeds it) and keeping
+the chunk short (default 16); everything is f32 inside the chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+LOG_W_MIN = -5.0
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,          # [B, S, H, N]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,          # decays in (0, 1)
+    u: jax.Array,          # [H, N]
+    state0: jax.Array | None = None,   # [B, H, N, N] f32
+    *,
+    chunk: int = 16,
+    impl: str = "auto",
+    interpret: bool = False,
+):
+    """Returns (out [B,S,H,N], state [B,H,N,N])."""
+    B, S, H, N = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+    # pad ragged sequences; w=1, k=0 is the identity state update
+    C = min(chunk, S)
+    pad = (C - S % C) % C
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zpad(r), zpad(k), zpad(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    use_kernel = impl == "kernel" or (
+        impl == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_kernel:
+        from .kernel import rwkv6_scan_kernel
+
+        out, state = rwkv6_scan_kernel(
+            r, k, v, w, u, state0, chunk=chunk, interpret=interpret
+        )
+    else:
+        out, state = _rwkv6_chunked(r, k, v, w, u, state0, chunk=chunk)
+    return (out[:, :S], state) if pad else (out, state)
+
+
+def _rwkv6_chunked(r, k, v, w, u, state0, *, chunk):
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    assert S % C == 0, f"seq {S} must be divisible by chunk {C}"
+    n_chunks = S // C
+    f32 = jnp.float32
+
+    def to_chunks(x):  # [B,S,H,N] -> [n, B, H, C, N]
+        return (
+            x.astype(f32)
+            .reshape(B, n_chunks, C, H, N)
+            .transpose(1, 0, 3, 2, 4)
+        )
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    uf = u.astype(f32)
+    tri_incl = jnp.tril(jnp.ones((C, C), f32))           # inclusive cumsum
+    tri_excl = jnp.tril(jnp.ones((C, C), f32), k=-1)     # exclusive
+    mask_strict = jnp.tril(jnp.ones((C, C), bool), k=-1)
+
+    def step(S_, xs):
+        r_, k_, v_, w_ = xs  # [B, H, C, N]
+        logw = jnp.maximum(jnp.log(jnp.maximum(w_, 1e-30)), LOG_W_MIN)
+        Lx = jnp.einsum("ij,bhjn->bhin", tri_excl, logw)   # exclusive cumsum
+        Li = Lx + logw                                     # inclusive
+        E = jnp.exp(Lx)                                    # prod_{t<j} w_t
+        Etot = jnp.exp(Li[..., -1:, :])                    # [B,H,1,N]
+        q_ = r_ * E
+        k_div = k_ * jnp.exp(-Li)                          # k / E'
+        A = jnp.einsum("bhin,bhjn->bhij", q_, k_div)
+        A = jnp.where(mask_strict[None, None], A, 0.0)
+        # diagonal (bonus-u) term, per head
+        d = jnp.einsum("bhin,hn->bhi", r_ * k_, uf)
+        out = (
+            jnp.einsum("bhin,bhnm->bhim", q_, S_)
+            + jnp.einsum("bhij,bhjn->bhin", A, v_)
+            + d[..., None] * v_
+        )
+        k_carry = k_div * Etot                             # k . E_C/E'
+        S_new = Etot[..., 0, :, None] * S_ + jnp.einsum(
+            "bhin,bhim->bhnm", k_carry, v_
+        )
+        return S_new, out
+
+    state, outs = jax.lax.scan(step, state0.astype(f32), (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, N)
+    return out.astype(r.dtype), state
+
+
+def rwkv6_decode_step(r, k, v, w, u, state):
+    """Single-token recurrence for serving. r/k/v/w: [B, H, N]."""
+    f32 = jnp.float32
+    rf, kf, vf, wf = (x.astype(f32) for x in (r, k, v, w))
+    uf = u.astype(f32)
+    kv = kf[..., :, None] * vf[..., None, :]
+    out = jnp.einsum("bhn,bhnm->bhm", rf, state + uf[None, :, :, None] * kv)
+    state_new = wf[..., :, None] * state + kv
+    return out.astype(r.dtype), state_new
+
+
+__all__ = ["rwkv6_scan", "rwkv6_decode_step", "LOG_W_MIN"]

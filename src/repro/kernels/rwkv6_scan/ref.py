@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) recurrence.
+
+Per head (head_dim = N), with receptance r_t, key k_t, value v_t in R^N,
+data-dependent decay w_t in (0,1)^N and bonus u in R^N:
+
+    S_t   = diag(w_t) . S_{t-1} + k_t^T v_t          (S in R^{N x N})
+    out_t = r_t . (S_{t-1} + diag(u) . k_t^T v_t)
+
+i.e. the current token contributes through the bonus u rather than the
+decayed state — the defining RWKV quirk. The oracle is a direct
+``lax.scan`` over time in f32; the Pallas kernel and the chunked jnp
+implementation (ops.py) are validated against it.
+
+Shapes: r/k/v/w [B, S, H, N]; u [H, N]; state [B, H, N, N]
+(rows = key dim, cols = value dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rwkv6_ref(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state0: jax.Array | None = None,
+):
+    B, S, H, N = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S_, xs):
+        r_t, k_t, v_t, w_t = xs  # each [B, H, N]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,N,N]
+        out = jnp.einsum(
+            "bhn,bhnm->bhm", r_t, S_ + uf[None, :, :, None] * kv
+        )
+        S_new = w_t[..., :, None] * S_ + kv
+        return S_new, out
+
+    xs = tuple(
+        x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf)
+    )  # [S, B, H, N]
+    state, outs = jax.lax.scan(step, state0, xs)
+    out = outs.transpose(1, 0, 2, 3)  # [B, S, H, N]
+    return out.astype(r.dtype), state

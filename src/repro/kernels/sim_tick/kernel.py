@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the fleet executor tick.
+
+One grid step processes a [FB, MC] tile of the fleet x container table
+entirely in VMEM: the retire masks are VPU compares, the per-pool
+freed-resource reduction is NP masked row-sums. The tile is the unit of
+HBM traffic — each fleet member's container table is read exactly once
+per tick, which is what makes the fleet engine memory-bound-optimal on
+TPU (see benchmarks/kernels_bench.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EMPTY, RUNNING
+
+
+def _tick_kernel(
+    status_ref, end_ref, oom_ref, cpus_ref, ram_ref, pool_ref, tick_ref,
+    oomed_ref, done_ref, nstat_ref, fcpu_ref, fram_ref,
+    *,
+    num_pools: int,
+):
+    status = status_ref[...]
+    t = tick_ref[...][:, :1]                      # [FB, 1]
+    running = status == RUNNING
+    oomed = running & (oom_ref[...] <= t)
+    done = running & ~oomed & (end_ref[...] <= t)
+    retired = oomed | done
+
+    oomed_ref[...] = oomed.astype(jnp.int32)
+    done_ref[...] = done.astype(jnp.int32)
+    nstat_ref[...] = jnp.where(retired, EMPTY, status)
+
+    freed_c = jnp.where(retired, cpus_ref[...], 0.0)
+    freed_r = jnp.where(retired, ram_ref[...], 0.0)
+    pool = pool_ref[...]
+    for p in range(num_pools):
+        sel = pool == p
+        fcpu_ref[:, p] = jnp.sum(jnp.where(sel, freed_c, 0.0), axis=1)
+        fram_ref[:, p] = jnp.sum(jnp.where(sel, freed_r, 0.0), axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_pools", "block_fleet", "interpret")
+)
+def fleet_tick_kernel(
+    status, end, oom, cpus, ram, pool, tick, *, num_pools: int,
+    block_fleet: int = 256, interpret: bool = False,
+):
+    F, MC = status.shape
+    FB = min(block_fleet, F)
+    assert F % FB == 0
+    grid = (F // FB,)
+    tick2 = jnp.broadcast_to(tick[:, None], (F, 8)).astype(jnp.int32)
+
+    tile = pl.BlockSpec((FB, MC), lambda i: (i, 0))
+    pool_tile = pl.BlockSpec((FB, num_pools), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_tick_kernel, num_pools=num_pools),
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, tile, tile,
+                  pl.BlockSpec((FB, 8), lambda i: (i, 0))],
+        out_specs=[tile, tile, tile, pool_tile, pool_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((F, MC), jnp.int32),
+            jax.ShapeDtypeStruct((F, MC), jnp.int32),
+            jax.ShapeDtypeStruct((F, MC), status.dtype),
+            jax.ShapeDtypeStruct((F, num_pools), jnp.float32),
+            jax.ShapeDtypeStruct((F, num_pools), jnp.float32),
+        ],
+        interpret=interpret,
+    )(status, end, oom, cpus, ram, pool, tick2)
+    oomed, done, nstat, fcpu, fram = outs
+    return oomed.astype(bool), done.astype(bool), nstat, fcpu, fram

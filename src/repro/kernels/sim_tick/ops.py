@@ -1,0 +1,24 @@
+"""Dispatch wrapper for the fleet executor tick."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import fleet_tick_kernel
+from .ref import fleet_tick_ref
+
+
+def fleet_tick(status, end, oom, cpus, ram, pool, tick, *, num_pools: int,
+               impl: str = "auto", interpret: bool = False):
+    use_kernel = impl == "kernel" or (
+        impl == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_kernel:
+        return fleet_tick_kernel(
+            status, end, oom, cpus, ram, pool, tick, num_pools=num_pools,
+            interpret=interpret,
+        )
+    return fleet_tick_ref(status, end, oom, cpus, ram, pool, tick,
+                          num_pools=num_pools)
+
+
+__all__ = ["fleet_tick"]

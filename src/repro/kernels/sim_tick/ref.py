@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fleet executor tick.
+
+The hot inner loop of a *fleet* of Eudoxia simulations (sweep.py runs
+thousands of policy x seed simulations in parallel) is the executor's
+container-retirement step: for every fleet member, compare every live
+container's completion/OOM tick against the member's clock, retire the
+firing ones and return the per-pool freed resources.
+
+Shapes: F = fleet, MC = containers, NP = pools.
+status/end/oom/pool [F, MC] i32; cpus/ram [F, MC] f32; tick [F] i32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+RUNNING = 1
+EMPTY = 0
+
+
+@functools.partial(jax.jit, static_argnames=("num_pools",))
+def fleet_tick_ref(status, end, oom, cpus, ram, pool, tick, *, num_pools: int):
+    running = status == RUNNING
+    t = tick[:, None]
+    oomed = running & (oom <= t)
+    done = running & ~oomed & (end <= t)
+    retired = oomed | done
+    new_status = jnp.where(retired, EMPTY, status)
+
+    freed_c = jnp.where(retired, cpus, 0.0)
+    freed_r = jnp.where(retired, ram, 0.0)
+    pools = jnp.arange(num_pools, dtype=jnp.int32)
+    onehot = pool[:, :, None] == pools[None, None, :]          # [F, MC, NP]
+    freed_cpu = jnp.sum(jnp.where(onehot, freed_c[:, :, None], 0.0), axis=1)
+    freed_ram = jnp.sum(jnp.where(onehot, freed_r[:, :, None], 0.0), axis=1)
+    return oomed, done, new_status, freed_cpu, freed_ram

@@ -1,0 +1,4 @@
+from .ops import ssm_scan, ssm_decode_step
+from .ref import ssm_scan_ref
+
+__all__ = ["ssm_scan", "ssm_decode_step", "ssm_scan_ref"]

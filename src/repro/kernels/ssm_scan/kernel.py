@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan.
+
+Grid = (batch, channel_block, chunk): channels are independent (the
+[dim, N] state factorises over dim), so channel blocks ride the
+parallel grid dims; the chunk axis is sequential with the [DB, N]
+state slab resident in VMEM scratch. Inside a chunk the recurrence
+steps token-by-token on the VPU — for Mamba-1's full [dim, N] decay
+matrix the matmul-chunked trick of Mamba-2/SSD does not apply (the
+exp(A dt) factor couples d and n), so the kernel optimises memory
+traffic instead: x/dt/B/C stream through VMEM once per chunk and the
+state never touches HBM between chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(
+    x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref,
+    y_ref, hout_ref,
+    h_scr,
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    f32 = jnp.float32
+    A = A_ref[...].astype(f32)          # [DB, N]
+    D = D_ref[0].astype(f32)            # [DB]
+
+    def step(t, h):
+        x_t = x_ref[0, t, :].astype(f32)     # [DB]
+        dt_t = dt_ref[0, t, :].astype(f32)   # [DB]
+        B_t = B_ref[0, t, :].astype(f32)     # [N]
+        C_t = C_ref[0, t, :].astype(f32)     # [N]
+        a = jnp.exp(A * dt_t[:, None])       # [DB, N]
+        h = a * h + (dt_t * x_t)[:, None] * B_t[None, :]
+        y_t = jnp.sum(h * C_t[None, :], axis=1) + D * x_t
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        hout_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_dim", "interpret"))
+def ssm_scan_kernel(
+    x, dt, A, B, C, D, h0, *, chunk: int = 256, block_dim: int = 128,
+    interpret: bool = False,
+):
+    Bsz, S, dim = x.shape
+    N = A.shape[1]
+    Cn = min(chunk, S)
+    assert S % Cn == 0
+    n_chunks = S // Cn
+    DB = min(block_dim, dim)
+    assert dim % DB == 0
+    nd = dim // DB
+
+    D2 = D.reshape(1, dim)
+    grid = (Bsz, nd, n_chunks)
+    chan_spec = pl.BlockSpec((1, Cn, DB), lambda b, d, c: (b, c, d))
+    stat_spec = pl.BlockSpec((1, Cn, N), lambda b, d, c: (b, c, 0))
+    y, hout = pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=Cn, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            chan_spec,                                            # x
+            chan_spec,                                            # dt
+            pl.BlockSpec((DB, N), lambda b, d, c: (d, 0)),        # A
+            stat_spec,                                            # B
+            stat_spec,                                            # C
+            pl.BlockSpec((1, DB), lambda b, d, c: (0, d)),        # D
+            pl.BlockSpec((1, DB, N), lambda b, d, c: (b, d, 0)),  # h0
+        ],
+        out_specs=[
+            chan_spec,
+            pl.BlockSpec((1, DB, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, dim), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, dim, N), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((DB, N), jnp.float32)],
+        compiler_params=_compiler_params(interpret),
+        interpret=interpret,
+    )(x, dt, A, B, C, D2, h0)
+    return y, hout
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )

@@ -1,0 +1,98 @@
+"""Chunked Mamba selective scan — jit wrapper + chunked associative scan.
+
+The oracle's token-sequential scan is latency-bound; here the sequence
+is cut into chunks (default 256): inside a chunk a parallel
+``lax.associative_scan`` computes the recurrence (materialising only
+[B, C, dim, N] f32 per chunk — the chunk length is the VMEM/HBM memory
+knob), across chunks a cheap sequential carry propagates the state.
+Activation remat in the model wraps whole chunks, so the backward pass
+replays one chunk at a time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def ssm_scan(
+    x, dt, A, B, C, D, h0=None, *, chunk: int = 256, impl: str = "auto",
+    interpret: bool = False,
+):
+    """Returns (y [B,S,dim], h [B,dim,N])."""
+    Bsz, S, dim = x.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, dim, N), jnp.float32)
+    # pad ragged sequences to a chunk multiple; dt=0, x=0 is the identity
+    # update (a = exp(0) = 1, b = 0), so the carried state is untouched
+    Cn = min(chunk, S)
+    pad = (Cn - S % Cn) % Cn
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+    use_kernel = impl == "kernel" or (
+        impl == "auto" and jax.default_backend() == "tpu"
+    )
+    if use_kernel:
+        from .kernel import ssm_scan_kernel
+
+        y, h = ssm_scan_kernel(x, dt, A, B, C, D, h0, chunk=chunk,
+                               interpret=interpret)
+    else:
+        y, h = _ssm_chunked(x, dt, A, B, C, D, h0, chunk=chunk)
+    return (y[:, :S], h) if pad else (y, h)
+
+
+def _ssm_chunked(x, dt, A, B, C, D, h0, *, chunk):
+    Bsz, S, dim = x.shape
+    N = A.shape[1]
+    Cn = min(chunk, S)
+    assert S % Cn == 0, f"seq {S} must divide chunk {Cn}"
+    n_chunks = S // Cn
+    f32 = jnp.float32
+    xf, dtf, Bf, Cf = (t.astype(f32) for t in (x, dt, B, C))
+    Af, Df = A.astype(f32), D.astype(f32)
+
+    def to_chunks(t, last):
+        return t.reshape(Bsz, n_chunks, Cn, last).transpose(1, 0, 2, 3)
+
+    xc, dtc = to_chunks(xf, dim), to_chunks(dtf, dim)
+    Bc, Cc = to_chunks(Bf, N), to_chunks(Cf, N)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    def step(h, xs):
+        x_, dt_, B_, C_ = xs  # [B, Cn, ...]
+        a = jnp.exp(Af[None, None] * dt_[..., None])        # [B,Cn,dim,N]
+        b = (dt_ * x_)[..., None] * B_[:, :, None, :]
+        # prepend carry as the first element of the scan
+        a0 = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b0 = jnp.concatenate([h[:, None], b], axis=1)
+        _, hs = jax.lax.associative_scan(assoc, (a0, b0), axis=1)
+        hs = hs[:, 1:]                                      # [B,Cn,dim,N]
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C_) + Df[None, None] * x_
+        return hs[:, -1], y
+
+    h, ys = jax.lax.scan(step, h0.astype(f32), (xc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bsz, S, dim)
+    return y.astype(x.dtype), h
+
+
+def ssm_decode_step(x, dt, A, B, C, D, h):
+    """One-token update. x/dt [B,dim]; B/C [B,N]; h [B,dim,N]."""
+    f32 = jnp.float32
+    xf, dtf, Bf, Cf = (t.astype(f32) for t in (x, dt, B, C))
+    a = jnp.exp(A.astype(f32)[None] * dtf[..., None])
+    b = (dtf * xf)[..., None] * Bf[:, None, :]
+    h = a * h + b
+    y = jnp.einsum("bdn,bn->bd", h, Cf) + D.astype(f32)[None] * xf
+    return y.astype(x.dtype), h
+
+
+__all__ = ["ssm_scan", "ssm_decode_step"]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+Discretised SSM, per channel d and state dim n:
+
+    h_t = exp(A[d,n] * dt_t[d]) * h_{t-1} + dt_t[d] * B_t[n] * x_t[d]
+    y_t[d] = sum_n C_t[n] * h_t[d,n] + D[d] * x_t[d]
+
+Shapes: x, dt [B,S,dim]; A [dim,N]; B, C [B,S,N]; D [dim];
+state [B,dim,N].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def ssm_scan_ref(x, dt, A, B, C, D, h0=None):
+    Bsz, S, dim = x.shape
+    N = A.shape[1]
+    f32 = jnp.float32
+    xf, dtf, Bf, Cf = (t.astype(f32) for t in (x, dt, B, C))
+    Af, Df = A.astype(f32), D.astype(f32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, dim, N), f32)
+
+    def step(h, xs):
+        x_t, dt_t, B_t, C_t = xs  # [B,dim], [B,dim], [B,N], [B,N]
+        a = jnp.exp(Af[None] * dt_t[..., None])           # [B,dim,N]
+        b = (dt_t * x_t)[..., None] * B_t[:, None, :]     # [B,dim,N]
+        h = a * h + b
+        y = jnp.einsum("bdn,bn->bd", h, C_t) + Df[None] * x_t
+        return h, y
+
+    xs = tuple(t.transpose(1, 0, 2) for t in (xf, dtf, Bf, Cf))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h

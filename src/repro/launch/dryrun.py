@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device
+count on first init, and the production meshes need 512 placeholder
+devices on this CPU-only container.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3_12b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all \
+        --report reports/dryrun.json
+
+Per cell this prints/records compiled.memory_analysis() (proves the
+programme fits 16 GB/chip) and compiled.cost_analysis() + parsed
+collective bytes (feeds EXPERIMENTS.md §Roofline).
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import get_arch, list_archs
+from repro.launch.lowering import lower_cell, model_axes_and_shapes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES
+from repro.roofline.analysis import Roofline, model_flops_estimate
+from repro.roofline.hlo_stats import analyze_hlo
+from repro.roofline.hw import HBM_BYTES
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str) -> dict:
+    arch = get_arch(arch_name)
+    if shape_name in arch.skip:
+        return {
+            "arch": arch_name,
+            "shape": shape_name,
+            "mesh": mesh_kind,
+            "status": "skipped",
+            "reason": arch.skip[shape_name],
+        }
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    lowered = lower_cell(arch, shape_name, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+    }
+    # peak live bytes per device: args + temps (aliased args are donated)
+    peak = (
+        mem_d["argument_bytes"] + mem_d["temp_bytes"] - mem_d["alias_bytes"]
+        + mem_d["output_bytes"]
+    )
+    cost = compiled.cost_analysis() or {}
+
+    # loop-aware static analysis of the post-SPMD HLO (cost_analysis
+    # counts while bodies once — useless for period-scanned stacks)
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo, chips=chips)
+    coll = {k: v for k, v in stats.coll.items()}
+    coll["_counts"] = stats.coll_counts
+
+    _, p_shapes = model_axes_and_shapes(arch.model)
+    n_params = sum(x.size for x in jax.tree.leaves(p_shapes))
+    mf = model_flops_estimate(arch, shape_name, n_params)
+
+    # minimal per-device HBM traffic: weights + (decode) caches + batch,
+    # each touched once — the lower bound for the memory term
+    param_bytes = sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(p_shapes)
+    )
+    min_bytes = param_bytes / chips
+    kind = SHAPES[shape_name].kind
+    if kind == "decode":
+        from repro.launch.shapes import cache_shapes
+
+        cs = cache_shapes(arch.model, SHAPES[shape_name].batch,
+                          SHAPES[shape_name].seq)
+        min_bytes += sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(cs)
+        ) / chips
+
+    roof = Roofline(
+        arch=arch_name,
+        shape=shape_name,
+        mesh=mesh_kind,
+        chips=chips,
+        flops_per_device=stats.flops,
+        bytes_per_device=stats.bytes,
+        collective_bytes_per_device=stats.coll_bytes,
+        collectives=coll,
+        model_flops=mf,
+        memory_per_device=mem_d,
+    )
+    rec = roof.to_dict()
+    rec.update(
+        status="ok",
+        n_params=n_params,
+        t_lower_s=round(t_lower, 2),
+        t_compile_s=round(t_compile, 2),
+        peak_bytes_per_device=peak,
+        fits_hbm=bool(peak <= HBM_BYTES),
+        hlo_bytes=len(hlo),
+        cost_analysis_flops=float(cost.get("flops", 0.0)),
+        cost_analysis_bytes=float(cost.get("bytes accessed", 0.0)),
+        min_bytes_per_device=min_bytes,
+        mem_efficiency=min_bytes / max(stats.bytes, 1.0),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--report", default=None)
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, str]] = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                for m in meshes:
+                    cells.append((a, s, m))
+    else:
+        assert args.arch and args.shape
+        for m in meshes:
+            cells.append((args.arch, args.shape, m))
+
+    results = []
+    report_path = pathlib.Path(args.report) if args.report else None
+    if report_path and args.append and report_path.exists():
+        results = json.loads(report_path.read_text())
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+        cells = [c for c in cells if c not in done]
+
+    for a, s, m in cells:
+        print(f"=== {a} x {s} x {m} ===", flush=True)
+        try:
+            rec = run_cell(a, s, m)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            rec = {
+                "arch": a,
+                "shape": s,
+                "mesh": m,
+                "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+            }
+        if rec["status"] == "ok":
+            print(
+                f"  compiled in {rec['t_compile_s']}s | "
+                f"peak/device {rec['peak_bytes_per_device']/2**30:.2f} GiB "
+                f"(fits={rec['fits_hbm']}) | "
+                f"t_comp {rec['t_compute_s']*1e3:.2f} ms "
+                f"t_mem {rec['t_memory_s']*1e3:.2f} ms "
+                f"t_coll {rec['t_collective_s']*1e3:.2f} ms "
+                f"-> {rec['dominant']}-bound | "
+                f"useful {rec['useful_flops_fraction']*100:.0f}% "
+                f"roofline {rec['roofline_fraction']*100:.0f}%",
+                flush=True,
+            )
+        else:
+            print(f"  {rec['status']}: {rec.get('reason', rec.get('error'))}",
+                  flush=True)
+        results.append(rec)
+        if report_path:
+            report_path.parent.mkdir(parents=True, exist_ok=True)
+            report_path.write_text(json.dumps(results, indent=1))
+
+    ok = sum(r["status"] == "ok" for r in results)
+    sk = sum(r["status"] == "skipped" for r in results)
+    er = sum(r["status"] == "error" for r in results)
+    print(f"\n{ok} ok / {sk} skipped / {er} errors")
+    if er:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

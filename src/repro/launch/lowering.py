@@ -1,0 +1,183 @@
+"""Build abstract (no-allocation) lowerings of train/prefill/decode steps
+for any (arch x shape x mesh) cell. Shared by dryrun.py, tests and the
+roofline benchmarks."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec
+from repro.launch.shapes import (
+    SHAPES,
+    batch_axes,
+    batch_specs,
+    cache_axes,
+    cache_shapes,
+    opt_axes,
+)
+from repro.models.common import ModelConfig
+from repro.optim.optimizers import OptConfig
+from repro.parallel.ctx import sharding_ctx
+from repro.parallel.sharding import ShardingRules, spec_for
+from repro.runtime.steps import (
+    TrainState,
+    make_serve_steps,
+    make_train_step,
+    model_init,
+)
+
+S = jax.ShapeDtypeStruct
+
+
+def arch_rules(arch: ArchSpec) -> ShardingRules:
+    return ShardingRules().override(
+        param=arch.rule_overrides.get("param"),
+        act=arch.rule_overrides.get("act"),
+    )
+
+
+def model_axes_and_shapes(cfg: ModelConfig):
+    """(axes_tree, param_shape_tree) without allocating parameters."""
+    box: dict[str, Any] = {}
+
+    def f(key):
+        params, axes = model_init(cfg, key)
+        box["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["axes"], shapes
+
+
+def shardings_of(axes_tree, shape_tree, mesh: Mesh, rules) -> Any:
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(mesh, spec_for(sh.shape, ax, mesh, rules)),
+        axes_tree,
+        shape_tree,
+    )
+
+
+def opt_config(arch: ArchSpec) -> OptConfig:
+    return OptConfig(
+        name=arch.optimizer,
+        state_dtype=jnp.bfloat16
+        if arch.opt_state_dtype == "bfloat16"
+        else jnp.float32,
+    )
+
+
+def lower_train(arch: ArchSpec, shape_name: str, mesh: Mesh):
+    cfg = arch.model
+    rules = arch_rules(arch)
+    shape = SHAPES[shape_name]
+    ocfg = opt_config(arch)
+    init_fn, step_fn = make_train_step(
+        cfg, ocfg, microbatches=arch.train_microbatches
+    )
+
+    # ---- abstract state + shardings ------------------------------------
+    p_axes, p_shapes = model_axes_and_shapes(cfg)
+    state_shapes = jax.eval_shape(lambda k: init_fn(k)[0], jax.random.PRNGKey(0))
+    o_axes = opt_axes(arch.optimizer, p_axes, p_shapes)
+    state_axes = TrainState(params=p_axes, opt=o_axes)
+    state_sh = shardings_of(state_axes, state_shapes, mesh, rules.param)
+
+    b_shapes = batch_specs(cfg, shape)
+    b_axes = batch_axes(cfg, shape)
+    b_sh = shardings_of(b_axes, b_shapes, mesh, rules.act)
+
+    repl = NamedSharding(mesh, P())
+    metrics_sh = {"loss": repl, "grad_norm": repl, "step": repl}
+
+    with mesh, sharding_ctx(mesh, rules.act):
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(state_sh, b_sh),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,),
+        ).lower(state_shapes, b_shapes)
+    return lowered
+
+
+def lower_prefill(arch: ArchSpec, shape_name: str, mesh: Mesh):
+    cfg = arch.model
+    rules = arch_rules(arch)
+    shape = SHAPES[shape_name]
+    prefill_fn, _ = make_serve_steps(cfg)
+
+    p_axes, p_shapes = model_axes_and_shapes(cfg)
+    p_sh = shardings_of(p_axes, p_shapes, mesh, rules.param)
+    b_shapes = batch_specs(cfg, shape)
+    b_sh = shardings_of(batch_axes(cfg, shape), b_shapes, mesh, rules.act)
+
+    c_axes = cache_axes(cfg)
+    c_shapes = cache_shapes(cfg, shape.batch, shape.seq)
+    c_sh = shardings_of(c_axes, c_shapes, mesh, rules.act)
+    logits_sh = NamedSharding(
+        mesh, spec_for((shape.batch, cfg.vocab), "batch vocab", mesh, rules.act)
+    )
+
+    with mesh, sharding_ctx(mesh, rules.act):
+        lowered = jax.jit(
+            functools.partial(prefill_fn, max_len=shape.seq),
+            in_shardings=(p_sh, b_sh),
+            out_shardings=(logits_sh, c_sh),
+        ).lower(p_shapes, b_shapes)
+    return lowered
+
+
+def lower_decode(arch: ArchSpec, shape_name: str, mesh: Mesh):
+    cfg = arch.model
+    rules = arch_rules(arch)
+    shape = SHAPES[shape_name]
+    _, decode_fn = make_serve_steps(cfg)
+
+    p_axes, p_shapes = model_axes_and_shapes(cfg)
+    p_sh = shardings_of(p_axes, p_shapes, mesh, rules.param)
+    c_axes = cache_axes(cfg)
+    c_shapes = cache_shapes(cfg, shape.batch, shape.seq)
+    c_sh = shardings_of(c_axes, c_shapes, mesh, rules.act)
+
+    tok_shape = S((shape.batch,), jnp.int32)
+    tok_sh = NamedSharding(
+        mesh, spec_for((shape.batch,), "batch", mesh, rules.act)
+    )
+    pos_shape = S((), jnp.int32)
+    repl = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(
+        mesh, spec_for((shape.batch, cfg.vocab), "batch vocab", mesh, rules.act)
+    )
+
+    with mesh, sharding_ctx(mesh, rules.act):
+        lowered = jax.jit(
+            decode_fn,
+            in_shardings=(p_sh, c_sh, tok_sh, repl),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(1,),
+        ).lower(p_shapes, c_shapes, tok_shape, pos_shape)
+    return lowered
+
+
+def lower_cell(arch: ArchSpec, shape_name: str, mesh: Mesh):
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return lower_train(arch, shape_name, mesh)
+    if kind == "prefill":
+        return lower_prefill(arch, shape_name, mesh)
+    return lower_decode(arch, shape_name, mesh)
+
+
+__all__ = [
+    "arch_rules",
+    "model_axes_and_shapes",
+    "shardings_of",
+    "opt_config",
+    "lower_train",
+    "lower_prefill",
+    "lower_decode",
+    "lower_cell",
+]

@@ -1,0 +1,171 @@
+"""Assigned input shapes + abstract input specs per (arch x shape).
+
+Shapes (LM transformer: seq_len x global_batch):
+    train_4k     seq=4096    batch=256   -> train_step
+    prefill_32k  seq=32768   batch=32    -> prefill
+    decode_32k   seq=32768   batch=128   -> serve_step (1 token, KV=seq)
+    long_500k    seq=524288  batch=1     -> serve_step (sub-quadratic only)
+
+``input_specs()`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation). Axes helpers build the logical-axis
+trees for caches and optimizer state so the dry-run can construct full
+in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.models.encdec import dec_len
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Abstract model inputs for train/prefill of one global batch."""
+    B, L = shape.batch, shape.seq
+    if cfg.family == "audio":
+        return {
+            "frontend_embeds": S((B, L, lm.VIT_DIM), jnp.bfloat16),
+            "tokens": S((B, dec_len(cfg, L)), jnp.int32),
+        }
+    out = {"tokens": S((B, L), jnp.int32)}
+    if cfg.family == "vlm":
+        out["frontend_embeds"] = S((B, cfg.n_img_tokens, lm.VIT_DIM), jnp.bfloat16)
+    return out
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, str]:
+    if cfg.family == "audio":
+        return {"frontend_embeds": "batch seq state", "tokens": "batch seq"}
+    out = {"tokens": "batch seq"}
+    if cfg.family == "vlm":
+        out["frontend_embeds"] = "batch seq state"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache axes (mirror lm.init_caches / encdec caches structure)
+# ---------------------------------------------------------------------------
+def _block_cache_axes(cfg: ModelConfig, kind: str, stacked: bool):
+    pre = "layers " if stacked else ""
+    if kind == "attn":
+        from repro.models.attention import KVCache
+
+        ax = f"{pre}batch kv_seq kv_heads head_dim"
+        return KVCache(k=ax, v=ax)
+    if kind == "mamba":
+        from repro.models.ssm import MambaState
+
+        return MambaState(
+            h=f"{pre}batch ff state", conv=f"{pre}batch conv ff"
+        )
+    if kind == "rwkv":
+        from repro.models.rwkv import RWKVState
+
+        return RWKVState(
+            wkv=f"{pre}batch heads head_dim state",
+            shift_t=f"{pre}batch seq embed",
+            shift_c=f"{pre}batch seq embed",
+        )
+    raise ValueError(kind)
+
+
+def cache_axes(cfg: ModelConfig):
+    if cfg.family == "audio":
+        from repro.models.encdec import EncDecCaches
+        from repro.models.attention import KVCache
+
+        ax = "layers batch kv_seq kv_heads head_dim"
+        return EncDecCaches(
+            self_kv=KVCache(k=ax, v=ax), cross_kv=(ax, ax)
+        )
+    return {
+        "periods": [
+            _block_cache_axes(cfg, spec.kind, stacked=True)
+            for spec in cfg.pattern
+        ],
+        "tail": [
+            _block_cache_axes(
+                cfg, cfg.pattern[t % cfg.period].kind, stacked=False
+            )
+            for t in range(cfg.n_tail)
+        ],
+    }
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract cache tree (no allocation)."""
+    if cfg.family == "audio":
+        from repro.models.attention import KVCache
+        from repro.models.encdec import EncDecCaches, dec_len as _dl
+
+        L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        d_dec = _dl(cfg, max_len)
+        kv = lambda s: KVCache(
+            k=S((L, batch, s, KV, hd), cfg.compute_dtype),
+            v=S((L, batch, s, KV, hd), cfg.compute_dtype),
+        )
+        return EncDecCaches(
+            self_kv=kv(d_dec),
+            cross_kv=(
+                S((L, batch, max_len, KV, hd), cfg.compute_dtype),
+                S((L, batch, max_len, KV, hd), cfg.compute_dtype),
+            ),
+        )
+    return jax.eval_shape(lambda: lm.init_caches(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# optimizer state axes (mirror optim state structure over param axes)
+# ---------------------------------------------------------------------------
+def opt_axes(opt_name: str, param_axes, param_shapes):
+    from repro.optim.optimizers import OptState, _factored
+
+    if opt_name == "adamw":
+        return OptState(step="", inner={"m": param_axes, "v": param_axes})
+
+    def v_axes(ax: str, shape):
+        names = ax.split()
+        if _factored(shape.shape):
+            return {
+                "vr": " ".join(names[:-1]),
+                "vc": " ".join(names[:-2] + names[-1:]),
+            }
+        return {"v": ax}
+
+    inner = jax.tree.map(v_axes, param_axes, param_shapes)
+    return OptState(step="", inner=inner)
+
+
+__all__ = [
+    "SHAPES",
+    "ShapeSpec",
+    "batch_specs",
+    "batch_axes",
+    "cache_axes",
+    "cache_shapes",
+    "opt_axes",
+]

@@ -1,0 +1,54 @@
+"""Simulator CLI: run Eudoxia from a TOML file (paper §4.1.1) with
+visual output.
+
+    PYTHONPATH=src python -m repro.launch.sim examples/project.toml \
+        [--engine event|tick|python] [--csv out.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.core import run
+from repro.core.viz import (
+    latency_histogram,
+    per_priority_table,
+    timeline_csv,
+    utilization_timeline,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paramfile")
+    ap.add_argument("--engine", default=None,
+                    choices=[None, "event", "tick", "python"])
+    ap.add_argument("--csv", default=None,
+                    help="write the utilisation timeline as CSV")
+    ap.add_argument("--json", default=None, help="write the summary JSON")
+    args = ap.parse_args()
+
+    res = run(args.paramfile, engine=args.engine)
+    s = res.summary()
+    print("== summary ==")
+    for k in ("submitted", "done", "failed", "throughput_per_s",
+              "mean_latency_s", "p99_latency_s", "cpu_utilization",
+              "oom_events", "preempt_events", "cost_dollars"):
+        print(f"  {k:18s} {s[k]}")
+    print("\n== per priority ==")
+    print(per_priority_table(res))
+    print("\n== utilisation ==")
+    print(utilization_timeline(res))
+    print("\n== latency distribution ==")
+    print(latency_histogram(res))
+    if args.csv:
+        pathlib.Path(args.csv).write_text(timeline_csv(res))
+        print(f"\nwrote {args.csv}")
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(s, indent=1))
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

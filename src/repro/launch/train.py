@@ -1,0 +1,84 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3_12b \
+        --steps 200 --smoke --ckpt-dir /tmp/ckpt --ckpt-every 50
+
+On this CPU container: run the reduced (smoke) config of any assigned
+architecture for a few hundred steps with checkpoints, failure
+injection and straggler monitoring. On a real pod the same driver takes
+--no-smoke plus the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.failures import FailureInjector
+from repro.runtime.train_loop import run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--inject-failures", action="store_true")
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="use a (data,model) host mesh of this data size")
+    ap.add_argument("--mesh-model", type=int, default=1)
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    mesh = None
+    if args.mesh_data:
+        mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
+
+    injector = (
+        FailureInjector(mtbf_steps=args.steps / 3, max_failures=2)
+        if args.inject_failures
+        else None
+    )
+    result = run_training(
+        arch,
+        steps=args.steps,
+        mesh=mesh,
+        use_smoke_config=args.smoke,
+        global_batch=args.global_batch,
+        seq_len=args.seq_len,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        injector=injector,
+        microbatches=args.microbatches,
+        on_metrics=lambda s, m: (
+            print(f"step {s:5d} loss {m['loss']:.4f} ({m['dt']*1e3:.0f} ms)")
+            if s % 10 == 0
+            else None
+        ),
+    )
+    print(
+        json.dumps(
+            {
+                "arch": args.arch,
+                "steps_done": result.steps_done,
+                "first_loss": result.losses[0] if result.losses else None,
+                "last_loss": result.losses[-1] if result.losses else None,
+                "restarts": result.restarts,
+                "straggler_events": result.straggler_events,
+            },
+            indent=1,
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""GQA attention block: projections + RoPE + flash attention + KV cache.
+
+Supports the zoo's full attention variety: MQA (granite kv=1), MHA
+(phi3 kv=32), GQA (everything else), sliding-window local layers
+(gemma3 5:1 local:global), non-causal encoder attention and
+cross-attention (whisper), and one-token decode against a cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from .common import (
+    AX_EMBED,
+    AX_HEAD_DIM,
+    AX_HEADS,
+    AX_KV_HEADS,
+    ModelConfig,
+    dense_init,
+    rotary,
+)
+
+
+class Param(NamedTuple):
+    value: jax.Array
+    axes: tuple
+
+
+def unzip(tree):
+    """Split a tree with Param leaves into (params, axes) trees.
+
+    Axes become space-separated strings (atomic pytree leaves) so the
+    axes tree is structurally identical to the params tree."""
+    is_p = lambda x: isinstance(x, Param)
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree.map(lambda p: " ".join(p.axes), tree, is_leaf=is_p)
+    return params, axes
+
+
+def attn_init(cfg: ModelConfig, key) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": Param(
+            dense_init(k1, (d, H, hd), d, dt), (AX_EMBED, AX_HEADS, AX_HEAD_DIM)
+        ),
+        "wk": Param(
+            dense_init(k2, (d, KV, hd), d, dt),
+            (AX_EMBED, AX_KV_HEADS, AX_HEAD_DIM),
+        ),
+        "wv": Param(
+            dense_init(k3, (d, KV, hd), d, dt),
+            (AX_EMBED, AX_KV_HEADS, AX_HEAD_DIM),
+        ),
+        "wo": Param(
+            dense_init(k4, (H, hd, d), H * hd, dt),
+            (AX_HEADS, AX_HEAD_DIM, AX_EMBED),
+        ),
+    }
+
+
+def cross_attn_init(cfg: ModelConfig, key) -> dict:
+    return attn_init(cfg, key)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, S_max, KV, hd]
+    v: jax.Array
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(
+        k=jnp.zeros(shape, cfg.compute_dtype),
+        v=jnp.zeros(shape, cfg.compute_dtype),
+    )
+
+
+def attn_apply(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                      # [B, S, d]
+    *,
+    positions: jax.Array,              # [S] (or scalar position for decode)
+    window: int = 0,
+    causal: bool = True,
+    use_rope: bool = True,
+    cache: Optional[KVCache] = None,
+    cache_index=None,                  # scalar: #tokens already in cache
+    kv_override: Optional[tuple] = None,  # (k, v) for cross-attention
+):
+    """Returns (y [B,S,d], new_cache)."""
+    from repro.parallel.ctx import constrain
+
+    B, S, _ = x.shape
+    q = constrain(jnp.einsum("bsd,dhn->bshn", x, p["wq"]),
+                  "batch seq heads head_dim")
+    if kv_override is None:
+        k = constrain(jnp.einsum("bsd,dkn->bskn", x, p["wk"]),
+                      "batch seq kv_heads head_dim")
+        v = constrain(jnp.einsum("bsd,dkn->bskn", x, p["wv"]),
+                      "batch seq kv_heads head_dim")
+        if use_rope:
+            kv_pos = positions
+            k = rotary(k, kv_pos, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    if use_rope:
+        q = rotary(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        idx = jnp.asarray(cache_index, jnp.int32)
+        W_cache = cache.k.shape[1]
+        ring = window > 0 and W_cache == window
+        if ring:
+            return _ring_cache_attend(
+                cfg, p, q, k, v, cache, idx, S, window
+            )
+        # plain cache: write the fresh K/V at cache_index
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, idx, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, idx, 0, 0)
+        )
+        new_cache = KVCache(ck, cv)
+        kv_len = idx + S
+        if S == 1:
+            # one-token decode: a single masked einsum over the cache.
+            # The KV-block scan would force per-block resharding of a
+            # seq-sharded cache; the einsum keeps KV local and lets
+            # GSPMD reduce only the [B,H] softmax partials across
+            # context-parallel shards.
+            y = decode_attention(
+                q, ck, cv, kv_len=kv_len, window=window, q_pos=idx
+            )
+        else:
+            y = flash_attention(
+                q,
+                ck,
+                cv,
+                causal=causal,
+                window=window,
+                q_offset=idx,
+                kv_len=kv_len,
+                impl=cfg.attn_impl if cfg.attn_impl != "auto" else "auto",
+            )
+    else:
+        attn = lambda q_, k_, v_: flash_attention(
+            q_, k_, v_, causal=causal, window=window,
+            impl=cfg.attn_impl if cfg.attn_impl != "auto" else "auto",
+        )
+        if cfg.remat != "none":
+            # recompute score blocks in backward instead of saving every
+            # [B,Sq,H,block_k] f32 panel (dominant peak for wide-head
+            # archs whose heads replicate across TP)
+            attn = jax.checkpoint(
+                attn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        y = attn(q, k, v)
+    out = jnp.einsum("bshn,hnd->bsd", y, p["wo"])
+    return out, new_cache
+
+
+def _ring_cache_attend(cfg, p, q, k, v, cache, idx, S, window):
+    """Sliding-window layer with a ring-buffer cache of `window` slots.
+    Slot j holds position p_j = idx' - ((idx' - j) mod W) for the newest
+    idx'; masking by p_j >= 0 covers the not-yet-full phase, and every
+    resident position is inside the window by construction."""
+    W = window
+    if S == 1:
+        slot = idx % W
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0)
+        )
+        j = jnp.arange(W)
+        slot_pos = idx - ((idx - j) % W)          # in (idx-W, idx]
+        y = decode_attention(
+            q, ck, cv, kv_len=idx + 1, window=W, q_pos=idx,
+            slot_pos=slot_pos,
+        )
+        out = jnp.einsum("bshn,hnd->bsd", y, p["wo"])
+        return out, KVCache(ck, cv)
+    # prefill (assumes idx == 0): attend over the in-flight K/V, then
+    # retire only the last `window` positions into the ring
+    y = flash_attention(
+        q, k, v, causal=True, window=W,
+        impl=cfg.attn_impl if cfg.attn_impl != "auto" else "auto",
+    )
+    start = max(S - W, 0)
+    n = S - start
+    positions = jnp.arange(start, S)
+    slots = positions % W
+    ck = cache.k.at[:, slots].set(k[:, start:].astype(cache.k.dtype))
+    cv = cache.v.at[:, slots].set(v[:, start:].astype(cache.v.dtype))
+    out = jnp.einsum("bshn,hnd->bsd", y, p["wo"])
+    return out, KVCache(ck, cv)
+
+
+def decode_attention(q, k, v, *, kv_len, window=0, q_pos=0, slot_pos=None):
+    """Single-query attention over a (possibly seq-sharded) KV cache.
+
+    q [B,1,H,D]; k/v [B,S,KV,D]. Softmax over the full S with masking by
+    kv_len (and sliding window). `slot_pos` overrides the position of
+    each cache slot (ring buffers). Numerically: plain max-subtracted
+    softmax in f32 — one token's scores are [B,H,S], tiny per shard.
+    """
+    B, _, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qf = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qf, k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) / (D ** 0.5)
+    if slot_pos is None:
+        pos = jnp.arange(Skv)
+        ok = pos[None, None, None, :] < jnp.asarray(kv_len)
+        if window > 0:
+            ok = ok & (pos[None, None, None, :] > jnp.asarray(q_pos) - window)
+    else:
+        pos = slot_pos
+        ok = (pos >= 0)[None, None, None, :] & (
+            pos[None, None, None, :] <= jnp.asarray(q_pos)
+        )
+    s = jnp.where(ok, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p / jnp.maximum(denom, 1e-30),
+        v.astype(jnp.float32),
+    )
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def encode_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output (whisper)."""
+    k = jnp.einsum("bsd,dkn->bskn", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dkn->bskn", enc_out, p["wv"])
+    return k, v
+
+
+__all__ = [
+    "Param",
+    "unzip",
+    "KVCache",
+    "init_kv_cache",
+    "attn_init",
+    "cross_attn_init",
+    "attn_apply",
+    "encode_kv",
+]

@@ -1,0 +1,208 @@
+"""Model configuration + shared building blocks for the architecture zoo.
+
+Design notes
+------------
+* Pure-functional: ``params = init(cfg, key)``; apply fns take params
+  explicitly. Everything is a pytree of jnp arrays.
+* **Period-scan**: layer stacks are described by a *pattern* — a short
+  tuple of per-layer :class:`LayerSpec` that repeats. Parameters for each
+  position in the pattern are stacked over repeats and the stack is
+  traversed with ``lax.scan`` (+ optional tail for non-divisible depths).
+  This keeps the lowered HLO at O(pattern) rather than O(n_layers) —
+  essential for the 512-device dry-run compiles — while supporting
+  heterogeneous interleaves (gemma3 local:global 5:1, jamba attn:mamba
+  1:7, llama4 dense:MoE 1:1) with exact memory/FLOP accounting.
+* Sharding is expressed with *logical axis names* attached to every
+  parameter (see ``parallel/sharding.py`` for the logical->mesh rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# logical axis vocabulary (mapped to mesh axes in parallel/sharding.py)
+AX_VOCAB = "vocab"
+AX_EMBED = "embed"        # d_model
+AX_HEADS = "heads"
+AX_KV_HEADS = "kv_heads"
+AX_HEAD_DIM = "head_dim"
+AX_FF = "ff"
+AX_EXPERT = "expert"
+AX_LAYERS = "layers"      # stacked period axis — never sharded
+AX_CONV = "conv"
+AX_STATE = "state"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One position inside the repeating layer pattern."""
+
+    kind: str = "attn"          # "attn" | "mamba" | "rwkv"
+    mlp: str = "dense"          # "dense" | "moe" | "moe_dense" (parallel both)
+    window: int = 0             # 0 = global attention; >0 = sliding window
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 1
+    expert_ff: int = 0
+    shared_expert_ff: int = 0   # 0 = no shared expert
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    conv_k: int = 4
+    expand: int = 2
+    dt_rank: int = 0            # 0 -> ceil(d_model / 16)
+    chunk: int = 256            # scan chunk length (memory/compute knob)
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    chunk: int = 32             # chunked-scan length (numerics knob)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "lm"          # lm | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1024
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+    moe: MoEConfig = MoEConfig()
+    mamba: MambaConfig = MambaConfig()
+    rwkv: RWKVConfig = RWKVConfig()
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    mlp_type: str = "swiglu"    # "swiglu" | "gelu" (non-gated, 2 matmuls)
+    tie_embeddings: bool = False
+    # enc-dec (whisper): n_layers is the decoder depth
+    n_enc_layers: int = 0
+    # vlm: number of leading positions fed by the (stubbed) vision frontend
+    n_img_tokens: int = 0
+    # numerics / memory
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    remat: str = "full"         # "none" | "full" | "dots"
+    # attention implementation: "auto" picks pallas on TPU, blocked-jnp ref
+    # elsewhere; "ref" forces the pure-jnp oracle
+    attn_impl: str = "auto"
+    # sequence-parallel attention (shard seq over 'model' axis for norms/mlp)
+    seq_shard_decode: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.period
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers - self.n_periods * self.period
+
+    def layer_spec(self, i: int) -> LayerSpec:
+        return self.pattern[i % self.period]
+
+    def validate(self) -> "ModelConfig":
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0, "GQA divisibility"
+        for spec in self.pattern:
+            if spec.mlp in ("moe", "moe_dense"):
+                assert self.moe.n_experts > 0
+        return self
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis annotation: params are stored as plain arrays; a parallel
+# "axes" pytree of tuples carries the logical names for sharding rules.
+# ---------------------------------------------------------------------------
+class Annotated(dict):
+    """dict pytree of params with `.axes` side table (same tree structure,
+    leaves are tuples of logical axis names)."""
+
+
+def dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (pure fns over explicit params)
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rotary(x, positions, theta):
+    """x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+__all__ = [
+    "AX_VOCAB",
+    "AX_EMBED",
+    "AX_HEADS",
+    "AX_KV_HEADS",
+    "AX_HEAD_DIM",
+    "AX_FF",
+    "AX_EXPERT",
+    "AX_LAYERS",
+    "AX_CONV",
+    "AX_STATE",
+    "LayerSpec",
+    "MoEConfig",
+    "MambaConfig",
+    "RWKVConfig",
+    "ModelConfig",
+    "param_count",
+    "dense_init",
+    "rms_norm",
+    "rotary",
+    "swiglu",
+]

@@ -1,0 +1,269 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, S_enc, VIT_DIM] (as if the two
+conv-downsampling layers already ran); the transformer backbone is real.
+Positions are fixed sinusoidal (computed on the fly — no giant learned
+tables at 32k+ frames); attention: encoder bidirectional, decoder causal
+self-attention + cross-attention over encoder output.
+
+Shape mapping for the assigned input shapes: seq_len = encoder frame
+count (long-form audio), decoder length = max(64, seq_len // 8).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    KVCache,
+    Param,
+    attn_apply,
+    attn_init,
+    cross_attn_init,
+    encode_kv,
+    init_kv_cache,
+    unzip,
+)
+from .common import (
+    AX_EMBED,
+    AX_LAYERS,
+    AX_STATE,
+    AX_VOCAB,
+    ModelConfig,
+    rms_norm,
+)
+from .lm import VIT_DIM, _stacked_init
+from .mlp import mlp_apply, mlp_init
+
+
+def dec_len(cfg: ModelConfig, s_enc: int) -> int:
+    return max(64, s_enc // 8)
+
+
+def sinusoidal(S, d, offset=0):
+    pos = (jnp.arange(S) + offset)[:, None].astype(jnp.float32)
+    half = d // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _enc_block_init(cfg, key):
+    k1, k2 = jax.random.split(key)
+    zero = lambda: Param(jnp.zeros((cfg.d_model,), jnp.float32), (AX_EMBED,))
+    return {"n1": zero(), "attn": attn_init(cfg, k1), "n2": zero(),
+            "mlp": mlp_init(cfg, k2)}
+
+
+def _dec_block_init(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    zero = lambda: Param(jnp.zeros((cfg.d_model,), jnp.float32), (AX_EMBED,))
+    return {
+        "n1": zero(), "self": attn_init(cfg, k1),
+        "nc": zero(), "cross": cross_attn_init(cfg, k2),
+        "n2": zero(), "mlp": mlp_init(cfg, k3),
+    }
+
+
+def encdec_init(cfg: ModelConfig, key):
+    assert cfg.n_enc_layers > 0
+    ks = jax.random.split(key, 6)
+    tree = {
+        "frontend_proj": Param(
+            (jax.random.normal(ks[0], (VIT_DIM, cfg.d_model)) * 0.02).astype(
+                cfg.param_dtype
+            ),
+            (AX_STATE, AX_EMBED),
+        ),
+        "embed": Param(
+            (jax.random.normal(ks[1], (cfg.vocab, cfg.d_model)) * 0.02).astype(
+                cfg.param_dtype
+            ),
+            (AX_VOCAB, AX_EMBED),
+        ),
+        "enc_norm": Param(jnp.zeros((cfg.d_model,), jnp.float32), (AX_EMBED,)),
+        "final_norm": Param(jnp.zeros((cfg.d_model,), jnp.float32), (AX_EMBED,)),
+        "head": Param(
+            (jax.random.normal(ks[2], (cfg.d_model, cfg.vocab)) * 0.02).astype(
+                cfg.param_dtype
+            ),
+            (AX_EMBED, AX_VOCAB),
+        ),
+    }
+    params, axes = unzip(tree)
+    for name, init_fn, n, kk in (
+        ("enc", _enc_block_init, cfg.n_enc_layers, ks[3]),
+        ("dec", _dec_block_init, cfg.n_layers, ks[4]),
+    ):
+        stacked = _stacked_init(lambda k: unzip(init_fn(cfg, k))[0], kk, n)
+        _, ax = unzip(init_fn(cfg, jax.random.PRNGKey(0)))
+        ax = jax.tree.map(lambda s: f"{AX_LAYERS} {s}".strip(), ax)
+        params[name] = stacked
+        axes[name] = ax
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames [B, S_enc, VIT_DIM] -> encoder output [B, S_enc, d]."""
+    B, S, _ = frames.shape
+    x = jnp.einsum(
+        "bsv,vd->bsd", frames.astype(cfg.compute_dtype), params["frontend_proj"]
+    )
+    x = x + sinusoidal(S, cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(S)
+
+    def body(x, layer):
+        h = rms_norm(x, layer["n1"], cfg.norm_eps)
+        y, _ = attn_apply(
+            cfg, layer["attn"], h, positions=positions, causal=False,
+            use_rope=False,
+        )
+        x = x + y
+        h2 = rms_norm(x, layer["n2"], cfg.norm_eps)
+        return x + mlp_apply(layer["mlp"], h2), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(cfg, layer, x, positions, cross_kv, *, mode, cache=None,
+               cache_index=None):
+    h = rms_norm(x, layer["n1"], cfg.norm_eps)
+    if mode == "train":
+        y, nc = attn_apply(
+            cfg, layer["self"], h, positions=positions, use_rope=False
+        ), None
+        y = y[0]
+    else:
+        y, nc = attn_apply(
+            cfg, layer["self"], h, positions=positions, use_rope=False,
+            cache=cache, cache_index=cache_index,
+        )
+    x = x + y
+    hc = rms_norm(x, layer["nc"], cfg.norm_eps)
+    yc, _ = attn_apply(
+        cfg, layer["cross"], hc, positions=positions, causal=False,
+        use_rope=False, kv_override=cross_kv,
+    )
+    x = x + yc
+    h2 = rms_norm(x, layer["n2"], cfg.norm_eps)
+    return x + mlp_apply(layer["mlp"], h2), nc
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = x + sinusoidal(S, cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(S)
+
+    def body(x, layer):
+        cross_kv = encode_kv(cfg, layer["cross"], enc_out)
+        y, _ = _dec_layer(cfg, layer, x, positions, cross_kv, mode="train")
+        return y, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encdec_loss(cfg: ModelConfig, params, batch, vocab_chunk: int = 0):
+    tokens = batch["tokens"]
+    enc_out = encode(cfg, params, batch["frontend_embeds"])
+    h = decode_train(cfg, params, tokens, enc_out)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["head"]).astype(jnp.float32)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    B, S = tokens.shape
+    mask = jnp.concatenate(
+        [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], 1
+    )
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+class EncDecCaches(NamedTuple):
+    self_kv: Any      # stacked KVCache over dec layers
+    cross_kv: Any     # stacked (k, v) over dec layers
+
+
+def encdec_prefill(cfg: ModelConfig, params, batch, max_dec: int):
+    """Encode audio + prefill the decoder with its BOS tokens.
+    Returns (last logits [B, V], caches)."""
+    enc_out = encode(cfg, params, batch["frontend_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = x + sinusoidal(S, cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(S)
+    self0 = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.n_layers,) + t.shape),
+        init_kv_cache(cfg, B, max_dec),
+    )
+
+    def body(x, xs):
+        layer, cache = xs
+        cross_kv = encode_kv(cfg, layer["cross"], enc_out)
+        y, nc = _dec_layer(
+            cfg, layer, x, positions, cross_kv, mode="prefill",
+            cache=cache, cache_index=0,
+        )
+        return y, (nc, cross_kv)
+
+    x, (self_kv, cross_kv) = jax.lax.scan(body, x, (params["dec"], self0))
+    h = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["head"])
+    return logits[:, 0].astype(jnp.float32), EncDecCaches(self_kv, cross_kv)
+
+
+def encdec_decode_step(cfg: ModelConfig, params, caches: EncDecCaches,
+                       token, pos):
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(
+        cfg.compute_dtype
+    )
+    x = x + sinusoidal(1, cfg.d_model, offset=pos)[None].astype(x.dtype)
+    positions = jnp.asarray(pos)[None]
+
+    def body(x, xs):
+        layer, cache, cross_kv = xs
+        y, nc = _dec_layer(
+            cfg, layer, x, positions, cross_kv, mode="decode",
+            cache=cache, cache_index=pos,
+        )
+        return y, nc
+
+    x, self_kv = jax.lax.scan(
+        body, x, (params["dec"], caches.self_kv, caches.cross_kv)
+    )
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["head"])
+    return logits[:, 0].astype(jnp.float32), EncDecCaches(self_kv, caches.cross_kv)
+
+
+__all__ = [
+    "dec_len",
+    "sinusoidal",
+    "encdec_init",
+    "encode",
+    "encdec_loss",
+    "encdec_prefill",
+    "encdec_decode_step",
+    "EncDecCaches",
+]

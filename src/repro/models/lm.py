@@ -1,0 +1,323 @@
+"""Causal LM (+ VLM variant): init, train loss, prefill, decode.
+
+Layer stack = period-scan (see common.py): `lax.scan` over repeats of
+the layer pattern with per-position stacked parameters + an unrolled
+tail for non-divisible depths. Caches follow the same layout: one
+stacked cache pytree per pattern position.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.ctx import constrain
+from .attention import Param, unzip
+from .blocks import block_apply, block_init, init_block_cache
+from .common import (
+    AX_EMBED,
+    AX_LAYERS,
+    AX_STATE,
+    AX_VOCAB,
+    ModelConfig,
+    rms_norm,
+)
+
+VIT_DIM = 1024  # stubbed vision/audio frontend embedding width
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _stacked_init(fn, key, n):
+    """Stack `n` independent inits of `fn(key)` along a leading axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def lm_init(cfg: ModelConfig, key) -> tuple[Any, Any]:
+    """Returns (params, axes) — axes leaves are space-separated logical
+    axis names aligned with each param's dims."""
+    cfg.validate()
+    ks = jax.random.split(key, 8)
+    tree: dict[str, Any] = {
+        "embed": Param(
+            (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02).astype(
+                cfg.param_dtype
+            ),
+            (AX_VOCAB, AX_EMBED),
+        ),
+        "final_norm": Param(jnp.zeros((cfg.d_model,), jnp.float32), (AX_EMBED,)),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = Param(
+            (jax.random.normal(ks[1], (cfg.d_model, cfg.vocab)) * 0.02).astype(
+                cfg.param_dtype
+            ),
+            (AX_EMBED, AX_VOCAB),
+        )
+    if cfg.family in ("vlm", "audio"):
+        tree["frontend_proj"] = Param(
+            (jax.random.normal(ks[2], (VIT_DIM, cfg.d_model)) * 0.02).astype(
+                cfg.param_dtype
+            ),
+            (AX_STATE, AX_EMBED),
+        )
+
+    params, axes = unzip(tree)
+    params["stack"] = {"periods": [], "tail": []}
+    axes["stack"] = {"periods": [], "tail": []}
+    for i, spec in enumerate(cfg.pattern):
+        sub = jax.random.fold_in(ks[3], i)
+
+        def only_params(k, spec=spec):
+            return unzip(block_init(cfg, spec, k))[0]
+
+        stacked = _stacked_init(only_params, sub, cfg.n_periods)
+        _, ax = unzip(block_init(cfg, spec, jax.random.PRNGKey(0)))
+        ax = jax.tree.map(lambda s: f"{AX_LAYERS} {s}".strip(), ax)
+        params["stack"]["periods"].append(stacked)
+        axes["stack"]["periods"].append(ax)
+    for t in range(cfg.n_tail):
+        spec = cfg.pattern[t % cfg.period]
+        sub = jax.random.fold_in(ks[4], t)
+        p, ax = unzip(block_init(cfg, spec, sub))
+        params["stack"]["tail"].append(p)
+        axes["stack"]["tail"].append(ax)
+    return params, axes
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree: per pattern position, stacked over periods; plus tail."""
+    periods = []
+    for i, spec in enumerate(cfg.pattern):
+        one = init_block_cache(cfg, spec, batch, max_len)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape), one
+        )
+        periods.append(stacked)
+    tail = [
+        init_block_cache(cfg, cfg.pattern[t % cfg.period], batch, max_len)
+        for t in range(cfg.n_tail)
+    ]
+    return {"periods": periods, "tail": tail}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _embed(cfg: ModelConfig, params, batch: dict) -> jax.Array:
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(
+        cfg.compute_dtype
+    )
+    if cfg.family in ("vlm", "audio") and "frontend_embeds" in batch:
+        fe = jnp.einsum(
+            "bsv,vd->bsd",
+            batch["frontend_embeds"].astype(cfg.compute_dtype),
+            params["frontend_proj"],
+        )
+        n_img = fe.shape[1]
+        x = jnp.concatenate([fe, x[:, n_img:]], axis=1)
+    return constrain(x, "batch seq embed")
+
+
+def _stack_apply(
+    cfg: ModelConfig,
+    params,
+    x: jax.Array,
+    *,
+    positions,
+    mode: str,
+    caches=None,
+    cache_index=None,
+    remat: bool = False,
+):
+    """Run the full layer stack. Returns (x, new_caches, aux_loss)."""
+    P = cfg.period
+
+    def period_body(carry, xs):
+        x, aux = carry
+        period_params, cache_slices = xs
+        new_slices = []
+        for i in range(P):
+            c = None if cache_slices is None else cache_slices[i]
+            x, nc, a = block_apply(
+                cfg,
+                cfg.pattern[i],
+                period_params[i],
+                x,
+                positions=positions,
+                mode=mode,
+                cache=c,
+                cache_index=cache_index,
+            )
+            x = constrain(x, "batch seq embed")
+            aux = aux + a
+            new_slices.append(nc)
+        ys = None if mode == "train" else tuple(new_slices)
+        return (x, aux), ys
+
+    body = period_body
+    if remat:
+        body = jax.checkpoint(
+            period_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    aux0 = jnp.zeros((), jnp.float32)
+    xs_params = tuple(params["stack"]["periods"])
+    new_period_caches = None
+    if cfg.n_periods > 0:
+        if caches is None:
+            (x, aux), _ = jax.lax.scan(
+                lambda c, xs: body(c, (xs, None)), (x, aux0), xs_params
+            )
+        else:
+            (x, aux), new_period_caches = jax.lax.scan(
+                body, (x, aux0), (xs_params, tuple(caches["periods"]))
+            )
+    else:
+        aux = aux0
+
+    new_tail = []
+    for t in range(cfg.n_tail):
+        spec = cfg.pattern[t % P]
+        c = None if caches is None else caches["tail"][t]
+        x, nc, a = block_apply(
+            cfg,
+            spec,
+            params["stack"]["tail"][t],
+            x,
+            positions=positions,
+            mode=mode,
+            cache=c,
+            cache_index=cache_index,
+        )
+        aux = aux + a
+        new_tail.append(nc)
+
+    new_caches = None
+    if mode in ("prefill", "decode"):
+        new_caches = {
+            "periods": list(new_period_caches) if new_period_caches else [],
+            "tail": new_tail,
+        }
+    return x, new_caches, aux
+
+
+def _logits(cfg: ModelConfig, params, h: jax.Array) -> jax.Array:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+def lm_loss(
+    cfg: ModelConfig,
+    params,
+    batch: dict,
+    *,
+    vocab_chunk: int = 0,
+    constrain_logits=None,
+) -> jax.Array:
+    """Next-token cross entropy; labels = tokens shifted left."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(cfg, params, batch)
+    positions = jnp.arange(S)
+    h, _, aux = _stack_apply(
+        cfg, params, x, positions=positions, mode="train",
+        remat=cfg.remat != "none",
+    )
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)],
+        axis=1,
+    )
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"].astype(jnp.float32)
+
+    def ce_of(hc, lc, mc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, w).astype(jnp.float32)
+        if constrain_logits is not None:
+            logits = constrain_logits(logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    if vocab_chunk and S > vocab_chunk:
+        n = S // vocab_chunk
+
+        def body(carry, xs):
+            hc, lc, mc = xs
+            s, c = ce_of(hc, lc, mc)
+            return (carry[0] + s, carry[1] + c), None
+
+        hs = h.reshape(B, n, vocab_chunk, -1).transpose(1, 0, 2, 3)
+        ls = labels.reshape(B, n, vocab_chunk).transpose(1, 0, 2)
+        ms = mask.reshape(B, n, vocab_chunk).transpose(1, 0, 2)
+        (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hs, ls, ms))
+    else:
+        tot, cnt = ce_of(h, labels, mask)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    n_moe = sum(s.mlp in ("moe", "moe_dense") for s in cfg.pattern)
+    if n_moe:
+        loss = loss + 0.01 * aux / jnp.maximum(
+            float(n_moe * max(cfg.n_periods, 1)), 1.0
+        )
+    return loss
+
+
+def lm_prefill(cfg: ModelConfig, params, batch: dict, max_len: int | None = None):
+    """Full-sequence prefill. Returns (last-token logits [B, V], caches)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    x = _embed(cfg, params, batch)
+    positions = jnp.arange(S)
+    caches = init_caches(cfg, B, max_len)
+    h, caches, _ = _stack_apply(
+        cfg,
+        params,
+        x,
+        positions=positions,
+        mode="prefill",
+        caches=caches,
+        cache_index=0,
+    )
+    logits = _logits(cfg, params, h[:, -1:, :])
+    return logits[:, 0, :], caches
+
+
+def lm_decode_step(cfg: ModelConfig, params, caches, token: jax.Array, pos):
+    """One decode step. token [B] int32; pos = #tokens already cached.
+    Returns (logits [B, V], new caches)."""
+    batch = {"tokens": token[:, None]}
+    x = _embed(cfg, params, batch)
+    positions = jnp.asarray(pos)[None]
+    h, caches, _ = _stack_apply(
+        cfg,
+        params,
+        x,
+        positions=positions,
+        mode="decode",
+        caches=caches,
+        cache_index=pos,
+    )
+    logits = _logits(cfg, params, h)
+    return logits[:, 0, :], caches
+
+
+__all__ = [
+    "VIT_DIM",
+    "lm_init",
+    "init_caches",
+    "lm_loss",
+    "lm_prefill",
+    "lm_decode_step",
+]

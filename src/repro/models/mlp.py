@@ -1,0 +1,320 @@
+"""Feed-forward blocks: dense SwiGLU and Mixture-of-Experts.
+
+MoE uses argsort-based token dispatch with a static per-expert capacity
+(GShard-style, but the dispatch is a gather rather than a one-hot
+matmul: the one-hot "dispatch einsum" is O(T^2 k d) FLOPs at 32k tokens
+and would dominate the expert compute itself — the sort+gather is
+memory-bound instead, which is the TPU-correct trade).
+
+Supports the zoo's three MoE shapes:
+* llama4-maverick: 128e top-1 + shared expert, alternating dense/MoE
+* arctic: 128e top-2 + parallel dense residual MLP ("moe_dense")
+* jamba: 16e top-2 every other layer
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import Param
+from .common import (
+    AX_EMBED,
+    AX_EXPERT,
+    AX_FF,
+    ModelConfig,
+    dense_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# dense SwiGLU
+# ---------------------------------------------------------------------------
+def mlp_init(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": Param(dense_init(k2, (d, f), d, dt), (AX_EMBED, AX_FF)),
+        "w_down": Param(dense_init(k3, (f, d), f, dt), (AX_FF, AX_EMBED)),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = Param(dense_init(k1, (d, f), d, dt), (AX_EMBED, AX_FF))
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    from repro.parallel.ctx import constrain
+
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, "batch seq ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def moe_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    m = cfg.moe
+    f = m.expert_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": Param(
+            dense_init(k1, (d, m.n_experts), d, jnp.float32),
+            (AX_EMBED, AX_EXPERT),
+        ),
+        # expert weights use a dedicated FSDP axis name: the giants
+        # exempt them (EP-sharded already; FSDP would re-gather them per
+        # microbatch — measured dominant collective, EXPERIMENTS.md §Perf)
+        "we_gate": Param(
+            dense_init(k2, (m.n_experts, d, f), d, dt),
+            (AX_EXPERT, "embed_moe", AX_FF),
+        ),
+        "we_up": Param(
+            dense_init(k3, (m.n_experts, d, f), d, dt),
+            (AX_EXPERT, "embed_moe", AX_FF),
+        ),
+        "we_down": Param(
+            dense_init(k4, (m.n_experts, f, d), f, dt),
+            (AX_EXPERT, AX_FF, "embed_moe"),
+        ),
+    }
+    if m.shared_expert_ff:
+        sub = jax.random.fold_in(key, 17)
+        p["shared"] = mlp_init(cfg, sub, d_ff=m.shared_expert_ff)
+    return p
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array, constrain=None):
+    """x [B, S, d] -> ([B, S, d], aux_loss).
+
+    **Row-local dispatch**: routing, argsort, capacity and the
+    gather/scatter all preserve the batch dim, so under DP sharding no
+    token ever crosses a data shard — the only cross-shard traffic is
+    the TP all-reduce of the combined output (a global-argsort dispatch
+    measured 3.8 GB/layer of all-gather on arctic; see EXPERIMENTS.md
+    §Perf). Capacity is per sequence: C = cf * S * K / E.
+
+    aux_loss is the Switch-style load-balance term E * sum(f_e * p_e).
+    Capacity-dropped tokens pass through with zero MoE contribution."""
+    from repro.parallel.ctx import constrain as ctx_constrain
+
+    B, S, d = x.shape
+    m = cfg.moe
+    E, K = m.n_experts, m.top_k
+    SK = S * K
+    if SK < E:
+        # decode / tiny-sequence regime: per-row capacity floors would
+        # pad E*C slots per row for K routed pairs (measured 6-8x decode
+        # regression on the MoE giants); a global dispatch over the
+        # whole (small) token set is cheap and exact here.
+        return _moe_apply_global(cfg, p, x)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)                      # [B, S, E]
+    gate_k, expert_k = jax.lax.top_k(gates, K)                   # [B, S, K]
+    gate_k = gate_k / jnp.maximum(
+        jnp.sum(gate_k, axis=-1, keepdims=True), 1e-9
+    )
+    f = jnp.mean(
+        jax.nn.one_hot(expert_k[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = E * jnp.sum(f * jnp.mean(gates, axis=(0, 1)))
+
+    # ---- per-row argsort dispatch with static per-row capacity ---------
+    C = max(8, int(m.capacity_factor * SK / E))
+    C = min(C, SK)
+    flat_e = expert_k.reshape(B, SK)                             # [B, SK]
+    tok_ix = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)       # [SK]
+    flat_g = gate_k.reshape(B, SK)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=1)
+    stok = jnp.take_along_axis(
+        jnp.broadcast_to(tok_ix[None], (B, SK)), order, axis=1
+    )
+    sg = jnp.take_along_axis(flat_g, order, axis=1)
+    first = jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left")
+    )(se)
+    pos_in_e = jnp.arange(SK)[None, :] - first
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)             # drop -> OOB
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, SK))
+    tok_table = (
+        jnp.full((B, E * C + 1), S, jnp.int32)
+        .at[rows, slot]
+        .set(stok, mode="drop")[:, : E * C]
+    )
+    gate_table = (
+        jnp.zeros((B, E * C + 1), jnp.float32)
+        .at[rows, slot]
+        .set(jnp.where(keep, sg, 0.0), mode="drop")[:, : E * C]
+    )
+
+    x_pad = ctx_constrain(
+        jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1),
+        "batch seq embed",
+    )
+    gathered = _batch_local_gather(x_pad, tok_table)
+    xe = gathered.reshape(B, E, C, d)
+    xe = ctx_constrain(xe, "batch expert expert_cap embed")
+    if constrain is not None:
+        xe = constrain(xe)
+
+    g = jnp.einsum("becd,edf->becf", xe, p["we_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["we_up"])
+    h = ctx_constrain(
+        jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+        "batch expert expert_cap ff",
+    )
+    ye = jnp.einsum("becf,efd->becd", h, p["we_down"])           # [B,E,C,d]
+    ye = ye * gate_table.reshape(B, E, C, 1).astype(ye.dtype)
+
+    # ---- combine: per-row scatter-add back to tokens --------------------
+    out = _batch_local_combine(ye, tok_table, S)[:, :S]
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x)
+    return out, aux
+
+
+def _moe_apply_global(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Global-argsort dispatch over all B*S tokens — the decode path
+    (B*S*K < E), where the token table is tiny and per-row capacity
+    would be pure padding."""
+    B, S, d = x.shape
+    m = cfg.moe
+    E, K = m.n_experts, m.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    gate_k, expert_k = jax.lax.top_k(gates, K)
+    gate_k = gate_k / jnp.maximum(jnp.sum(gate_k, -1, keepdims=True), 1e-9)
+    f = jnp.mean(jax.nn.one_hot(expert_k[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(f * jnp.mean(gates, axis=0))
+
+    C = max(1, min(int(m.capacity_factor * T * K / E) + 1, T))
+    flat_e = expert_k.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_g = gate_k.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, stok, sg = flat_e[order], flat_t[order], flat_g[order]
+    pos = jnp.arange(T * K) - jnp.searchsorted(se, se, side="left")
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)
+    tok_table = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(
+        stok, mode="drop")[: E * C]
+    gate_table = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, sg, 0.0), mode="drop")[: E * C]
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = xt_pad[tok_table].reshape(E, C, d)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we_down"])
+    ye = ye * gate_table.reshape(E, C, 1).astype(ye.dtype)
+    out = (
+        jnp.zeros((T + 1, d), ye.dtype)
+        .at[tok_table]
+        .add(ye.reshape(E * C, d), mode="drop")[:T]
+    ).reshape(B, S, d)
+    if "shared" in p:
+        out = out + mlp_apply(p["shared"], x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Dispatch gather/scatter with *explicit* per-shard semantics. Under a
+# sharding context these run inside shard_map over the batch axes —
+# GSPMD's auto-partitioner otherwise solves the remat-replayed gather by
+# all-gathering the full [B, S, d] token array per MoE layer (measured
+# 3.8 GB/layer on arctic; EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+def _batch_local_gather(x_pad, tok_table):
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.ctx import batch_axes_in_mesh, get_ctx
+
+    def gather(xp, tt):
+        return jnp.take_along_axis(
+            xp, tt[..., None].astype(jnp.int32), axis=1
+        )
+
+    ctx = get_ctx()
+    bd = batch_axes_in_mesh(x_pad.shape[0]) if ctx else None
+    if not bd:
+        return gather(x_pad, tok_table)
+    mesh, _ = ctx
+    return shard_map(
+        gather,
+        mesh=mesh,
+        in_specs=(P(bd, None, None), P(bd, None)),
+        out_specs=P(bd, None, None),
+        check_vma=False,
+    )(x_pad, tok_table)
+
+
+def _batch_local_combine(ye, tok_table, S):
+    """ye [B, E, C, d] (experts sharded on 'model'), tok_table [B, E*C]
+    -> [B, S+1, d] combined (psum over the expert/model axis)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.ctx import batch_axes_in_mesh, get_ctx
+
+    B, E, C, d = ye.shape
+
+    def scatter(ye_l, tt_l, e0):
+        b = ye_l.shape[0]
+        e_loc = ye_l.shape[1]
+        # local slice of the dispatch table for this expert shard
+        tt_slice = jax.lax.dynamic_slice_in_dim(
+            tt_l, e0 * e_loc * C, e_loc * C, axis=1
+        )
+        rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, e_loc * C))
+        out = (
+            jnp.zeros((b, S + 1, d), ye_l.dtype)
+            .at[rows, tt_slice]
+            .add(ye_l.reshape(b, e_loc * C, d), mode="drop")
+        )
+        return out
+
+    ctx = get_ctx()
+    bd = batch_axes_in_mesh(B) if ctx else None
+    mesh = ctx[0] if ctx else None
+    use_model = (
+        bd is not None
+        and mesh is not None
+        and "model" in mesh.axis_names
+        and E % mesh.shape["model"] == 0
+    )
+    if not bd or not use_model:
+        rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, E * C))
+        return (
+            jnp.zeros((B, S + 1, d), ye.dtype)
+            .at[rows, tok_table]
+            .add(ye.reshape(B, E * C, d), mode="drop")
+        )
+
+    def body(ye_l, tt_l):
+        e0 = jax.lax.axis_index("model")
+        partial = scatter(ye_l, tt_l, e0)
+        return jax.lax.psum(partial, "model")
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(bd, "model", None, None), P(bd, None)),
+        out_specs=P(bd, None, None),
+        check_vma=False,
+    )(ye, tok_table)
+
+
+__all__ = ["mlp_init", "mlp_apply", "moe_init", "moe_apply"]

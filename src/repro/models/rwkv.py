@@ -1,0 +1,220 @@
+"""RWKV-6 "Finch" block: data-dependent-decay time mix + channel mix.
+
+Faithful structure: token-shift interpolation with data-dependent mix
+(simplified: per-channel learned mix vectors; the low-rank "ddlerp" of
+the full release is noted in DESIGN.md), LoRA-projected decay
+w = exp(-exp(..)), the WKV6 recurrence (repro.kernels.rwkv6_scan), bonus
+u, per-head group-norm (plain RMS here), gated output, and the
+squared-ReLU channel mix. Decode carries the [B,H,N,N] WKV state and the
+one-token shift state per mixer.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_decode_step
+from .attention import Param
+from .common import (
+    AX_EMBED,
+    AX_FF,
+    AX_HEAD_DIM,
+    AX_HEADS,
+    AX_STATE,
+    ModelConfig,
+    dense_init,
+)
+
+
+class RWKVState(NamedTuple):
+    wkv: jax.Array      # [B, H, N, N] f32
+    shift_t: jax.Array  # [B, 1, d] last token (time mix)
+    shift_c: jax.Array  # [B, 1, d] last token (channel mix)
+
+
+def _dims(cfg: ModelConfig):
+    N = cfg.rwkv.head_dim
+    H = cfg.d_model // N
+    return H, N
+
+
+def rwkv_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    H, N = _dims(cfg)
+    dt = cfg.param_dtype
+    lora = max(32, d // 64)
+    ks = jax.random.split(key, 12)
+    mix = lambda k: Param(
+        jax.random.uniform(k, (5, d), jnp.float32, minval=0.0, maxval=1.0).astype(dt),
+        (AX_STATE, AX_EMBED),
+    )
+    return {
+        "mix": mix(ks[0]),  # interpolation weights for (r,k,v,w,g)
+        "wr": Param(dense_init(ks[1], (d, H, N), d, dt), (AX_EMBED, AX_HEADS, AX_HEAD_DIM)),
+        "wk": Param(dense_init(ks[2], (d, H, N), d, dt), (AX_EMBED, AX_HEADS, AX_HEAD_DIM)),
+        "wv": Param(dense_init(ks[3], (d, H, N), d, dt), (AX_EMBED, AX_HEADS, AX_HEAD_DIM)),
+        "wg": Param(dense_init(ks[4], (d, H, N), d, dt), (AX_EMBED, AX_HEADS, AX_HEAD_DIM)),
+        # decay LoRA: w = exp(-exp(base + tanh(x W1) W2))
+        "w_base": Param(
+            jnp.linspace(-6.0, -0.3, d, dtype=jnp.float32).reshape(1, d),
+            (AX_STATE, AX_EMBED),
+        ),
+        "w_lora1": Param(dense_init(ks[5], (d, lora), d, dt), (AX_EMBED, AX_STATE)),
+        "w_lora2": Param(
+            (jax.random.normal(ks[6], (lora, d)) * 0.01).astype(jnp.float32),
+            (AX_STATE, AX_EMBED),
+        ),
+        "u": Param(
+            (jax.random.normal(ks[7], (H, N)) * 0.3).astype(jnp.float32),
+            (AX_HEADS, AX_HEAD_DIM),
+        ),
+        "ln_scale": Param(jnp.zeros((H, N), jnp.float32), (AX_HEADS, AX_HEAD_DIM)),
+        "wo": Param(dense_init(ks[8], (H, N, d), d, dt), (AX_HEADS, AX_HEAD_DIM, AX_EMBED)),
+        # channel mix
+        "cmix": Param(
+            jax.random.uniform(ks[9], (2, d), jnp.float32, minval=0.0, maxval=1.0).astype(dt),
+            (AX_STATE, AX_EMBED),
+        ),
+        "ck": Param(dense_init(ks[10], (d, cfg.d_ff), d, dt), (AX_EMBED, AX_FF)),
+        "cv": Param(dense_init(ks[11], (cfg.d_ff, d), cfg.d_ff, dt), (AX_FF, AX_EMBED)),
+        "cr": Param(dense_init(jax.random.fold_in(key, 99), (d, d), d, dt), (AX_EMBED, AX_EMBED)),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    H, N = _dims(cfg)
+    return RWKVState(
+        wkv=jnp.zeros((batch, H, N, N), jnp.float32),
+        shift_t=jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+        shift_c=jnp.zeros((batch, 1, cfg.d_model), cfg.compute_dtype),
+    )
+
+
+def _token_shift(x, prev):
+    """Shift right by one; position 0 sees `prev` (zeros at seq start)."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _group_rms(x, scale, eps):
+    # x [B,S,H,N] — per-head normalisation
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale)[None, None]).astype(
+        x.dtype
+    )
+
+
+def _time_mix_inputs(cfg, p, x, shifted):
+    H, N = _dims(cfg)
+    mix = p["mix"].astype(x.dtype)  # [5, d]
+    xr, xk, xv, xw, xg = (
+        x * mix[i][None, None, :] + shifted * (1 - mix[i][None, None, :])
+        for i in range(5)
+    )
+    from repro.parallel.ctx import constrain
+
+    B, S, d = x.shape
+    hax = "batch seq heads head_dim"
+    r = constrain(jnp.einsum("bsd,dhn->bshn", xr, p["wr"]), hax)
+    k = constrain(jnp.einsum("bsd,dhn->bshn", xk, p["wk"]), hax)
+    v = constrain(jnp.einsum("bsd,dhn->bshn", xv, p["wv"]), hax)
+    g = constrain(jnp.einsum("bsd,dhn->bshn", xg, p["wg"]), hax)
+    # data-dependent decay (log-space LoRA)
+    wl = jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora1"]).astype(jnp.float32))
+    logw_in = p["w_base"][0][None, None, :] + jnp.einsum(
+        "bsl,ld->bsd", wl, p["w_lora2"]
+    )
+    w = jnp.exp(-jnp.exp(logw_in)).reshape(B, S, H, N)
+    return r, k, v, g, w
+
+
+def _channel_mix(p, xc, shifted_c, dtype):
+    cmix = p["cmix"].astype(dtype)
+    xk_c = xc * cmix[0][None, None] + shifted_c * (1 - cmix[0][None, None])
+    xr_c = xc * cmix[1][None, None] + shifted_c * (1 - cmix[1][None, None])
+    kk = jnp.einsum("bsd,df->bsf", xk_c, p["ck"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(dtype)
+    return jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr_c, p["cr"]).astype(jnp.float32)
+    ).astype(dtype) * jnp.einsum("bsf,fd->bsd", kk, p["cv"])
+
+
+def rwkv_apply(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,
+    n1,
+    n2,
+    state: Optional[RWKVState] = None,
+    *,
+    return_state: bool = False,
+):
+    """Full RWKV block on the raw residual stream:
+    x1 = x + time_mix(rms(x, n1)); out = x1 + channel_mix(rms(x1, n2))."""
+    from .common import rms_norm
+
+    B, S, d = x.shape
+    xn = rms_norm(x, n1, cfg.norm_eps)
+    prev_t = (
+        state.shift_t if state is not None else jnp.zeros((B, 1, d), x.dtype)
+    )
+    shifted = _token_shift(xn, prev_t)
+    r, k, v, g, w = _time_mix_inputs(cfg, p, xn, shifted)
+    s0 = state.wkv if state is not None else None
+    out, wkv = rwkv6_scan(
+        r, k, v, w, p["u"], s0,
+        chunk=cfg.rwkv.chunk,
+        impl="ref" if cfg.attn_impl == "ref" else "auto",
+    )
+    out = _group_rms(out, p["ln_scale"], cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(out.dtype)
+    tm = jnp.einsum("bshn,hnd->bsd", out, p["wo"])
+
+    x1 = x + tm
+    xc = rms_norm(x1, n2, cfg.norm_eps)
+    prev_c = (
+        state.shift_c if state is not None else jnp.zeros((B, 1, d), x.dtype)
+    )
+    shifted_c = _token_shift(xc, prev_c)
+    y = x1 + _channel_mix(p, xc, shifted_c, x.dtype)
+    if return_state:
+        new_state = RWKVState(
+            wkv=wkv, shift_t=xn[:, -1:, :], shift_c=xc[:, -1:, :]
+        )
+        return y, new_state
+    return y, None
+
+
+def rwkv_decode(cfg: ModelConfig, p: dict, x: jax.Array, n1, n2, state: RWKVState):
+    """One token (S=1) using the sequential recurrence."""
+    from .common import rms_norm
+
+    B, S, d = x.shape
+    xn = rms_norm(x, n1, cfg.norm_eps)
+    shifted = state.shift_t.astype(x.dtype)
+    r, k, v, g, w = _time_mix_inputs(cfg, p, xn, shifted)
+    out, wkv = rwkv6_decode_step(
+        r[:, 0], k[:, 0], v[:, 0], w[:, 0], p["u"], state.wkv
+    )
+    out = out[:, None]  # [B,1,H,N]
+    out = _group_rms(out, p["ln_scale"], cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(out.dtype)
+    tm = jnp.einsum("bshn,hnd->bsd", out, p["wo"])
+
+    x1 = x + tm
+    xc = rms_norm(x1, n2, cfg.norm_eps)
+    shifted_c = state.shift_c.astype(x.dtype)
+    y = x1 + _channel_mix(p, xc, shifted_c, x.dtype)
+    return y, RWKVState(wkv=wkv, shift_t=xn, shift_c=xc)
+
+
+__all__ = [
+    "RWKVState",
+    "rwkv_init",
+    "rwkv_apply",
+    "rwkv_decode",
+    "init_rwkv_state",
+]

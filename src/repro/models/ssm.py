@@ -1,0 +1,166 @@
+"""Mamba-1 block (jamba's sequence mixer).
+
+in_proj -> (x, z gate); short causal conv on x; data-dependent (dt, B, C)
+projections; selective scan (repro.kernels.ssm_scan); gated out_proj.
+Decode keeps two tiny states per layer: the SSM state [B, d_inner, N]
+and the conv tail [B, conv_k-1, d_inner].
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import ssm_scan, ssm_decode_step
+from .attention import Param
+from .common import AX_CONV, AX_EMBED, AX_FF, AX_STATE, ModelConfig, dense_init
+
+
+class MambaState(NamedTuple):
+    h: jax.Array        # [B, d_inner, N] f32
+    conv: jax.Array     # [B, conv_k - 1, d_inner]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.mamba.expand * cfg.d_model
+    dt_rank = cfg.mamba.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+    return d_inner, dt_rank, cfg.mamba.d_state, cfg.mamba.conv_k
+
+
+def mamba_init(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    di, dtr, N, K = _dims(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    A = -jnp.exp(
+        jax.random.uniform(
+            ks[0], (di, N), jnp.float32, minval=0.0, maxval=math.log(16.0)
+        )
+    )
+    return {
+        "in_proj": Param(
+            dense_init(ks[1], (d, 2 * di), d, dt), (AX_EMBED, AX_FF)
+        ),
+        "conv_w": Param(
+            dense_init(ks[2], (K, di), K, dt), (AX_CONV, AX_FF)
+        ),
+        "conv_b": Param(jnp.zeros((di,), dt), (AX_FF,)),
+        "x_proj": Param(
+            dense_init(ks[3], (di, dtr + 2 * N), di, dt), (AX_FF, AX_STATE)
+        ),
+        "dt_proj": Param(
+            dense_init(ks[4], (dtr, di), dtr, dt), (AX_STATE, AX_FF)
+        ),
+        "dt_bias": Param(
+            jnp.log(
+                jnp.exp(
+                    jax.random.uniform(
+                        ks[5], (di,), jnp.float32, minval=1e-3, maxval=0.1
+                    )
+                )
+                - 1.0
+            ).astype(jnp.float32),
+            (AX_FF,),
+        ),
+        "A_log": Param(jnp.log(-A), (AX_FF, AX_STATE)),
+        "D": Param(jnp.ones((di,), jnp.float32), (AX_FF,)),
+        "out_proj": Param(
+            dense_init(ks[6], (di, d), di, dt), (AX_FF, AX_EMBED)
+        ),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    di, _, N, K = _dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, di, N), jnp.float32),
+        conv=jnp.zeros((batch, K - 1, di), cfg.compute_dtype),
+    )
+
+
+def _causal_conv(x, w, b, tail=None):
+    """x [B,S,di], w [K,di] depthwise; optional tail [B,K-1,di] prefix."""
+    K = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # [B, S+K-1, di]
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b[None, None, :], xp[:, -(K - 1) :, :]
+
+
+def mamba_apply(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                       # [B, S, d]
+    state: Optional[MambaState] = None,
+    *,
+    return_state: bool = False,
+):
+    from repro.parallel.ctx import constrain
+
+    di, dtr, N, K = _dims(cfg)
+    xz = constrain(jnp.einsum("bsd,de->bse", x, p["in_proj"]), "batch seq ff")
+    xi, z = jnp.split(xz, 2, axis=-1)                 # [B,S,di] each
+    xi, conv_tail = _causal_conv(
+        xi, p["conv_w"], p["conv_b"], None if state is None else state.conv
+    )
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bse,ez->bsz", xi, p["x_proj"])
+    dt_in, B_in, C_in = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsz,ze->bse", dt_in, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(p["A_log"])
+    h0 = None if state is None else state.h
+    y, h = ssm_scan(
+        xi, dt, A, B_in, C_in, p["D"], h0,
+        chunk=cfg.mamba.chunk, impl="ref" if cfg.attn_impl == "ref" else "auto",
+    )
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if return_state:
+        return out, MambaState(h=h, conv=conv_tail)
+    return out, None
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array, state: MambaState):
+    """One-token step. x [B, 1, d] -> (y [B,1,d], new state)."""
+    di, dtr, N, K = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                  # [B,1,di]
+    window = jnp.concatenate([state.conv.astype(xi.dtype), xi], axis=1)
+    conv_out = (
+        jnp.einsum("bke,ke->be", window, p["conv_w"]) + p["conv_b"][None, :]
+    )[:, None, :]
+    xi = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bse,ez->bsz", xi, p["x_proj"])
+    dt_in, B_in, C_in = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsz,ze->bse", dt_in, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"][None, None, :]
+    )
+    A = -jnp.exp(p["A_log"])
+    y, h = ssm_decode_step(
+        xi[:, 0], dt[:, 0], A, B_in[:, 0], C_in[:, 0], p["D"], state.h
+    )
+    y = y[:, None, :] * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, MambaState(h=h, conv=window[:, 1:, :])
+
+
+__all__ = [
+    "MambaState",
+    "mamba_init",
+    "mamba_apply",
+    "mamba_decode",
+    "init_mamba_state",
+]

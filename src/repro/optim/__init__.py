@@ -1,0 +1,15 @@
+from .optimizers import (
+    OptState,
+    adafactor_init,
+    adamw_init,
+    make_optimizer,
+    warmup_cosine,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adafactor_init",
+    "make_optimizer",
+    "warmup_cosine",
+]

@@ -1,0 +1,66 @@
+"""Trace-time sharding context.
+
+Model code calls ``constrain(x, "batch seq embed")`` at key activation
+sites; when a mesh+rules context is active (set by the launcher/dry-run
+around tracing), this becomes ``with_sharding_constraint`` — otherwise a
+no-op, so single-device tests and smoke runs are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "sharding_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, act_rules):
+    token = _CTX.set((mesh, act_rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(x, axes: str):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from repro.parallel.sharding import spec_for
+
+    spec = spec_for(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def get_ctx():
+    """(mesh, act_rules) of the active sharding context, or None."""
+    return _CTX.get()
+
+
+def batch_axes_in_mesh(batch_size: int):
+    """The mesh axes the batch dim is sharded over under the active
+    context (respecting divisibility), or None if no context."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    picked = []
+    prod = 1
+    for cand in rules.get("batch", ()):
+        if cand not in mesh.axis_names:
+            continue
+        nxt = prod * mesh.shape[cand]
+        if batch_size % nxt == 0 and batch_size >= nxt:
+            picked.append(cand)
+            prod = nxt
+    return tuple(picked)
+
+
+__all__ = ["sharding_ctx", "constrain", "get_ctx", "batch_axes_in_mesh"]

@@ -1,0 +1,88 @@
+"""Pipeline parallelism (GPipe) over a mesh axis via shard_map + ppermute.
+
+For the 398–480B archs the pod axis can serve as a pipeline axis instead
+of plain DP: stage s holds layers [s*L/S, (s+1)*L/S); microbatches
+stream through with the classic GPipe schedule (M + S - 1 ticks, bubble
+fraction (S-1)/(M+S-1)). Activations cross pods once per stage boundary
+per microbatch — O(B*S_seq*d) per tick — instead of the DP gradient
+all-reduce of every parameter; for parameter-dominated steps
+(giant MoE, small global batch) that is the better trade, and
+EXPERIMENTS.md §Perf-A quantifies exactly when.
+
+`gpipe` is generic over a stage function, differentiable (grads flow
+through `ppermute`), and composes with the in-stage TP/FSDP rules: the
+shard_map maps ONLY the stage axis; `model`/`data` stay auto axes inside.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe(
+    stage_fn: Callable,
+    mesh: Mesh,
+    *,
+    stage_axis: str = "pod",
+    num_microbatches: int | None = None,
+):
+    """Build a pipelined apply: (stage_params, x) -> y.
+
+    stage_params: pytree stacked on a leading [n_stages, ...] axis
+                  (stage s's slice lives on pipeline rank s).
+    x:            [M, mb, ...] microbatches (replicated along the stage
+                  axis; other mesh axes may shard trailing dims as usual).
+    stage_fn:     (params_slice, x_mb) -> y_mb, same shape.
+    Returns y [M, mb, ...] (valid on every rank after the final bcast).
+    """
+    S = mesh.shape[stage_axis]
+
+    def pipelined(stage_params, x):
+        M = x.shape[0]
+
+        def body(params_s, x_local):
+            # params_s: this rank's stage params ([1, ...] -> squeeze)
+            params_s = jax.tree.map(lambda t: t[0], params_s)
+            s = jax.lax.axis_index(stage_axis)
+            buf = jnp.zeros_like(x_local[0])
+            outs = jnp.zeros_like(x_local)
+            fwd_perm = [(i, i + 1) for i in range(S - 1)]
+            for t in range(M + S - 1):
+                mb_ix = min(max(t, 0), M - 1)
+                x_in = jnp.where(s == 0, x_local[mb_ix], buf)
+                y = stage_fn(params_s, x_in)
+                active = (t - s >= 0) & (t - s <= M - 1)
+                y = jnp.where(active, y, 0.0)
+                # last stage retires microbatch t-(S-1)
+                out_ix = t - (S - 1)
+                if 0 <= out_ix < M:
+                    emit = jnp.where(s == S - 1, y, 0.0)
+                    outs = outs.at[out_ix].set(emit)
+                buf = jax.lax.ppermute(y, stage_axis, fwd_perm)
+            # results live on the last stage; share them with every rank
+            outs = jax.lax.psum(outs, stage_axis) - (S - 1) * 0.0
+            return outs
+
+        in_specs = (P(stage_axis), P())
+        out_specs = P()
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )(stage_params, x)
+
+    return pipelined
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+__all__ = ["gpipe", "bubble_fraction"]

@@ -1,0 +1,146 @@
+"""Logical-axis -> mesh-axis sharding rules (t5x-style, divisibility-aware).
+
+Every parameter carries a space-separated logical axis string (one name
+per dim, produced at init). Rules map logical names to an ordered
+preference of mesh axes; an assignment is dropped (replicated) when the
+dim size is not divisible by the mesh axis size or the axis is already
+taken by another dim of the same tensor. This is what lets one rule set
+drive MQA (kv=1 -> replicated) and GQA (kv=16 -> TP) alike.
+
+Parallelism styles expressed purely through rules:
+* TP  — heads/ff/expert/vocab on "model"
+* FSDP — embed (the weight dim every tensor shares) on "data"
+* EP  — expert on "model"
+* DP  — activation batch on ("pod", "data")
+* SP  — decode-time KV/context seq on "model" (kv_seq rule)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_PARAM_RULES: dict[str, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff": ("model",),
+    "expert": ("model",),
+    "embed": ("data",),          # FSDP
+    "embed_moe": ("data",),      # FSDP for expert weights (giants opt out)
+    "layers": (),
+    "conv": (),
+    "state": (),
+}
+
+DEFAULT_ACT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "expert_cap": (),
+    "embed_moe": (),
+    "kv_seq": ("model",),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "ff": ("model",),
+    "expert": ("model",),
+    "vocab": ("model",),
+    "layers": (),
+    "state": (),
+    "conv": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    param: Mapping[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_PARAM_RULES)
+    )
+    act: Mapping[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_ACT_RULES)
+    )
+
+    def override(self, *, param=None, act=None) -> "ShardingRules":
+        p = dict(self.param)
+        p.update(param or {})
+        a = dict(self.act)
+        a.update(act or {})
+        return ShardingRules(param=p, act=a)
+
+
+def spec_for(
+    shape: Sequence[int],
+    axes: str,
+    mesh: Mesh,
+    rules: Mapping[str, tuple[str, ...]],
+) -> P:
+    """Build a PartitionSpec for `shape` with logical axes `axes`."""
+    names = axes.split() if axes else []
+    if len(names) != len(shape):
+        # axes annotations must line up; treat mismatch as replicated
+        return P()
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, names):
+        picked: list[str] = []
+        prod = 1
+        # a dim may absorb several mesh axes (batch -> pod x data)
+        for cand in rules.get(name, ()):
+            if cand in used or cand not in mesh.axis_names:
+                continue
+            nxt = prod * mesh.shape[cand]
+            if dim % nxt == 0 and dim >= nxt:
+                picked.append(cand)
+                used.add(cand)
+                prod = nxt
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(axes_tree, shape_tree, mesh: Mesh, rules: ShardingRules):
+    """Tree of NamedShardings for a param tree (axes + abstract shapes)."""
+    return jax.tree.map(
+        lambda ax, sh: NamedSharding(
+            mesh, spec_for(sh.shape, ax, mesh, rules.param)
+        ),
+        axes_tree,
+        shape_tree,
+    )
+
+
+def shard_params(params, axes_tree, mesh: Mesh, rules: ShardingRules):
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    sh = param_shardings(axes_tree, shapes, mesh, rules)
+    return jax.tree.map(jax.device_put, params, sh)
+
+
+def logical_constraint(x, axes: str, mesh: Mesh | None, rules: ShardingRules):
+    """with_sharding_constraint via logical names (no-op without mesh)."""
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, mesh, rules.act)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+__all__ = [
+    "DEFAULT_PARAM_RULES",
+    "DEFAULT_ACT_RULES",
+    "ShardingRules",
+    "spec_for",
+    "param_shardings",
+    "shard_params",
+    "logical_constraint",
+]

@@ -1,0 +1,232 @@
+"""Three-term roofline from a compiled (dry-run) artifact.
+
+    compute    = HLO_FLOPs          / (chips x peak FLOP/s)
+    memory     = HLO_bytes_accessed / (chips x HBM bandwidth)
+    collective = collective_bytes   / (chips x ICI link bandwidth)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device program —
+multiplied by chip count for the global view). collective_bytes is NOT
+in cost_analysis: we parse the post-SPMD HLO (``compiled.as_text()``)
+and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from .hw import DTYPE_BYTES, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")(-start)?[\s(.]"
+)
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[total]
+    return default
+
+
+def collective_bytes_by_type(hlo_text: str, chips: int = 1) -> dict[str, Any]:
+    """Per-device wire bytes per collective kind (ring-algorithm model).
+
+    result bytes R, group size n:
+      all-gather          R (n-1)/n      (operand is R/n, gathered)
+      all-reduce          2 R (n-1)/n    (reduce-scatter + all-gather)
+      reduce-scatter      R (n-1)        (operand R*n scattered)
+      all-to-all          R (n-1)/n
+      collective-permute  R
+    Async -start/-done pairs are counted once (on -start; a bare -done's
+    paired start already matched). The -start result is a tuple
+    (operand, result); we take the last shape in the tuple.
+    """
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    counts: dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    raw: dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        if re.search(r"(" + "|".join(COLLECTIVE_OPS) + r")-done", line):
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        shape_str, op, started = m.group(1), m.group(2), m.group(3)
+        if started and shape_str.startswith("("):
+            # (operand_shapes..., result_shape) — use the last entry
+            parts = _SHAPE_RE.findall(shape_str)
+            if parts:
+                dtype, dims = parts[-1]
+                shape_str = f"{dtype}[{dims}]"
+        R = _shape_bytes(shape_str)
+        n = max(_group_size(line, chips), 1)
+        if op == "all-gather":
+            wire = R * (n - 1) / n
+        elif op == "all-reduce":
+            wire = 2.0 * R * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = R * (n - 1)
+        elif op == "all-to-all":
+            wire = R * (n - 1) / n
+        else:  # collective-permute
+            wire = R
+        out[op] += wire
+        raw[op] += R
+        counts[op] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    out["_result_bytes"] = raw  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: dict[str, Any]
+    model_flops: float            # 6*N*D (or 6*N_active*D for MoE)
+    memory_per_device: dict[str, float]
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (remat/redundancy waste)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-resource roofline this step achieves
+        on *useful* work: (model_flops / chips / peak) / bound_time."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS_BF16
+        return ideal / self.bound_time if self.bound_time else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collectives": self.collectives,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "memory_per_device": self.memory_per_device,
+        }
+
+
+def model_flops_estimate(arch_spec, shape, n_params: int) -> float:
+    """6*N*D with N = active params (MoE: routed fraction + shared)."""
+    cfg = arch_spec.model
+    from repro.launch.shapes import SHAPES
+    from repro.models.encdec import dec_len
+
+    sp = SHAPES[shape]
+    if sp.kind == "train":
+        if cfg.family == "audio":
+            tokens = sp.batch * (sp.seq + dec_len(cfg, sp.seq))
+        else:
+            tokens = sp.batch * sp.seq
+        factor = 6.0
+    elif sp.kind == "prefill":
+        tokens = sp.batch * sp.seq
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = sp.batch * 1
+        factor = 2.0
+    n_active = active_params(arch_spec, n_params)
+    return factor * n_active * tokens
+
+
+def active_params(arch_spec, n_params: int) -> float:
+    """Active-per-token parameter count (MoE discounts unused experts)."""
+    cfg = arch_spec.model
+    m = cfg.moe
+    if not m.n_experts:
+        return float(n_params)
+    # fraction of layers that are MoE; each token uses top_k experts
+    n_moe_layers = sum(
+        1
+        for i in range(cfg.n_layers)
+        if cfg.layer_spec(i).mlp in ("moe", "moe_dense")
+    )
+    per_expert = 3 * cfg.d_model * (m.expert_ff or cfg.d_ff)
+    if cfg.mlp_type == "gelu":
+        per_expert = 2 * cfg.d_model * (m.expert_ff or cfg.d_ff)
+    total_expert = n_moe_layers * m.n_experts * per_expert
+    active_expert = n_moe_layers * m.top_k * per_expert
+    return float(n_params) - total_expert + active_expert
+
+
+__all__ = [
+    "Roofline",
+    "collective_bytes_by_type",
+    "model_flops_estimate",
+    "active_params",
+    "COLLECTIVE_OPS",
+]

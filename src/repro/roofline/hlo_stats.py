@@ -1,0 +1,435 @@
+"""Static analyzer for post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop *body once* —
+useless for scan-over-layers programs (every production model here
+period-scans its stack, flash-attention KV blocks, loss vocab chunks,
+rwkv/ssm chunks). This analyzer walks the HLO text and computes, per
+executed instruction (i.e. multiplying loop bodies by their trip
+counts):
+
+* FLOPs        — dot (2*numel(result)*prod(contracting dims)) and
+                 convolution; everything else treated as 0-FLOP or
+                 1-FLOP/elem for a small elementwise set.
+* HBM bytes    — per top-level instruction: operands + results, with
+                 fusion internals ignored (they live in VMEM/registers).
+* collective wire bytes — ring-model per collective kind (see
+                 analysis.collective_bytes_by_type for the formulas),
+                 multiplied through loops like everything else.
+
+Trip counts: a scan/while condition region compares the induction
+variable against an s32 constant — we take the max s32 constant found in
+the condition computation (exact for lax.scan/fori_loop lowerings).
+Conditionals contribute the max across branches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+from typing import Optional
+
+from .hw import DTYPE_BYTES
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_OPND = re.compile(r"%([\w.\-]+)")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_ELTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "power", "negate",
+    "compare", "select", "and", "or",
+}
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shapes(text: str):
+    """All dtype[dims] shapes in a type string -> list of (dtype, [dims])."""
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        dd = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dt, dd))
+    return out
+
+
+def _numel(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _bytes(shapes) -> float:
+    return sum(_numel(d) * DTYPE_BYTES[t] for t, d in shapes)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str           # full result type string (may be tuple)
+    opcode: str
+    rest: str                  # remainder of the line after the opcode
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    shapes: dict[str, str]     # instr name -> result type string
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES}
+    )
+    coll_counts: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES}
+    )
+
+    def add(self, other: "Stats", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        for k in COLLECTIVES:
+            self.coll[k] += other.coll[k] * times
+            self.coll_counts[k] += other.coll_counts[k] * times
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+_OPCODE_RE = re.compile(
+    r"^((?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?|\(\))\s+)?"
+    r"([a-z][\w\-]*)\s*\("
+)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1), [], {})
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        parsed = _split_type_opcode(rhs)
+        if parsed is None:
+            continue
+        rtype, opcode, rest = parsed
+        operands = _OPND.findall(rest.split("),")[0]) if rest else []
+        cur.instrs.append(Instr(name, rtype, opcode, rest, operands))
+        cur.shapes[name] = rtype
+    return comps
+
+
+def _split_type_opcode(rhs: str):
+    """Split '<type> <opcode>(<rest>' handling nested tuple types."""
+    if rhs.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        rtype = rhs[: end + 1]
+        rest = rhs[end + 1 :].lstrip()
+    else:
+        tm = re.match(r"^([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+(.*)$", rhs)
+        if not tm:
+            return None
+        rtype, rest = tm.group(1), tm.group(2)
+    om = re.match(r"^([\w\-]+)\((.*)$", rest)
+    if not om:
+        return None
+    return rtype, om.group(1), om.group(2)
+
+
+def _tuple_component(type_str: str, index: int) -> str:
+    """index into a tuple type string."""
+    if not type_str.startswith("("):
+        return type_str
+    depth = 0
+    parts = []
+    buf = ""
+    for ch in type_str[1:-1]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    parts.append(buf)
+    if index < len(parts):
+        return parts[index].strip()
+    return type_str
+
+
+class HloAnalyzer:
+    def __init__(self, text: str, chips: int = 1):
+        self.comps = parse_module(text)
+        self.chips = chips
+        self._memo: dict[str, Stats] = {}
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+                if m:
+                    entry = m.group(1)
+        self.entry = entry
+
+    # ----------------------------------------------------------------- utils
+    def _trip_count(self, cond_name: str) -> int:
+        """Loop bound = the largest s32 scalar constant in the condition
+        region (exact for lax.scan / fori_loop lowerings: `iter < N`)."""
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for i in comp.instrs:
+            if i.opcode == "constant" and i.result_type.strip() == "s32[]":
+                m = re.match(r"(\d+)\)", i.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    def _operand_shapes(self, comp: Computation, instr: Instr):
+        out = []
+        for op in instr.operands:
+            t = comp.shapes.get(op)
+            if t:
+                out.extend(_parse_shapes(t))
+        return out
+
+    def _dot_flops(self, comp: Computation, instr: Instr) -> float:
+        res = _parse_shapes(instr.result_type)
+        if not res:
+            return 0.0
+        result_elems = _numel(res[0][1])
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+        lhs_name = instr.operands[0] if instr.operands else None
+        lhs_t = comp.shapes.get(lhs_name or "", "")
+        lhs_shapes = _parse_shapes(lhs_t)
+        contracted = 1
+        if m and lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for ix in m.group(1).split(","):
+                if ix and int(ix) < len(dims):
+                    contracted *= dims[int(ix)]
+        return 2.0 * result_elems * contracted
+
+    def _conv_flops(self, comp: Computation, instr: Instr) -> float:
+        res = _parse_shapes(instr.result_type)
+        ops = self._operand_shapes(comp, instr)
+        if not res or len(ops) < 2:
+            return 0.0
+        kernel = ops[1][1]
+        return 2.0 * _numel(res[0][1]) * _numel(kernel[:-1])
+
+    def _fusion_operand_bytes(
+        self, comp: Computation, instr: Instr, callee: Optional[str]
+    ) -> float:
+        """Operand bytes for a fusion, counting only the sliced region of
+        any operand the fused computation merely dynamic-slices (the
+        scan-over-layers pattern passes the whole stacked parameter array
+        into each iteration's slice fusion)."""
+        cal = self.comps.get(callee or "")
+        if cal is None:
+            return _bytes(self._operand_shapes(comp, instr))
+        # parameter index -> slice-only use size (or None = full use)
+        param_types: list[str] = []
+        uses_full: dict[str, bool] = {}
+        slice_bytes: dict[str, float] = {}
+        params: dict[str, int] = {}
+        for ci in cal.instrs:
+            if ci.opcode == "parameter":
+                mi = re.match(r"(\d+)\)", ci.rest)
+                if mi:
+                    params[ci.name] = int(mi.group(1))
+                    uses_full[ci.name] = False
+                    slice_bytes[ci.name] = 0.0
+        for ci in cal.instrs:
+            if ci.opcode == "parameter":
+                continue
+            for op in ci.operands:
+                if op not in params:
+                    continue
+                if ci.opcode in ("dynamic-slice", "slice", "gather"):
+                    slice_bytes[op] += _bytes(_parse_shapes(ci.result_type))
+                else:
+                    uses_full[op] = True
+        total = 0.0
+        for op_ix, op_name in enumerate(instr.operands):
+            t = comp.shapes.get(op_name)
+            if not t:
+                continue
+            full = _bytes(_parse_shapes(t))
+            # match operand position to callee parameter number
+            pname = next(
+                (n for n, ix in params.items() if ix == op_ix), None
+            )
+            if pname is not None and not uses_full[pname] and slice_bytes[pname]:
+                total += min(slice_bytes[pname], full)
+            else:
+                total += full
+        return total
+
+    def _collective(self, stats: Stats, instr: Instr):
+        op = instr.opcode.replace("-start", "")
+        if op not in COLLECTIVES:
+            return
+        res_type = instr.result_type
+        shapes = _parse_shapes(res_type)
+        if instr.opcode.endswith("-start") and len(shapes) > 1:
+            shapes = shapes[-1:]
+        R = _bytes(shapes)
+        m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", instr.rest)
+        if m:
+            n = len(m.group(1).split(","))
+        else:
+            m = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.rest)
+            n = int(m.group(2)) if m else self.chips
+        n = max(n, 1)
+        if op == "all-gather":
+            wire = R * (n - 1) / n
+        elif op == "all-reduce":
+            wire = 2.0 * R * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = R * (n - 1)
+        elif op == "all-to-all":
+            wire = R * (n - 1) / n
+        else:
+            wire = R
+        stats.coll[op] += wire
+        stats.coll_counts[op] += 1
+
+    # ------------------------------------------------------------------ main
+    def stats_of(self, comp_name: str) -> Stats:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        stats = Stats()
+        if comp is None:
+            return stats
+        self._memo[comp_name] = stats  # break cycles defensively
+        for instr in comp.instrs:
+            oc = instr.opcode
+            if oc.endswith("-done"):
+                continue
+            if oc == "dot":
+                stats.flops += self._dot_flops(comp, instr)
+                stats.bytes += _bytes(
+                    self._operand_shapes(comp, instr)
+                ) + _bytes(_parse_shapes(instr.result_type))
+            elif oc == "convolution":
+                stats.flops += self._conv_flops(comp, instr)
+                stats.bytes += _bytes(
+                    self._operand_shapes(comp, instr)
+                ) + _bytes(_parse_shapes(instr.result_type))
+            elif oc == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+                mb = re.search(r"body=%?([\w.\-]+)", instr.rest)
+                trips = self._trip_count(m.group(1)) if m else 1
+                if mb:
+                    stats.add(self.stats_of(mb.group(1)), times=trips)
+            elif oc == "conditional":
+                branches = re.search(
+                    r"branch_computations=\{([^}]*)\}", instr.rest
+                )
+                names = []
+                if branches:
+                    names = _OPND.findall(branches.group(1))
+                else:
+                    names = _OPND.findall(instr.rest)[len(instr.operands):]
+                if names:
+                    subs = [self.stats_of(n) for n in names]
+                    best = max(subs, key=lambda s: s.flops + s.bytes)
+                    stats.add(best)
+            elif oc in ("fusion", "call", "custom-call", "async-start"):
+                m = re.search(r"calls=%?([\w.\-]+)", instr.rest)
+                callee = m.group(1) if m else None
+                if callee:
+                    sub = self.stats_of(callee)
+                    stats.flops += sub.flops
+                    for k in COLLECTIVES:
+                        stats.coll[k] += sub.coll[k]
+                        stats.coll_counts[k] += sub.coll_counts[k]
+                # fusion HBM traffic: slice-aware operands + result
+                stats.bytes += self._fusion_operand_bytes(
+                    comp, instr, callee
+                ) + _bytes(_parse_shapes(instr.result_type))
+            elif oc in COLLECTIVES or oc.replace("-start", "") in COLLECTIVES:
+                self._collective(stats, instr)
+                stats.bytes += _bytes(_parse_shapes(instr.result_type))
+            elif oc in _ELTWISE_1FLOP:
+                res = _parse_shapes(instr.result_type)
+                if res:
+                    n = _numel(res[0][1])
+                    stats.flops += n
+                    stats.bytes += _bytes(
+                        self._operand_shapes(comp, instr)
+                    ) + _bytes(res)
+            elif oc in ("dynamic-slice", "slice", "gather", "broadcast",
+                        "iota"):
+                # reads only the sliced/produced region, not the base
+                stats.bytes += _bytes(_parse_shapes(instr.result_type))
+            elif oc == "dynamic-update-slice":
+                # in-place: read update + write the touched region
+                ops = self._operand_shapes(comp, instr)
+                upd = ops[1:2] if len(ops) > 1 else ops[:1]
+                stats.bytes += 2.0 * _bytes(upd)
+            elif oc == "scatter":
+                ops = self._operand_shapes(comp, instr)
+                upd = ops[2:3] if len(ops) > 2 else ops[-1:]
+                stats.bytes += 2.0 * _bytes(upd)
+            # `copy` excluded: while-loop carry copies are aliased
+            # in-place on TPU (no HBM round-trip)
+            elif oc in ("transpose", "concatenate", "reduce",
+                        "pad", "sort", "reverse"):
+                res = _parse_shapes(instr.result_type)
+                stats.bytes += _bytes(
+                    self._operand_shapes(comp, instr)
+                ) + _bytes(res)
+            # NOTE: `convert` is deliberately NOT counted — the CPU
+            # backend legalises bf16 dots to f32 with convert pairs that
+            # do not exist on the bf16-native TPU target.
+        return stats
+
+    def entry_stats(self) -> Stats:
+        if self.entry is None:
+            return Stats()
+        return self.stats_of(self.entry)
+
+
+def analyze_hlo(text: str, chips: int = 1) -> Stats:
+    return HloAnalyzer(text, chips=chips).entry_stats()
+
+
+__all__ = ["Stats", "HloAnalyzer", "analyze_hlo", "COLLECTIVES"]

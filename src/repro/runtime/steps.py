@@ -1,0 +1,117 @@
+"""Train / serve step factories, generic over the architecture zoo."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models import encdec as ed
+from repro.models import lm
+from repro.optim.optimizers import OptConfig, make_optimizer
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def model_init(cfg: ModelConfig, key):
+    if cfg.family == "audio":
+        return ed.encdec_init(cfg, key)
+    return lm.lm_init(cfg, key)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, vocab_chunk: int = 512):
+    if cfg.family == "audio":
+        return ed.encdec_loss(cfg, params, batch)
+    return lm.lm_loss(cfg, params, batch, vocab_chunk=vocab_chunk)
+
+
+def make_train_step(
+    cfg: ModelConfig, opt_cfg: OptConfig, microbatches: int = 1
+):
+    """Returns (init_fn(key) -> TrainState, step_fn(state, batch)).
+
+    ``microbatches > 1`` enables gradient accumulation: the global batch
+    is split along axis 0 and swept with ``lax.scan``, dividing
+    activation memory by M (the knob that fits 4k-seq training of the
+    400B-class archs into 16 GB/chip).
+    """
+    opt_init, opt_update = make_optimizer(opt_cfg)
+
+    def init_fn(key):
+        params, axes = model_init(cfg, key)
+        return TrainState(params=params, opt=opt_init(opt_cfg, params)), axes
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+
+    def step_fn(state: TrainState, batch):
+        if microbatches > 1:
+            mb = jax.tree.map(
+                lambda x: x.reshape(
+                    (microbatches, x.shape[0] // microbatches) + x.shape[1:]
+                ),
+                batch,
+            )
+
+            def acc(carry, b):
+                loss_sum, g_sum = carry
+                loss, g = grads_of(state.params, b)
+                g_sum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(a.dtype), g_sum, g
+                )
+                return (loss_sum + loss, g_sum), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (loss_sum, g_sum), _ = jax.lax.scan(acc, (0.0, g0), mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, g_sum)
+        else:
+            loss, grads = grads_of(state.params, batch)
+        p2, opt2, gnorm = opt_update(opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt2.step}
+        return TrainState(params=p2, opt=opt2), metrics
+
+    return init_fn, step_fn
+
+
+def make_serve_steps(cfg: ModelConfig):
+    """Returns (prefill_fn, decode_fn) for the architecture."""
+    if cfg.family == "audio":
+        def prefill(params, batch, max_len):
+            return ed.encdec_prefill(cfg, params, batch, max_dec=max_len)
+
+        def decode(params, caches, token, pos):
+            return ed.encdec_decode_step(cfg, params, caches, token, pos)
+    else:
+        def prefill(params, batch, max_len):
+            return lm.lm_prefill(cfg, params, batch, max_len=max_len)
+
+        def decode(params, caches, token, pos):
+            return lm.lm_decode_step(cfg, params, caches, token, pos)
+
+    return prefill, decode
+
+
+def init_serve_caches(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "audio":
+        raise NotImplementedError(
+            "whisper caches come from encdec_prefill (they embed cross-KV)"
+        )
+    return lm.init_caches(cfg, batch, max_len)
+
+
+__all__ = [
+    "TrainState",
+    "model_init",
+    "loss_fn",
+    "make_train_step",
+    "make_serve_steps",
+    "init_serve_caches",
+]

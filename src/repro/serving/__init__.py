@@ -1,0 +1,9 @@
+from .bridge import requests_to_pipelines, evaluate_policies
+from .batching import ContinuousBatcher, Request
+
+__all__ = [
+    "requests_to_pipelines",
+    "evaluate_policies",
+    "ContinuousBatcher",
+    "Request",
+]

@@ -1,0 +1,163 @@
+"""Continuous-batching serving runtime.
+
+Slot-based continuous batching (vLLM-style, adapted to fixed-shape JAX):
+a fixed pool of B sequence slots shares one KV cache; prefill fills a
+free slot, every decode step advances all live slots together. The
+admission/preemption policy (who gets a slot first, who is evicted when
+an interactive request arrives) is *chosen by replaying the trace in
+Eudoxia first* (bridge.evaluate_policies) — the paper's tool closing the
+loop on the real runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # prompt
+    max_new: int
+    interactive: bool = True
+    out: Optional[list] = None
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batcher over the functional LM API."""
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int, max_len: int,
+                 policy: str = "priority"):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.policy = policy
+        self.caches = lm.init_caches(cfg, slots, max_len)
+        self.live: list[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int32)       # per-slot next position
+        self.last_tok = np.zeros(slots, np.int32)
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.lm_decode_step(cfg, p, c, t, pos)
+        )
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+        if self.policy.startswith("priority"):
+            self.queue.sort(key=lambda r: (not r.interactive,))
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.live):
+            if r is None:
+                return i
+        return None
+
+    def _admit(self):
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None and self.policy.startswith("priority"):
+                # interactive head may preempt a batch job (Eudoxia's
+                # priority semantics, applied to slots)
+                head = self.queue[0]
+                if head.interactive:
+                    victims = [
+                        i for i, r in enumerate(self.live)
+                        if r is not None and not r.interactive
+                    ]
+                    if victims:
+                        v = victims[-1]
+                        evicted = self.live[v]
+                        self.live[v] = None
+                        # re-queue with progress kept in its token list
+                        evicted.tokens = np.concatenate(
+                            [evicted.tokens, np.asarray(evicted.out, np.int32)]
+                        )
+                        evicted.max_new -= len(evicted.out)
+                        evicted.out = []
+                        self.queue.append(evicted)
+                        slot = v
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: Request):
+        # single-sequence prefill, written into the slot of the shared cache
+        toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+        logits, cache1 = lm.lm_prefill(
+            self.cfg, self.params, {"tokens": toks}, max_len=self.max_len
+        )
+        # splice this sequence's cache into slot `slot`
+        def splice(shared, single):
+            if shared.ndim >= 2 and single.shape[0] == 1:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    shared, single.astype(shared.dtype), slot, axis=0
+                )
+            return shared
+
+        def splice_entry(shared, single):
+            return jax.tree.map(splice, shared, single)
+
+        # caches trees have leading [layers/period] axes inside; batch is
+        # axis 0 of each leaf for tail, axis 1 for stacked periods
+        def splice_leaf(shared, single):
+            if shared.ndim == single.ndim and shared.shape[1:] == single.shape[1:]:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    shared, single.astype(shared.dtype), slot, axis=0
+                )
+            # stacked periods: [P, B, ...]
+            return jax.lax.dynamic_update_slice_in_dim(
+                shared, single.astype(shared.dtype), slot, axis=1
+            )
+
+        self.caches = jax.tree.map(splice_leaf, self.caches, cache1)
+        self.live[slot] = req
+        self.pos[slot] = len(req.tokens)
+        self.last_tok[slot] = int(jnp.argmax(logits[0]))
+        req.out.append(int(self.last_tok[slot]))
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One decode step for all live slots."""
+        self._admit()
+        if not any(r is not None for r in self.live):
+            return False
+        pos = int(self.pos.max())  # uniform position (fixed-shape decode)
+        toks = jnp.asarray(self.last_tok, jnp.int32)
+        logits, self.caches = self._decode(
+            self.params, self.caches, toks, pos
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i, req in enumerate(self.live):
+            if req is None:
+                continue
+            req.out.append(int(nxt[i]))
+            self.last_tok[i] = nxt[i]
+            self.pos[i] += 1
+            if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
+                self.done.append(req)
+                self.live[i] = None
+        return True
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(self.live)) and steps < max_steps:
+            if not self.step():
+                break
+            steps += 1
+        return self.done
+
+
+__all__ = ["Request", "ContinuousBatcher"]

@@ -1,0 +1,139 @@
+"""Eudoxia <-> serving bridge: the paper's simulator as a first-class
+scheduling component of the LM serving runtime.
+
+An inference request is a two-operator pipeline in Eudoxia's terms:
+
+* prefill  — compute-bound; runtime scales ~linearly with allocated
+  compute (alpha ~ 1), RAM ~ KV cache for the prompt;
+* decode   — memory-bound sequential generation; does NOT scale with
+  extra compute (alpha ~ 0), runtime ~ new_tokens x per-token latency.
+
+``requests_to_pipelines`` converts a request trace into Eudoxia
+pipelines (priority INTERACTIVE for chat, BATCH for offline jobs);
+``evaluate_policies`` replays the trace under each candidate scheduler
+in the simulator and returns the metrics table — this is how
+``launch/serve.py`` picks its admission/preemption policy before
+touching the real cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core import (
+    Operator,
+    Pipeline,
+    Priority,
+    SimParams,
+    TICKS_PER_SECOND,
+    run,
+    workload_from_pipelines,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    arrival_s: float
+    prompt_tokens: int
+    new_tokens: int
+    interactive: bool = True
+
+
+def _kv_gb(cfg_like, tokens: int) -> float:
+    """KV-cache GB for `tokens` (per request)."""
+    L = getattr(cfg_like, "n_layers", 32)
+    kv = getattr(cfg_like, "n_kv_heads", 8)
+    hd = getattr(cfg_like, "hd", 128)
+    return 2 * L * kv * hd * tokens * 2 / 1e9
+
+
+def requests_to_pipelines(
+    requests: Sequence[ServeRequest],
+    cfg_like,
+    *,
+    prefill_tok_per_s_per_cpu: float = 4000.0,
+    decode_tok_per_s: float = 50.0,
+) -> list[Pipeline]:
+    """Map a request trace onto Eudoxia pipelines (one per request).
+
+    The CPU-scaling abstraction carries the roofline insight: prefill is
+    compute-bound (alpha=1 — more chips, faster), decode is bandwidth-
+    bound (alpha=0 — extra chips don't help a single sequence).
+    """
+    out = []
+    for i, r in enumerate(requests):
+        prefill_s = r.prompt_tokens / prefill_tok_per_s_per_cpu
+        decode_s = r.new_tokens / decode_tok_per_s
+        ram = max(_kv_gb(cfg_like, r.prompt_tokens + r.new_tokens), 0.05)
+        ops = [
+            Operator(
+                ram_gb=ram,
+                base_ticks=max(int(prefill_s * TICKS_PER_SECOND), 1),
+                alpha=1.0,
+                level=0,
+            ),
+            Operator(
+                ram_gb=ram,
+                base_ticks=max(int(decode_s * TICKS_PER_SECOND), 1),
+                alpha=0.0,
+                level=1,
+            ),
+        ]
+        out.append(
+            Pipeline(
+                pid=i,
+                priority=Priority.INTERACTIVE if r.interactive else Priority.BATCH,
+                arrival_tick=int(r.arrival_s * TICKS_PER_SECOND),
+                ops=ops,
+            )
+        )
+    return out
+
+
+def evaluate_policies(
+    requests: Sequence[ServeRequest],
+    cfg_like,
+    *,
+    duration_s: float = 10.0,
+    total_cpus: float = 64.0,
+    total_ram_gb: float = 128.0,
+    policies: Sequence[str] = ("naive", "priority", "priority_pool"),
+    num_pools: int = 2,
+) -> dict[str, dict]:
+    """Replay the trace under each scheduling policy; returns metrics."""
+    results = {}
+    for policy in policies:
+        params = SimParams(
+            duration=duration_s,
+            scheduling_algo=policy,
+            num_pools=num_pools if policy == "priority_pool" else 1,
+            total_cpus=total_cpus,
+            total_ram_gb=total_ram_gb,
+            max_pipelines=max(64, len(requests)),
+            max_containers=128,
+        )
+        pipelines = requests_to_pipelines(requests, cfg_like)
+        wl = workload_from_pipelines(pipelines, params)
+        res = run(params, workload=wl, engine="event")
+        results[policy] = res.summary()
+    return results
+
+
+def pick_policy(results: dict[str, dict], objective: str = "interactive_p99"):
+    """Choose the policy: lowest interactive latency, ties by throughput."""
+    def key(name):
+        s = results[name]
+        inter = s["per_priority"]["interactive"]
+        lat = inter["mean_latency_s"]
+        lat = float("inf") if lat != lat else lat  # NaN -> inf
+        return (lat, -s["throughput_per_s"])
+
+    return min(results, key=key)
+
+
+__all__ = [
+    "ServeRequest",
+    "requests_to_pipelines",
+    "evaluate_policies",
+    "pick_policy",
+]

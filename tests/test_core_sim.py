@@ -1,0 +1,372 @@
+"""Behavioural tests for the Eudoxia core (paper §3.2, §4.1.2 semantics)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Operator,
+    Pipeline,
+    PipeStatus,
+    Priority,
+    SimParams,
+    TICKS_PER_SECOND,
+    container_schedule,
+    generate_workload,
+    run,
+    workload_from_pipelines,
+)
+from repro.core.engine_python import container_schedule_py
+
+
+def P(**kw) -> SimParams:
+    base = dict(
+        duration=0.5,
+        waiting_ticks_mean=2000,
+        op_base_seconds_mean=0.01,
+        op_ram_gb_mean=1.0,
+        max_pipelines=64,
+        engine="event",
+    )
+    base.update(kw)
+    return SimParams(**base)
+
+
+# ---------------------------------------------------------------------------
+# Container runtime model
+# ---------------------------------------------------------------------------
+class TestContainerSchedule:
+    def _wl(self, ops, params=None):
+        params = params or P()
+        pipe = Pipeline(pid=0, priority=Priority.BATCH, arrival_tick=0, ops=ops)
+        return workload_from_pipelines([pipe], params), pipe
+
+    def test_single_op_io_bound_ignores_cpus(self):
+        ops = [Operator(ram_gb=1.0, base_ticks=1000, alpha=0.0, level=0)]
+        wl, pipe = self._wl(ops)
+        for cpus in [1.0, 4.0, 16.0]:
+            dur, oom = container_schedule(wl, 0, cpus, 8.0)
+            assert int(dur) == 1000
+            assert int(oom) == np.int32(2**31 - 1)
+
+    def test_linear_scaling(self):
+        ops = [Operator(ram_gb=1.0, base_ticks=1000, alpha=1.0, level=0)]
+        wl, _ = self._wl(ops)
+        dur4, _ = container_schedule(wl, 0, 4.0, 8.0)
+        assert int(dur4) == 250
+        dur8, _ = container_schedule(wl, 0, 8.0, 8.0)
+        assert int(dur8) == 125
+
+    def test_levels_share_cpus_and_sum(self):
+        # level 0: two parallel ops (share CPUs), level 1: one op
+        ops = [
+            Operator(ram_gb=1.0, base_ticks=800, alpha=1.0, level=0),
+            Operator(ram_gb=1.0, base_ticks=400, alpha=1.0, level=0),
+            Operator(ram_gb=1.0, base_ticks=600, alpha=1.0, level=1),
+        ]
+        wl, _ = self._wl(ops)
+        dur, _ = container_schedule(wl, 0, 4.0, 8.0)
+        # level0: c_eff=2 -> max(800/2, 400/2)=400; level1: 600/4=150
+        assert int(dur) == 550
+
+    def test_oom_at_level_start(self):
+        ops = [
+            Operator(ram_gb=1.0, base_ticks=500, alpha=0.0, level=0),
+            Operator(ram_gb=9.0, base_ticks=500, alpha=0.0, level=1),
+        ]
+        wl, _ = self._wl(ops)
+        dur, oom = container_schedule(wl, 0, 4.0, 4.0)
+        assert int(dur) == 1000
+        assert int(oom) == 500  # second level starts after 500 ticks
+        # enough RAM -> no OOM
+        _, oom2 = container_schedule(wl, 0, 4.0, 10.5)
+        assert int(oom2) == np.int32(2**31 - 1)
+
+    def test_python_mirror_matches_jax(self):
+        rng = np.random.default_rng(0)
+        params = P()
+        for _ in range(25):
+            n = int(rng.integers(1, 6))
+            lv = 0
+            ops = []
+            for j in range(n):
+                if j and rng.random() < 0.5:
+                    lv += 1
+                ops.append(
+                    Operator(
+                        ram_gb=float(rng.uniform(0.1, 6.0)),
+                        base_ticks=int(rng.integers(1, 20000)),
+                        alpha=float(rng.choice([0.0, 0.5, 1.0])),
+                        level=lv,
+                    )
+                )
+            pipe = Pipeline(0, Priority.BATCH, 0, ops)
+            wl = workload_from_pipelines([pipe], params)
+            cpus = float(rng.uniform(1, 16))
+            ram = float(rng.uniform(0.5, 20))
+            dur_j, oom_j = container_schedule(wl, 0, cpus, ram)
+            dur_p, oom_p = container_schedule_py(pipe, cpus, ram)
+            assert int(dur_j) == dur_p
+            oom_j = int(oom_j)
+            if oom_p is None:
+                assert oom_j == np.int32(2**31 - 1)
+            else:
+                assert oom_j == oom_p
+
+
+# ---------------------------------------------------------------------------
+# Scheduler semantics (paper §4.1.2)
+# ---------------------------------------------------------------------------
+def trace_pipe(pid, prio, arrive_s, ram, secs, alpha=0.0):
+    return Pipeline(
+        pid=pid,
+        priority=prio,
+        arrival_tick=int(arrive_s * TICKS_PER_SECOND),
+        ops=[
+            Operator(
+                ram_gb=ram,
+                base_ticks=int(secs * TICKS_PER_SECOND),
+                alpha=alpha,
+                level=0,
+            )
+        ],
+    )
+
+
+class TestNaive:
+    def test_serializes_and_uses_all_resources(self):
+        params = P(scheduling_algo="naive", max_pipelines=8)
+        pipes = [
+            trace_pipe(0, Priority.BATCH, 0.0, 1.0, 0.05),
+            trace_pipe(1, Priority.BATCH, 0.001, 1.0, 0.05),
+        ]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        comp = np.asarray(res.state.pipe_completion)
+        # second pipeline only starts after the first completes
+        assert comp[1] >= comp[0] + int(0.05 * TICKS_PER_SECOND)
+        assert res.summary()["done"] == 2
+
+    def test_higher_priority_jumps_queue(self):
+        params = P(scheduling_algo="naive", max_pipelines=8)
+        pipes = [
+            trace_pipe(0, Priority.BATCH, 0.0, 1.0, 0.05),
+            trace_pipe(1, Priority.BATCH, 0.001, 1.0, 0.05),
+            trace_pipe(2, Priority.INTERACTIVE, 0.002, 1.0, 0.01),
+        ]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        comp = np.asarray(res.state.pipe_completion)
+        assert comp[2] < comp[1]  # interactive scheduled before 2nd batch
+
+    def test_oom_with_everything_is_permanent_failure(self):
+        params = P(scheduling_algo="naive", total_ram_gb=4.0, max_pipelines=4)
+        pipes = [trace_pipe(0, Priority.BATCH, 0.0, 16.0, 0.05)]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        s = res.summary()
+        assert s["failed"] == 1 and s["oom_events"] == 1
+
+
+class TestPriority:
+    def test_chunk_is_ten_percent(self):
+        params = P(scheduling_algo="priority", total_cpus=16.0, total_ram_gb=32.0)
+        pipes = [trace_pipe(0, Priority.BATCH, 0.0, 1.0, 0.02, alpha=1.0)]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        # 10% of 16 CPUs = 1.6 CPUs -> 0.02s base at alpha=1 -> 0.02/1.6
+        expect = int(np.ceil(np.float32(0.02 * TICKS_PER_SECOND) / np.float32(1.6)))
+        comp = np.asarray(res.state.pipe_completion)
+        assert comp[0] == expect
+
+    def test_oom_doubling_then_success(self):
+        # needs 7GB; chunk = 3.2GB -> OOM -> 6.4 -> OOM -> 12.8 ok
+        params = P(scheduling_algo="priority", total_ram_gb=32.0)
+        pipes = [trace_pipe(0, Priority.BATCH, 0.0, 7.0, 0.01)]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        s = res.summary()
+        assert s["oom_events"] == 2
+        assert s["done"] == 1
+        last_ram = float(res.state.pipe_last_ram[0])
+        assert last_ram == pytest.approx(12.8, rel=1e-5)
+
+    def test_oom_beyond_cap_fails_to_user(self):
+        # needs 20GB > 50% cap (16GB) -> 3.2 OOM, 6.4 OOM, 12.8 OOM,
+        # 16 (cap) OOM -> permanent failure
+        params = P(scheduling_algo="priority", total_ram_gb=32.0)
+        pipes = [trace_pipe(0, Priority.BATCH, 0.0, 20.0, 0.01)]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        s = res.summary()
+        assert s["failed"] == 1
+        assert s["oom_events"] == 4
+
+    def test_preemption_of_batch_by_interactive(self):
+        # Ten batch pipelines saturate the pool (10 x 10% chunks); an
+        # interactive query arrives and must preempt exactly one of them.
+        params = P(scheduling_algo="priority", waiting_ticks_mean=100)
+        pipes = [
+            trace_pipe(i, Priority.BATCH, 0.0, 1.0, 0.2) for i in range(10)
+        ] + [trace_pipe(10, Priority.INTERACTIVE, 0.01, 1.0, 0.01)]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        s = res.summary()
+        assert s["preempt_events"] >= 1
+        comp = np.asarray(res.state.pipe_completion)
+        assert comp[10] < np.max(comp[:10])  # query beat the batch jobs
+        assert s["done"] == 11  # preempted batch still finishes
+
+    def test_preempted_pipeline_resumes_with_same_alloc(self):
+        params = P(scheduling_algo="priority", waiting_ticks_mean=100)
+        pipes = [
+            trace_pipe(i, Priority.BATCH, 0.0, 1.0, 0.05) for i in range(10)
+        ] + [trace_pipe(10, Priority.INTERACTIVE, 0.01, 1.0, 0.01)]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        preempted = np.asarray(res.state.pipe_preempts)[:10]
+        assert preempted.sum() >= 1
+        victim = int(np.argmax(preempted))
+        # resumed with the remembered 10% chunk
+        assert float(res.state.pipe_last_cpus[victim]) == pytest.approx(1.6, rel=1e-5)
+        assert int(res.state.pipe_status[victim]) == int(PipeStatus.DONE)
+
+
+class TestPriorityPool:
+    def test_spreads_across_pools(self):
+        params = P(
+            scheduling_algo="priority_pool",
+            num_pools=2,
+            total_cpus=16.0,
+            total_ram_gb=32.0,
+        )
+        pipes = [trace_pipe(i, Priority.BATCH, 0.0, 1.0, 0.05) for i in range(4)]
+        wl = workload_from_pipelines(pipes, params)
+        res = run(params, workload=wl)
+        # both pools saw some usage
+        util = np.asarray(res.state.util_cpu_s)
+        assert (util > 0).all()
+        assert res.summary()["done"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Generator + determinism
+# ---------------------------------------------------------------------------
+class TestWorkloadGenerator:
+    def test_deterministic_same_seed(self):
+        params = P(seed=7)
+        a = generate_workload(params)
+        b = generate_workload(params)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_different_seed_differs(self):
+        a = generate_workload(P(seed=1))
+        b = generate_workload(P(seed=2))
+        assert not np.array_equal(np.asarray(a.arrival), np.asarray(b.arrival))
+
+    def test_priorities_scale_sizes(self):
+        params = P(seed=3, max_pipelines=512, interactive_scale=0.1)
+        wl = generate_workload(params)
+        prio = np.asarray(wl.prio)
+        ram = np.asarray(wl.op_ram)
+        valid = np.asarray(wl.op_valid)
+        mean_batch = ram[(prio == 0)][valid[prio == 0]].mean()
+        mean_inter = ram[(prio == 2)][valid[prio == 2]].mean()
+        assert mean_inter < mean_batch
+
+    def test_full_run_deterministic(self):
+        params = P(seed=11)
+        r1 = run(params)
+        r2 = run(params)
+        np.testing.assert_array_equal(
+            np.asarray(r1.state.pipe_completion),
+            np.asarray(r2.state.pipe_completion),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Resource accounting invariants
+# ---------------------------------------------------------------------------
+class TestInvariants:
+    @pytest.mark.parametrize("algo", ["naive", "priority", "priority_pool"])
+    def test_final_resources_balance(self, algo):
+        params = P(
+            scheduling_algo=algo,
+            num_pools=2 if algo == "priority_pool" else 1,
+            duration=1.0,
+        )
+        res = run(params)
+        free = np.asarray(res.state.pool_cpu_free)
+        cap = np.asarray(res.state.pool_cpu_cap)
+        assert (free >= -1e-4).all()
+        assert (free <= cap + 1e-4).all()
+        # every RUNNING container's pipe is RUNNING and vice versa
+        st = res.state
+        running_pipes = np.asarray(st.ctr_pipe)[np.asarray(st.ctr_status) == 1]
+        for pid in running_pipes:
+            assert int(st.pipe_status[pid]) == int(PipeStatus.RUNNING)
+
+    def test_latency_nonnegative_and_bookkeeping(self):
+        params = P(duration=1.5)
+        res = run(params)
+        s = res.summary()
+        assert s["done"] + s["failed"] + s["in_flight"] == s["submitted"]
+        comp = np.asarray(res.state.pipe_completion)
+        arr = np.asarray(res.workload.arrival)
+        done = np.asarray(res.state.pipe_status) == int(PipeStatus.DONE)
+        assert (comp[done] >= arr[done]).all()
+
+
+class TestSJF:
+    """Beyond-paper scheduler registered in both engine worlds."""
+
+    def test_vector_equals_python(self):
+        for seed in (0, 3, 9):
+            params = P(
+                scheduling_algo="sjf", seed=seed, waiting_ticks_mean=800,
+            )
+            from repro.core import generate_workload
+
+            wl = generate_workload(params)
+            rv = run(params, workload=wl, engine="event")
+            rp = run(params, workload=wl, engine="python")
+            np.testing.assert_array_equal(
+                np.asarray(rv.state.pipe_completion),
+                np.asarray(rp.state.pipe_completion),
+            )
+
+    def test_prefers_small_jobs(self):
+        # one 8-op pipeline then four 1-op pipelines: SJF finishes the
+        # singletons first even though the big job arrived earlier
+        params = P(scheduling_algo="sjf", max_pipelines=8, total_ram_gb=64.0)
+        big = Pipeline(
+            pid=0, priority=Priority.BATCH, arrival_tick=0,
+            ops=[Operator(1.0, 3000, 0.0, lv) for lv in range(8)],
+        )
+        smalls = [
+            trace_pipe(i, Priority.BATCH, 0.001, 1.0, 0.01)
+            for i in range(1, 5)
+        ]
+        wl = workload_from_pipelines([big] + smalls, params)
+        res = run(params, workload=wl)
+        comp = np.asarray(res.state.pipe_completion)
+        assert (comp[1:5] < comp[0]).all()
+        assert res.summary()["done"] == 5
+
+
+class TestViz:
+    def test_viz_renders(self):
+        from repro.core.viz import (
+            latency_histogram,
+            per_priority_table,
+            timeline_csv,
+            utilization_timeline,
+        )
+
+        res = run(P(duration=0.5, op_base_seconds_mean=0.01))
+        tl = utilization_timeline(res)
+        assert "pool0 cpu" in tl and "mean" in tl
+        assert "BATCH" in per_priority_table(res)
+        csv = timeline_csv(res)
+        assert csv.startswith("t_s,pool,cpu_util,ram_util")
+        assert len(csv.splitlines()) > 10
+        assert "s |" in latency_histogram(res)

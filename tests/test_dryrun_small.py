@@ -1,0 +1,82 @@
+"""Dry-run machinery on a reduced mesh (8 fake CPU devices, subprocess —
+XLA device count is locked at first jax init so it cannot be set inside
+the main test process)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+CODE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, sys
+    import jax
+    from repro.configs.registry import get_arch
+    from repro.launch.lowering import lower_cell
+    from repro.roofline.hlo_stats import analyze_hlo
+
+    arch_name, shape, pod = sys.argv[1], sys.argv[2], sys.argv[3] == "pod"
+    arch = get_arch(arch_name)
+    # shrink to the smoke config so an 8-device compile is fast
+    import dataclasses
+    arch = dataclasses.replace(arch, model=arch.smoke, train_microbatches=2)
+    if pod:
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    else:
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+    lowered = lower_cell(arch, shape, mesh)
+    compiled = lowered.compile()
+    stats = analyze_hlo(compiled.as_text(), chips=8)
+    mem = compiled.memory_analysis()
+    print(json.dumps({
+        "flops": stats.flops,
+        "bytes": stats.bytes,
+        "coll": stats.coll_bytes,
+        "temp": getattr(mem, "temp_size_in_bytes", -1),
+    }))
+    """
+)
+
+
+def _run(arch, shape, mesh):
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", CODE, arch, shape, mesh],
+        capture_output=True, text=True, env=env, cwd=os.getcwd(),
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    return out
+
+
+@pytest.mark.parametrize(
+    "arch,shape",
+    [
+        ("gemma3_12b", "train_4k"),
+        ("jamba_1p5_large_398b", "decode_32k"),
+        ("rwkv6_7b", "train_4k"),
+        ("whisper_small", "prefill_32k"),
+        ("arctic_480b", "train_4k"),
+    ],
+)
+def test_lower_compile_smoke_single(arch, shape):
+    out = _run(arch, shape, "single")
+    assert out["flops"] > 0
+    assert out["bytes"] > 0
+
+
+@pytest.mark.parametrize("arch", ["internvl2_2b", "llama4_maverick_400b_a17b"])
+def test_lower_compile_smoke_multipod(arch):
+    out = _run(arch, "train_4k", "pod")
+    assert out["flops"] > 0
+
+
+def test_collectives_present_when_sharded():
+    """An FSDP+TP train step must emit collectives on an 8-way mesh."""
+    out = _run("gemma3_12b", "train_4k", "single")
+    assert out["coll"] > 0

@@ -1,0 +1,115 @@
+"""Property tests: the three engines implement one semantics.
+
+The event-skip engine is the headline optimisation over the paper's
+tick-per-iteration design; these tests are the evidence that the
+optimisation is semantics-preserving (EXPERIMENTS.md §Perf).
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import SimParams, generate_workload, run
+
+COMPARE_FIELDS = [
+    "pipe_status",
+    "pipe_completion",
+    "pipe_fails",
+    "pipe_preempts",
+    "done_count",
+    "failed_count",
+    "oom_events",
+    "preempt_events",
+]
+
+
+def _params(seed, algo, num_pools, waiting_mean, ram_mean, duration=0.05):
+    return SimParams(
+        duration=duration,
+        seed=seed,
+        scheduling_algo=algo,
+        num_pools=num_pools,
+        waiting_ticks_mean=waiting_mean,
+        op_base_seconds_mean=0.005,
+        op_base_seconds_sigma=1.0,
+        op_ram_gb_mean=ram_mean,
+        max_pipelines=32,
+        max_containers=32,
+    )
+
+
+def _assert_states_equal(a, b, ctx=""):
+    for f in COMPARE_FIELDS:
+        x = np.asarray(getattr(a, f))
+        y = np.asarray(getattr(b, f))
+        np.testing.assert_array_equal(x, y, err_msg=f"{ctx}: field {f}")
+    # float accumulators agree loosely (different summation orders)
+    np.testing.assert_allclose(
+        np.asarray(a.util_cpu_s), np.asarray(b.util_cpu_s), rtol=1e-3, atol=1e-4
+    )
+
+
+@settings(
+    max_examples=15,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    seed=st.integers(0, 2**16),
+    algo=st.sampled_from(["naive", "priority", "priority_pool"]),
+    num_pools=st.integers(1, 3),
+    waiting_mean=st.sampled_from([200.0, 800.0, 3000.0]),
+    ram_mean=st.sampled_from([0.5, 2.0, 6.0]),
+)
+def test_event_equals_python(seed, algo, num_pools, waiting_mean, ram_mean):
+    """Event-skip compiled engine == reference Python engine, exactly."""
+    params = _params(seed, algo, num_pools, waiting_mean, ram_mean)
+    wl = generate_workload(params)
+    r_event = run(params, workload=wl, engine="event")
+    r_python = run(params, workload=wl, engine="python")
+    _assert_states_equal(
+        r_event.state, r_python.state, ctx=f"{algo}/s{seed}/p{num_pools}"
+    )
+
+
+@settings(
+    max_examples=6,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    seed=st.integers(0, 2**16),
+    algo=st.sampled_from(["naive", "priority"]),
+)
+def test_tick_equals_event(seed, algo):
+    """Paper-faithful tick engine == event-skip engine (short horizon —
+    the tick engine really does run one iteration per 10 us tick)."""
+    params = _params(seed, algo, 1, 300.0, 2.0, duration=0.02)
+    wl = generate_workload(params)
+    r_tick = run(params, workload=wl, engine="tick")
+    r_event = run(params, workload=wl, engine="event")
+    _assert_states_equal(r_tick.state, r_event.state, ctx=f"{algo}/s{seed}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    algo=st.sampled_from(["naive", "priority", "priority_pool"]),
+)
+def test_conservation_properties(seed, algo):
+    """System invariants hold for arbitrary seeds."""
+    params = _params(seed, algo, 2 if algo == "priority_pool" else 1, 500.0, 3.0)
+    res = run(params, engine="event")
+    st_ = res.state
+    free_c = np.asarray(st_.pool_cpu_free)
+    cap_c = np.asarray(st_.pool_cpu_cap)
+    assert (free_c >= -1e-3).all() and (free_c <= cap_c + 1e-3).all()
+    free_r = np.asarray(st_.pool_ram_free)
+    cap_r = np.asarray(st_.pool_ram_cap)
+    assert (free_r >= -1e-3).all() and (free_r <= cap_r + 1e-3).all()
+    s = res.summary()
+    assert s["done"] + s["failed"] + s["in_flight"] == s["submitted"]
+    assert 0.0 <= s["cpu_utilization"] <= 1.0 + 1e-6
+    # a pipeline is never both done and running
+    status = np.asarray(st_.pipe_status)
+    live_pipes = np.asarray(st_.ctr_pipe)[np.asarray(st_.ctr_status) == 1]
+    assert not np.isin(live_pipes, np.where(status == 5)[0]).any()

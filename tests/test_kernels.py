@@ -1,0 +1,224 @@
+"""Per-kernel validation: Pallas (interpret=True) and chunked-jnp paths
+vs. the pure-jnp oracles, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref, mha_reference
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+from repro.kernels.rwkv6_scan.ops import _rwkv6_chunked, rwkv6_decode_step
+from repro.kernels.rwkv6_scan.ref import rwkv6_ref
+from repro.kernels.sim_tick.kernel import fleet_tick_kernel
+from repro.kernels.sim_tick.ref import fleet_tick_ref
+from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
+from repro.kernels.ssm_scan.ops import _ssm_chunked, ssm_decode_step
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+TOL = dict(rtol=2e-2, atol=2e-2)       # bf16 inputs
+TOL32 = dict(rtol=2e-4, atol=2e-4)     # f32 inputs
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,causal,window,bq,bk",
+    [
+        (1, 64, 2, 2, 32, True, 0, 16, 16),
+        (2, 128, 4, 2, 64, True, 0, 32, 64),
+        (2, 128, 4, 1, 64, False, 0, 64, 32),     # MQA
+        (1, 256, 8, 4, 32, True, 64, 64, 64),     # sliding window
+        (1, 96, 2, 2, 32, True, 0, 32, 32),       # ragged: S % block != 0
+    ],
+)
+def test_flash_kernel_matches_reference(B, S, H, KV, D, causal, window, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    ref = mha_reference(q, k, v, causal=causal, window=window)
+    out = flash_attention_kernel(
+        q, k, v, causal=causal, window=window, block_q=bq, block_k=bk,
+        interpret=True,
+    )
+    tol = TOL32 if dtype == jnp.float32 else TOL
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    s=st.sampled_from([32, 64, 160]),
+    h=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 16]),
+)
+def test_flash_ref_property(s, h, g, d, causal, window):
+    """Blocked flash-style reference == naive softmax attention."""
+    kv = max(h // g, 1)
+    h = kv * g
+    ks = jax.random.split(jax.random.PRNGKey(s * h + d), 3)
+    q = jax.random.normal(ks[0], (1, s, h, d))
+    k = jax.random.normal(ks[1], (1, s, kv, d))
+    v = jax.random.normal(ks[2], (1, s, kv, d))
+    a = mha_reference(q, k, v, causal=causal, window=window)
+    b = flash_attention_ref(q, k, v, causal=causal, window=window, block_k=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL32)
+
+
+def test_flash_decode_path_with_kv_len():
+    """q_offset + kv_len (decode) against a sliced naive reference."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    S, used = 64, 40
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k = jax.random.normal(ks[1], (2, S, 2, 32))
+    v = jax.random.normal(ks[2], (2, S, 2, 32))
+    out = flash_attention_ref(
+        q, k, v, causal=True, q_offset=used - 1, kv_len=used, block_k=16
+    )
+    ref = mha_reference(q, k[:, :used], v[:, :used], causal=True, q_offset=used - 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL32)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+def _rwkv_inputs(key, B, S, H, N, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (B, S, H, N), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, N), dtype) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, N), dtype)
+    x = jax.random.uniform(ks[3], (B, S, H, N), minval=-3.0, maxval=1.0)
+    w = jnp.exp(-jnp.exp(x)).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, N)) * 0.3).astype(dtype)
+    s0 = jax.random.normal(ks[5], (B, H, N, N), jnp.float32) * 0.1
+    return r, k, v, w, u, s0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,N,chunk", [(1, 32, 2, 8, 8), (2, 64, 3, 16, 16), (1, 48, 1, 32, 16)])
+def test_rwkv6_chunked_and_kernel(B, S, H, N, chunk, dtype):
+    r, k, v, w, u, s0 = _rwkv_inputs(jax.random.PRNGKey(1), B, S, H, N, dtype)
+    o_ref, S_ref = rwkv6_ref(r, k, v, w, u, s0)
+    o_c, S_c = _rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    o_k, S_k = rwkv6_scan_kernel(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    tol = TOL32 if dtype == jnp.float32 else TOL
+    np.testing.assert_allclose(
+        np.asarray(o_c, np.float32), np.asarray(o_ref, np.float32), **tol
+    )
+    np.testing.assert_allclose(
+        np.asarray(o_k, np.float32), np.asarray(o_ref, np.float32), **tol
+    )
+    np.testing.assert_allclose(np.asarray(S_c), np.asarray(S_ref), **TOL32)
+    np.testing.assert_allclose(np.asarray(S_k), np.asarray(S_ref), **TOL32)
+
+
+def test_rwkv6_decode_consistency():
+    r, k, v, w, u, s0 = _rwkv_inputs(jax.random.PRNGKey(2), 2, 33, 2, 8)
+    o_full, S_full = rwkv6_ref(r, k, v, w, u, s0)
+    _, S_prefix = rwkv6_ref(
+        r[:, :-1], k[:, :-1], v[:, :-1], w[:, :-1], u, s0
+    )
+    o_d, S_d = rwkv6_decode_step(
+        r[:, -1], k[:, -1], v[:, -1], w[:, -1], u, S_prefix
+    )
+    np.testing.assert_allclose(
+        np.asarray(o_d), np.asarray(o_full[:, -1]), **TOL32
+    )
+    np.testing.assert_allclose(np.asarray(S_d), np.asarray(S_full), **TOL32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 100), chunk=st.sampled_from([4, 8, 16]))
+def test_rwkv6_chunk_invariance(seed, chunk):
+    """Output must not depend on the chunk size (pure perf knob)."""
+    r, k, v, w, u, s0 = _rwkv_inputs(jax.random.PRNGKey(seed), 1, 32, 2, 8)
+    o_a, S_a = _rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    o_b, S_b = _rwkv6_chunked(r, k, v, w, u, s0, chunk=32)
+    np.testing.assert_allclose(np.asarray(o_a), np.asarray(o_b), **TOL32)
+    np.testing.assert_allclose(np.asarray(S_a), np.asarray(S_b), **TOL32)
+
+
+# ---------------------------------------------------------------------------
+# ssm (mamba)
+# ---------------------------------------------------------------------------
+def _ssm_inputs(key, B, S, dim, N):
+    ks = jax.random.split(key, 7)
+    x = jax.random.normal(ks[0], (B, S, dim))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, dim)) - 1)
+    A = -jnp.exp(jax.random.normal(ks[2], (dim, N)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    D = jax.random.normal(ks[5], (dim,))
+    h0 = jax.random.normal(ks[6], (B, dim, N)) * 0.1
+    return x, dt, A, Bm, Cm, D, h0
+
+
+@pytest.mark.parametrize(
+    "B,S,dim,N,chunk,bd", [(1, 32, 8, 4, 8, 8), (2, 64, 16, 8, 16, 8), (1, 128, 8, 4, 32, 4)]
+)
+def test_ssm_chunked_and_kernel(B, S, dim, N, chunk, bd):
+    x, dt, A, Bm, Cm, D, h0 = _ssm_inputs(jax.random.PRNGKey(3), B, S, dim, N)
+    y_ref, h_ref = ssm_scan_ref(x, dt, A, Bm, Cm, D, h0)
+    y_c, h_c = _ssm_chunked(x, dt, A, Bm, Cm, D, h0, chunk=chunk)
+    y_k, h_k = ssm_scan_kernel(
+        x, dt, A, Bm, Cm, D, h0, chunk=chunk, block_dim=bd, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_ref), **TOL32)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), **TOL32)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_ref), **TOL32)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_ref), **TOL32)
+
+
+def test_ssm_decode_consistency():
+    x, dt, A, Bm, Cm, D, h0 = _ssm_inputs(jax.random.PRNGKey(4), 2, 17, 8, 4)
+    y_full, h_full = ssm_scan_ref(x, dt, A, Bm, Cm, D, h0)
+    _, h_prefix = ssm_scan_ref(
+        x[:, :-1], dt[:, :-1], A, Bm[:, :-1], Cm[:, :-1], D, h0
+    )
+    y_d, h_d = ssm_decode_step(
+        x[:, -1], dt[:, -1], A, Bm[:, -1], Cm[:, -1], D, h_prefix
+    )
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_full[:, -1]), **TOL32)
+    np.testing.assert_allclose(np.asarray(h_d), np.asarray(h_full), **TOL32)
+
+
+# ---------------------------------------------------------------------------
+# sim_tick
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    F=st.sampled_from([4, 8, 16]),
+    MC=st.sampled_from([8, 32]),
+    NP=st.integers(1, 4),
+)
+def test_fleet_tick_kernel_matches_ref(seed, F, MC, NP):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    status = jax.random.randint(ks[0], (F, MC), 0, 2)
+    end = jax.random.randint(ks[1], (F, MC), 0, 100)
+    oom = jnp.where(
+        jax.random.bernoulli(ks[2], 0.3, (F, MC)),
+        jax.random.randint(ks[3], (F, MC), 0, 100),
+        jnp.int32(2**31 - 1),
+    )
+    cpus = jax.random.uniform(ks[4], (F, MC)) * 4
+    ram = jax.random.uniform(ks[5], (F, MC)) * 8
+    pool = jax.random.randint(ks[6], (F, MC), 0, NP)
+    tick = (jnp.arange(F, dtype=jnp.int32) * 7) % 100
+    ref = fleet_tick_ref(status, end, oom, cpus, ram, pool, tick, num_pools=NP)
+    out = fleet_tick_kernel(
+        status, end, oom, cpus, ram, pool, tick, num_pools=NP,
+        block_fleet=4, interpret=True,
+    )
+    for a, b in zip(ref, out):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-6
+        )

@@ -1,0 +1,117 @@
+"""Property tests for the divisibility-aware sharding rules."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (
+    DEFAULT_ACT_RULES,
+    DEFAULT_PARAM_RULES,
+    ShardingRules,
+    spec_for,
+)
+
+
+class FakeMesh:
+    """Duck-typed mesh: only axis_names + shape are consulted."""
+
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = shape
+
+
+MESH_SINGLE = FakeMesh({"data": 16, "model": 16})
+MESH_MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _flat_axes(spec):
+    out = []
+    for e in spec:
+        if e is None:
+            continue
+        if isinstance(e, tuple):
+            out.extend(e)
+        else:
+            out.append(e)
+    return out
+
+
+class TestSpecFor:
+    def test_batch_takes_pod_and_data(self):
+        spec = spec_for((256, 4096), "batch seq", MESH_MULTI, DEFAULT_ACT_RULES)
+        assert spec == P(("pod", "data"))
+
+    def test_batch_one_replicates(self):
+        spec = spec_for((1, 4096), "batch seq", MESH_MULTI, DEFAULT_ACT_RULES)
+        assert spec == P()
+
+    def test_mqa_kv_head_replicates(self):
+        spec = spec_for(
+            (6144, 1, 128), "embed kv_heads head_dim", MESH_SINGLE,
+            DEFAULT_PARAM_RULES,
+        )
+        assert spec == P("data")  # kv=1 can't shard 16 ways
+
+    def test_gqa_kv_heads_shard_when_divisible(self):
+        spec = spec_for(
+            (5376, 16, 128), "embed kv_heads head_dim", MESH_SINGLE,
+            DEFAULT_PARAM_RULES,
+        )
+        assert spec == P("data", "model")
+
+    def test_expert_weights(self):
+        spec = spec_for(
+            (128, 7168, 4864), "expert embed_moe ff", MESH_SINGLE,
+            DEFAULT_PARAM_RULES,
+        )
+        # expert takes model; ff can't reuse it; embed_moe FSDPs on data
+        assert spec == P("model", "data")
+
+    def test_axes_mismatch_is_replicated(self):
+        assert spec_for((4, 4, 4), "embed ff", MESH_SINGLE,
+                        DEFAULT_PARAM_RULES) == P()
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        dims=st.lists(
+            st.sampled_from([1, 2, 7, 16, 56, 64, 128, 131, 4096, 262144]),
+            min_size=1, max_size=4,
+        ),
+        names=st.lists(
+            st.sampled_from(
+                ["batch", "seq", "embed", "heads", "kv_heads", "ff",
+                 "expert", "vocab", "head_dim"]
+            ),
+            min_size=1, max_size=4,
+        ),
+        multi=st.booleans(),
+        act=st.booleans(),
+    )
+    def test_invariants(self, dims, names, multi, act):
+        n = min(len(dims), len(names))
+        dims, names = dims[:n], names[:n]
+        mesh = MESH_MULTI if multi else MESH_SINGLE
+        rules = DEFAULT_ACT_RULES if act else DEFAULT_PARAM_RULES
+        spec = spec_for(tuple(dims), " ".join(names), mesh, rules)
+        flat = _flat_axes(spec)
+        # 1. no mesh axis used twice
+        assert len(flat) == len(set(flat))
+        # 2. every sharded dim is divisible by its mesh-axis product
+        for dim, entry in zip(dims, list(spec) + [None] * n):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            prod = 1
+            for a in axes:
+                prod *= mesh.shape[a]
+            assert dim % prod == 0 and dim >= prod
+        # 3. spec length never exceeds rank
+        assert len(spec) <= n
+
+    def test_override_mechanism(self):
+        rules = ShardingRules().override(param={"head_dim": ("model",),
+                                                "heads": ()})
+        spec = spec_for(
+            (5120, 40, 128), "embed heads head_dim", MESH_SINGLE, rules.param
+        )
+        assert spec == P("data", None, "model")
