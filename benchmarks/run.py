@@ -45,6 +45,17 @@ def main() -> None:
             f"_pre={r['preempt_events']}",
         )
 
+    if not args.fast:
+        print("== cache_sensitivity (data plane, EXPERIMENTS.md) ==")
+        rows = scheduler_comparison.cache_sensitivity(print_rows=False)
+        for r in rows:
+            _csv(
+                f"cache_{r['scheduler']}_{r['cache_gb_per_pool']:g}gb",
+                r["wall_s"] * 1e6,
+                f"hit={r['cache_hit_rate']}_moved={r['bytes_moved_gb']}gb"
+                f"_lat={r['mean_latency_s']}s_cold={r['cold_starts']}",
+            )
+
     print("== interleaving (paper §2.2 / Table 1) ==")
     from benchmarks import interleaving
 

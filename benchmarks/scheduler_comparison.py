@@ -1,6 +1,10 @@
 """Scheduler comparison (paper §4.1.2): the three built-ins on one
 workload mix, plus the per-priority latency view that motivates the
-priority/preemption design."""
+priority/preemption design.
+
+``cache_sensitivity`` is the data-plane scenario (EXPERIMENTS.md):
+sweep zero-copy cache capacity × {naive, priority_pool, cache_aware}
+and watch cache-aware placement convert re-runs into cache hits."""
 from __future__ import annotations
 
 import time
@@ -52,5 +56,54 @@ def main(print_rows: bool = True) -> list[dict]:
     return rows
 
 
+def cache_sensitivity(print_rows: bool = True) -> list[dict]:
+    """Cache capacity × scheduler sweep (data-plane scenario)."""
+    rows = []
+    base = SimParams(
+        duration=2.0,
+        waiting_ticks_mean=1500,
+        num_pools=2,
+        op_base_seconds_mean=0.02,
+        op_ram_gb_mean=3.0,
+        op_out_gb_mean=2.0,
+        scan_ticks_per_gb=50.0,
+        cold_start_ticks=100,
+        container_warm_ticks=50_000,
+        max_pipelines=256,
+        max_containers=64,
+        seed=11,
+    )
+    # workload generation depends only on seed + shape knobs, so every
+    # (cache, algo) cell replays the exact same arrival table
+    wl = generate_workload(base)
+    for cache_gb in (0.0, 2.0, 8.0, 32.0):
+        for algo in ("naive", "priority_pool", "cache_aware"):
+            params = base.replace(
+                scheduling_algo=algo, cache_gb_per_pool=cache_gb
+            )
+            t0 = time.time()
+            res = run(params, workload=wl, engine="event")
+            wall = time.time() - t0
+            s = res.summary()
+            row = {
+                "scheduler": algo,
+                "cache_gb_per_pool": cache_gb,
+                "done": s["done"],
+                "throughput_per_s": round(s["throughput_per_s"], 2),
+                "mean_latency_s": round(s["mean_latency_s"], 4),
+                "cache_hit_rate": round(s["cache_hit_rate"], 3),
+                "bytes_moved_gb": round(s["bytes_moved_gb"], 1),
+                "cache_hit_gb": round(s["cache_hit_gb"], 1),
+                "cold_starts": s["cold_starts"],
+                "warm_starts": s["warm_starts"],
+                "wall_s": round(wall, 3),
+            }
+            rows.append(row)
+            if print_rows:
+                print(row)
+    return rows
+
+
 if __name__ == "__main__":
     main()
+    cache_sensitivity()

@@ -28,7 +28,31 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ModuleNotFoundError:  # gate the optional dep: fall back to zlib
+    zstandard = None
+import zlib
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, level=3)
+
+
+def _decompress(payload: bytes) -> bytes:
+    # zstd frames start with magic 0xFD2FB528 (little-endian on disk);
+    # sniff it so either codec's checkpoints restore on any host.
+    if payload[:4] == b"\x28\xb5\x2f\xfd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not "
+                "installed; `pip install zstandard` to restore it"
+            )
+        return zstandard.ZstdDecompressor().decompress(payload)
+    return zlib.decompress(payload)
 
 
 def _tree_flatten_with_paths(tree):
@@ -70,8 +94,7 @@ def save_checkpoint(state: Any, directory: str | pathlib.Path, step: int,
         )
         shards[path] = _pack_array(arr)
 
-    cctx = zstandard.ZstdCompressor(level=3)
-    payload = cctx.compress(msgpack.packb(shards, use_bin_type=True))
+    payload = _compress(msgpack.packb(shards, use_bin_type=True))
     host = jax.process_index()
     (tmp / f"host_{host}.msgpack.zst").write_bytes(payload)
     (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -107,11 +130,10 @@ def restore_checkpoint(
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     d = directory / f"step_{step:08d}"
-    dctx = zstandard.ZstdDecompressor()
     shards: dict[str, dict] = {}
     for f in sorted(d.glob("host_*.msgpack.zst")):
         shards.update(
-            msgpack.unpackb(dctx.decompress(f.read_bytes()), raw=False)
+            msgpack.unpackb(_decompress(f.read_bytes()), raw=False)
         )
 
     leaves, treedef = _tree_flatten_with_paths(template)

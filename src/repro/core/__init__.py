@@ -17,7 +17,13 @@ from .scheduler import (
     register_vector_scheduler,
     register_vector_scheduler_init,
 )
-from .state import SimState, Workload, container_schedule, init_state
+from .state import (
+    SimState,
+    Workload,
+    cache_insert,
+    container_schedule,
+    init_state,
+)
 from .sweep import fleet_run, fleet_summary, make_workload_batch
 from .types import (
     Assignment,
@@ -29,7 +35,8 @@ from .types import (
     Suspension,
     TICKS_PER_SECOND,
 )
-from . import extra_schedulers  # noqa: F401 — registers 'sjf'
+# registers 'sjf' + data-plane schedulers 'cache_aware'/'locality_pool'
+from . import extra_schedulers  # noqa: F401
 from .workload import (
     generate_workload,
     load_trace,
@@ -70,6 +77,7 @@ __all__ = [
     "workload_from_trace_records",
     "load_trace",
     "container_schedule",
+    "cache_insert",
     "init_state",
     "summarize",
     "completion_table",

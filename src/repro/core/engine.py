@@ -62,7 +62,7 @@ def _tick_body(
 ):
     state = executor.process_arrivals(state, wl, tick)
     state = executor.process_releases(state, tick)
-    state = executor.process_completions(state, wl, tick)
+    state = executor.process_completions(state, wl, tick, params)
     sched_state, dec = scheduler_fn(sched_state, state, wl, params)
     state = executor.apply_decision(state, wl, dec, tick, params)
     acted = (
@@ -79,6 +79,12 @@ def _next_event(state: SimState, wl: Workload, tick: jax.Array, acted) -> jax.Ar
     arr = jnp.where(pending & (wl.arrival > tick), wl.arrival, INF_TICK)
     next_arrival = jnp.min(arr)
 
+    # ctr_end/ctr_oom include the data-plane warm-up (cold-start + scan
+    # ticks) baked in at creation, so release ticks of cold containers are
+    # accounted for here without a separate event source. Cache contents
+    # and slot warmth change only when the executor acts, never passively,
+    # so they add no event sources either (warmth *expiry* is passive, but
+    # it is only read at assignment ticks, which are always events).
     running = state.ctr_status == int(ContainerStatus.RUNNING)
     ends = jnp.where(running, jnp.minimum(state.ctr_end, state.ctr_oom), INF_TICK)
     next_retire = jnp.min(ends)

@@ -9,9 +9,7 @@ executable specification of the simulator's semantics.
 """
 from __future__ import annotations
 
-import heapq
-import math
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -39,9 +37,12 @@ EPS = 1e-5
 
 
 class Container:
-    __slots__ = ("slot", "pipe", "pool", "cpus", "ram", "start", "end", "oom")
+    __slots__ = (
+        "slot", "pipe", "pool", "cpus", "ram", "start", "end", "oom", "warm",
+    )
 
-    def __init__(self, slot, pipe, pool, cpus, ram, start, end, oom):
+    def __init__(self, slot, pipe, pool, cpus, ram, start, end, oom,
+                 warm=False):
         self.slot = slot
         self.pipe = pipe
         self.pool = pool
@@ -50,6 +51,7 @@ class Container:
         self.start = start
         self.end = end
         self.oom = oom
+        self.warm = warm  # started on a warm slot (no cold-start charge)
 
 
 class Scheduler:
@@ -77,6 +79,17 @@ class Scheduler:
         self.entered = {p.pid: INF_TICK for p in pipelines}
         self.running: dict[int, Container] = {}  # pid -> container
         self.data: dict = {}
+        # ---- data plane: per-pool zero-copy cache + warm slots ------------
+        MP, MC = params.max_pipelines, params.max_containers
+        self.cache_bytes = np.zeros((params.num_pools, MP), f32)
+        self.cache_last = np.zeros((params.num_pools, MP), np.int64)
+        self.pool_cache_used = np.zeros((params.num_pools,), f32)
+        self.slot_warm_pool = np.full((MC,), -1, np.int64)
+        self.slot_warm_until = np.zeros((MC,), np.int64)
+
+    def cached_gb(self, pool: int, pid: int) -> np.float32:
+        """Bytes of ``pid``'s intermediates resident in ``pool``'s cache."""
+        return self.cache_bytes[pool, pid]
 
     # -- queue views ------------------------------------------------------
     def waiting_pids(self) -> list[int]:
@@ -171,7 +184,31 @@ def _naive(sch: Scheduler, failures: List[Failure], new: List[Pipeline]):
     return suspends, assignments
 
 
-def _priority_like_py(sch: Scheduler, multi_pool: bool):
+def _pool_select_py(pool_mode: str, free_cpu, free_ram, sch: Scheduler, pid):
+    """numpy mirror of ``scheduler._pool_select`` (f32 op-for-op)."""
+    if pool_mode == "single":
+        return 0
+    eps = np.float32(EPS)
+    score = free_cpu / np.maximum(sch.pool_cpu_cap, eps) + (
+        free_ram / np.maximum(sch.pool_ram_cap, eps)
+    )
+    if pool_mode == "free":
+        return int(np.argmax(score))
+    row = sch.cache_bytes[:, pid]
+    if pool_mode == "cache":
+        if row.max() > 0:
+            return int(np.argmax(row))
+        return int(np.argmax(score))
+    if pool_mode == "locality":
+        from .scheduler import LOCALITY_BONUS
+
+        bonus = np.where(row > 0, np.float32(LOCALITY_BONUS), np.float32(0.0))
+        return int(np.argmax(score + bonus))
+    raise ValueError(f"unknown pool_mode {pool_mode!r}")
+
+
+def _priority_like_py(sch: Scheduler, pool_mode: str):
+    multi_pool = pool_mode != "single"
     params = sch.params
     f32 = np.float32
     K = params.max_assignments_per_tick
@@ -210,13 +247,7 @@ def _priority_like_py(sch: Scheduler, multi_pool: bool):
         else:
             want_cpu, want_ram = chunk_cpu, chunk_ram
 
-        if multi_pool:
-            score = free_cpu / np.maximum(sch.pool_cpu_cap, eps) + (
-                free_ram / np.maximum(sch.pool_ram_cap, eps)
-            )
-            pool = int(np.argmax(score))
-        else:
-            pool = 0
+        pool = _pool_select_py(pool_mode, free_cpu, free_ram, sch, pid)
         fits = free_cpu[pool] >= want_cpu - eps and free_ram[pool] >= want_ram - eps
 
         if fits:
@@ -261,7 +292,7 @@ def _priority_init(sch: Scheduler) -> None:
 
 @register_scheduler(key="priority")
 def _priority(sch: Scheduler, failures, new):
-    return _priority_like_py(sch, multi_pool=False)
+    return _priority_like_py(sch, "single")
 
 
 @register_scheduler_init(key="priority_pool")
@@ -271,7 +302,57 @@ def _priority_pool_init(sch: Scheduler) -> None:
 
 @register_scheduler(key="priority_pool")
 def _priority_pool(sch: Scheduler, failures, new):
-    return _priority_like_py(sch, multi_pool=True)
+    return _priority_like_py(sch, "free")
+
+
+# ---------------------------------------------------------------------------
+# Data-plane transitions — numpy mirrors of state.cache_insert and the
+# executor's warm-slot selection (f32 math, same association order; the
+# engine-equivalence suite checks bitwise agreement on cache state).
+# ---------------------------------------------------------------------------
+def _cache_insert_py(sch: Scheduler, pool: int, pid: int, size, tick: int,
+                     cap: float) -> None:
+    f32 = np.float32
+    cap32 = f32(cap)
+    size = f32(size)
+    if not size <= cap32:  # dataset larger than the whole cache: skip
+        return
+    row_b = sch.cache_bytes[pool]
+    row_l = sch.cache_last[pool]
+    used = sch.pool_cache_used[pool]
+    cached = row_b[pid]
+    need = f32(f32(f32(used - cached) + size) - cap32)
+    freed = f32(0.0)
+    if need > 0:
+        victims = sorted(
+            (int(row_l[j]), j)
+            for j in range(row_b.shape[0])
+            if row_b[j] > 0 and j != pid
+        )
+        for _, j in victims:
+            if not (freed < need):  # mirrors (cum - freed) < need
+                break
+            freed = f32(freed + row_b[j])
+            row_b[j] = 0.0
+            row_l[j] = 0
+    row_b[pid] = size
+    row_l[pid] = tick
+    sch.pool_cache_used[pool] = f32(f32(f32(used - freed) - cached) + size)
+
+
+def _pick_slot(free_slots, pool: int, tick: int, sch: Scheduler,
+               prefer_warm: bool) -> int:
+    """Lowest free slot, preferring warm-for-pool slots when the cold-start
+    model is on (mirrors the executor's compiled slot selection)."""
+    if prefer_warm:
+        warm = [
+            s
+            for s in free_slots
+            if sch.slot_warm_pool[s] == pool and tick < sch.slot_warm_until[s]
+        ]
+        if warm:
+            return min(warm)
+    return min(free_slots)
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +367,7 @@ def pipelines_from_workload(wl: Workload) -> List[Pipeline]:
     ram = np.asarray(wl.op_ram)
     base = np.asarray(wl.op_base)
     alpha = np.asarray(wl.op_alpha)
+    out_gb = np.asarray(wl.op_out)
     out = []
     for i in range(arrival.shape[0]):
         ops = [
@@ -294,6 +376,7 @@ def pipelines_from_workload(wl: Workload) -> List[Pipeline]:
                 base_ticks=float(base[i, j]),
                 alpha=float(alpha[i, j]),
                 level=int(level[i, j]),
+                out_gb=float(out_gb[i, j]),
             )
             for j in range(valid.shape[1])
             if valid[i, j]
@@ -321,8 +404,7 @@ def run_python_engine(params: SimParams, wl: Workload):
     MP = params.max_pipelines
     MC = params.max_containers
     NP = params.num_pools
-    free_slots = list(range(MC))
-    heapq.heapify(free_slots)
+    free_slots = set(range(MC))
     release: dict[int, int] = {}  # pid -> release tick
     completion = np.full((MP,), INF_TICK, np.int64)
     first_start = np.full((MP,), INF_TICK, np.int64)
@@ -336,6 +418,18 @@ def run_python_engine(params: SimParams, wl: Workload):
     sum_lat = 0.0
     sum_lat_prio = np.zeros((3,))
     done_prio = np.zeros((3,), np.int64)
+    # ---- data-plane metrics (f32 accumulators, assignment order — the
+    # compiled engines accumulate identically) ------------------------------
+    pipe_out = np.asarray(wl.pipe_out)
+    cache_hit_gb = np.float32(0.0)
+    bytes_moved_gb = np.float32(0.0)
+    cache_hits = cache_lookups = cold_starts = warm_starts = 0
+    cold_start_tick_total = 0
+    prefer_warm = params.cold_start_ticks > 0
+
+    def _mark_warm(c: Container, t: int) -> None:
+        sch.slot_warm_pool[c.slot] = c.pool
+        sch.slot_warm_until[c.slot] = t + params.container_warm_ticks
 
     arrivals_sorted = sorted(
         (p.arrival_tick, p.pid) for p in pipelines if p.arrival_tick < horizon
@@ -365,7 +459,8 @@ def run_python_engine(params: SimParams, wl: Workload):
                 continue
             sch.pool_cpu_free[c.pool] += c.cpus
             sch.pool_ram_free[c.pool] += c.ram
-            heapq.heappush(free_slots, c.slot)
+            free_slots.add(c.slot)
+            _mark_warm(c, tick)
             del sch.running[pid]
             p = pipelines[pid]
             if fire_oom:
@@ -403,7 +498,8 @@ def run_python_engine(params: SimParams, wl: Workload):
                 continue
             sch.pool_cpu_free[c.pool] += c.cpus
             sch.pool_ram_free[c.pool] += c.ram
-            heapq.heappush(free_slots, c.slot)
+            free_slots.add(c.slot)
+            _mark_warm(c, tick)
             sch.status[pid] = PipeStatus.SUSPENDED
             release[pid] = tick + 1
             preempts[pid] += 1
@@ -414,19 +510,47 @@ def run_python_engine(params: SimParams, wl: Workload):
             pid = a.pipeline.pid
             if sch.status[pid] != PipeStatus.WAITING or not free_slots:
                 continue
-            slot = heapq.heappop(free_slots)
+            pool = int(a.pool)
+            slot = _pick_slot(free_slots, pool, tick, sch, prefer_warm)
+            free_slots.discard(slot)
+            is_warm = bool(
+                sch.slot_warm_pool[slot] == pool
+                and tick < sch.slot_warm_until[slot]
+            )
+            cold_ticks = 0 if is_warm else params.cold_start_ticks
+            # data plane: scan whatever input bytes the pool's cache lacks
+            total_out = np.float32(pipe_out[pid])
+            cached = sch.cache_bytes[pool, pid]
+            hit_gb = np.minimum(cached, total_out)
+            miss_gb = np.maximum(np.float32(total_out - cached), np.float32(0))
+            scan_ticks = int(
+                np.ceil(np.float32(params.scan_ticks_per_gb) * miss_gb)
+            )
+            startup = cold_ticks + scan_ticks
             cpus, ram_gb = np.float32(a.cpus), np.float32(a.ram_gb)
             dur, oom_off = container_schedule_py(a.pipeline, cpus, ram_gb)
             c = Container(
                 slot,
                 pid,
-                a.pool,
+                pool,
                 cpus,
                 ram_gb,
                 tick,
-                tick + dur,
-                (tick + oom_off) if oom_off is not None else None,
+                tick + startup + dur,
+                (tick + startup + oom_off) if oom_off is not None else None,
+                warm=is_warm,
             )
+            cache_hit_gb = np.float32(cache_hit_gb + hit_gb)
+            bytes_moved_gb = np.float32(bytes_moved_gb + miss_gb)
+            cache_hits += int(hit_gb > 0)
+            cache_lookups += int(total_out > 0)
+            cold_starts += int(not is_warm)
+            warm_starts += int(is_warm)
+            cold_start_tick_total += cold_ticks
+            if params.cache_gb_per_pool > 0:
+                _cache_insert_py(
+                    sch, pool, pid, total_out, tick, params.cache_gb_per_pool
+                )
             sch.running[pid] = c
             sch.status[pid] = PipeStatus.RUNNING
             a.pipeline.last_cpus = a.cpus
@@ -501,6 +625,33 @@ def run_python_engine(params: SimParams, wl: Workload):
         ),
         pool_cpu_free=jnp.asarray(np.array(sch.pool_cpu_free, np.float32)),
         pool_ram_free=jnp.asarray(np.array(sch.pool_ram_free, np.float32)),
+        pool_cache_used=jnp.asarray(
+            np.array(sch.pool_cache_used, np.float32)
+        ),
+        cache_bytes=jnp.asarray(np.array(sch.cache_bytes, np.float32)),
+        cache_last=jnp.asarray(sch.cache_last.astype(np.int32)),
+        slot_warm_pool=jnp.asarray(sch.slot_warm_pool.astype(np.int32)),
+        slot_warm_until=jnp.asarray(
+            np.minimum(sch.slot_warm_until, INF_TICK).astype(np.int32)
+        ),
+        ctr_warm=jnp.asarray(
+            np.array(
+                [
+                    any(
+                        c.slot == s and c.warm
+                        for c in sch.running.values()
+                    )
+                    for s in range(MC)
+                ]
+            )
+        ),
+        cache_hit_gb=jnp.asarray(cache_hit_gb, jnp.float32),
+        bytes_moved_gb=jnp.asarray(bytes_moved_gb, jnp.float32),
+        cache_hits=jnp.asarray(cache_hits, jnp.int32),
+        cache_lookups=jnp.asarray(cache_lookups, jnp.int32),
+        cold_starts=jnp.asarray(cold_starts, jnp.int32),
+        warm_starts=jnp.asarray(warm_starts, jnp.int32),
+        cold_start_tick_total=jnp.asarray(cold_start_tick_total, jnp.int32),
         done_count=jnp.asarray(done_count, jnp.int32),
         failed_count=jnp.asarray(failed_count, jnp.int32),
         oom_events=jnp.asarray(oom_events, jnp.int32),

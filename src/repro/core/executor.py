@@ -9,6 +9,19 @@ event-skip engine. Order inside one tick:
 Containers compute their completion tick and (if the RAM allocation is
 insufficient) their OOM tick *at creation time*, exactly as §3.2.2
 describes, via :func:`repro.core.state.container_schedule`.
+
+Data plane (beyond the paper; cf. Bauplan, arXiv 2410.17465): at
+creation the container is additionally charged
+
+* a **cold-start latency** unless it lands on a slot kept warm by a
+  container that retired on the same pool within ``container_warm_ticks``,
+* a **data-scan cost** (``scan_ticks_per_gb``) for the pipeline's
+  intermediate bytes not resident in the pool's zero-copy cache,
+
+and the pipeline's intermediates are inserted into the pool's cache
+(LRU by last-touch tick, capacity ``cache_gb_per_pool``). Both charges
+are folded into ``ctr_end``/``ctr_oom`` at creation, so the event-skip
+engine's ``_next_event`` accounts for cold-start release ticks for free.
 """
 from __future__ import annotations
 
@@ -21,10 +34,21 @@ from .state import (
     INF_TICK,
     SimState,
     Workload,
+    cache_insert,
     container_schedule,
     used_resources,
 )
 from .types import ContainerStatus, PipeStatus, TICKS_PER_SECOND
+
+
+def _warm_until(tick: jax.Array, params: SimParams) -> jax.Array:
+    """Warmth expiry tick, saturated at INF_TICK so huge warm windows
+    ("keep slots warm forever") cannot overflow int32. Int32-safe even
+    with x64 disabled: the window is clamped to the headroom INF_TICK -
+    tick before the add. The python engine keeps these in int64 and
+    clamps at export, so the saturation preserves engine equivalence."""
+    window = jnp.int32(min(int(params.container_warm_ticks), int(INF_TICK)))
+    return tick + jnp.minimum(window, INF_TICK - tick)
 
 
 def process_arrivals(state: SimState, wl: Workload, tick: jax.Array) -> SimState:
@@ -52,7 +76,7 @@ def process_releases(state: SimState, tick: jax.Array) -> SimState:
 
 
 def process_completions(
-    state: SimState, wl: Workload, tick: jax.Array
+    state: SimState, wl: Workload, tick: jax.Array, params: SimParams
 ) -> SimState:
     """Retire containers whose OOM or completion tick has arrived."""
     running = state.ctr_status == int(ContainerStatus.RUNNING)
@@ -111,6 +135,12 @@ def process_completions(
         ctr_oom=jnp.where(retired, INF_TICK, state.ctr_oom),
         ctr_start=jnp.where(retired, INF_TICK, state.ctr_start),
         ctr_prio=jnp.where(retired, -1, state.ctr_prio),
+        # retired containers keep their slot warm on their pool for a while
+        ctr_warm=jnp.where(retired, False, state.ctr_warm),
+        slot_warm_pool=jnp.where(retired, state.ctr_pool, state.slot_warm_pool),
+        slot_warm_until=jnp.where(
+            retired, _warm_until(tick, params), state.slot_warm_until
+        ),
         pool_cpu_free=state.pool_cpu_free + freed_cpu,
         pool_ram_free=state.pool_ram_free + freed_ram,
         done_count=state.done_count + jnp.sum(done_hit).astype(jnp.int32),
@@ -157,6 +187,11 @@ def apply_decision(
         ctr_oom=jnp.where(susp, INF_TICK, state.ctr_oom),
         ctr_start=jnp.where(susp, INF_TICK, state.ctr_start),
         ctr_prio=jnp.where(susp, -1, state.ctr_prio),
+        ctr_warm=jnp.where(susp, False, state.ctr_warm),
+        slot_warm_pool=jnp.where(susp, state.ctr_pool, state.slot_warm_pool),
+        slot_warm_until=jnp.where(
+            susp, _warm_until(tick, params), state.slot_warm_until
+        ),
         pool_cpu_free=state.pool_cpu_free + freed_cpu,
         pool_ram_free=state.pool_ram_free + freed_ram,
         preempt_events=state.preempt_events + jnp.sum(susp).astype(jnp.int32),
@@ -179,19 +214,47 @@ def apply_decision(
         valid = valid & (st.pipe_status[pipe_c] == int(PipeStatus.WAITING))
         empty = st.ctr_status == int(ContainerStatus.EMPTY)
         has_slot = jnp.any(empty)
-        slot = jnp.argmax(empty).astype(jnp.int32)
-        valid = valid & has_slot
         pool = dec.assign_pool[k]
+        if params.cold_start_ticks > 0:
+            # prefer the lowest warm slot for the target pool (mirrors
+            # engine_python._pick_slot); gated on the knob so the slot
+            # order is bit-identical to pre-data-plane when it is off
+            warm_ok = (
+                empty
+                & (st.slot_warm_pool == pool)
+                & (tick < st.slot_warm_until)
+            )
+            slot = jnp.where(
+                jnp.any(warm_ok), jnp.argmax(warm_ok), jnp.argmax(empty)
+            ).astype(jnp.int32)
+        else:
+            slot = jnp.argmax(empty).astype(jnp.int32)
+        valid = valid & has_slot
+        is_warm = (st.slot_warm_pool[slot] == pool) & (
+            tick < st.slot_warm_until[slot]
+        )
+        cold_ticks = jnp.where(is_warm, 0, jnp.int32(params.cold_start_ticks))
         cpus = dec.assign_cpus[k]
         ram = dec.assign_ram[k]
+        # ---- data plane: scan inputs missing from the pool's cache ---------
+        total_out = wl.pipe_out[pipe_c]
+        cached = st.cache_bytes[pool, pipe_c]
+        hit_gb = jnp.minimum(cached, total_out)
+        miss_gb = jnp.maximum(total_out - cached, 0.0)
+        scan_ticks = jnp.ceil(
+            jnp.float32(params.scan_ticks_per_gb) * miss_gb
+        ).astype(jnp.int32)
+        startup = cold_ticks + scan_ticks
         dur, oom_off = container_schedule(wl, pipe_c, cpus, ram)
-        end = tick + dur
+        end = tick + startup + dur
         oom = jnp.where(
-            oom_off == INF_TICK, INF_TICK, tick + jnp.minimum(oom_off, dur)
+            oom_off == INF_TICK,
+            INF_TICK,
+            tick + startup + jnp.minimum(oom_off, dur),
         )
 
         def commit(st: SimState) -> SimState:
-            return st._replace(
+            st = st._replace(
                 pipe_status=st.pipe_status.at[pipe_c].set(int(PipeStatus.RUNNING)),
                 pipe_last_cpus=st.pipe_last_cpus.at[pipe_c].set(cpus),
                 pipe_last_ram=st.pipe_last_ram.at[pipe_c].set(ram),
@@ -206,9 +269,36 @@ def apply_decision(
                 ctr_end=st.ctr_end.at[slot].set(end),
                 ctr_oom=st.ctr_oom.at[slot].set(oom),
                 ctr_prio=st.ctr_prio.at[slot].set(wl.prio[pipe_c]),
+                ctr_warm=st.ctr_warm.at[slot].set(is_warm),
                 pool_cpu_free=st.pool_cpu_free.at[pool].add(-cpus),
                 pool_ram_free=st.pool_ram_free.at[pool].add(-ram),
+                cache_hit_gb=st.cache_hit_gb + hit_gb,
+                bytes_moved_gb=st.bytes_moved_gb + miss_gb,
+                cache_hits=st.cache_hits + (hit_gb > 0).astype(jnp.int32),
+                cache_lookups=st.cache_lookups
+                + (total_out > 0).astype(jnp.int32),
+                cold_starts=st.cold_starts + (~is_warm).astype(jnp.int32),
+                warm_starts=st.warm_starts + is_warm.astype(jnp.int32),
+                cold_start_tick_total=st.cold_start_tick_total + cold_ticks,
             )
+            if params.cache_gb_per_pool > 0:
+                # materialise the pipeline's intermediates in the pool's
+                # zero-copy cache (LRU-evicting under the capacity)
+                row_b, row_l, used = cache_insert(
+                    st.cache_bytes[pool],
+                    st.cache_last[pool],
+                    st.pool_cache_used[pool],
+                    pipe_c,
+                    total_out,
+                    tick,
+                    params.cache_gb_per_pool,
+                )
+                st = st._replace(
+                    cache_bytes=st.cache_bytes.at[pool].set(row_b),
+                    cache_last=st.cache_last.at[pool].set(row_l),
+                    pool_cache_used=st.pool_cache_used.at[pool].set(used),
+                )
+            return st
 
         return jax.lax.cond(valid, commit, lambda s: s, st)
 

@@ -6,6 +6,16 @@ extension path the paper's registry design enables.
   (fewest first), then priority, then arrival. Classic mean-latency
   optimiser; the custom-scheduler example showed a user-space version,
   this is the production twin with OOM-retry doubling and 25 % chunks.
+
+* **cache_aware** — the data-plane flagship: like ``priority_pool`` but
+  a pipeline whose parent outputs are resident in some pool's zero-copy
+  cache is placed on that pool, so retried/preempted pipelines re-read
+  their intermediates instead of re-scanning them (cf. Bauplan,
+  arXiv 2410.17465).
+
+* **locality_pool** — ``priority_pool`` with a locality tie-break: the
+  most-free-resources score gets a small bonus for pools already holding
+  any of the pipeline's data.
 """
 from __future__ import annotations
 
@@ -15,12 +25,14 @@ import jax
 import jax.numpy as jnp
 
 from .algorithm import register_scheduler, register_scheduler_init
-from .engine_python import Scheduler
+from .engine_python import Scheduler, _priority_like_py
 from .params import SimParams
 from .scheduler import (
     EPS,
     SchedDecision,
+    cache_aware_scheduler,
     empty_decision,
+    locality_pool_scheduler,
     register_vector_scheduler,
 )
 from .state import INF_TICK, SimState, Workload
@@ -150,4 +162,42 @@ def sjf_python(sch: Scheduler, failures: List[Failure], new: List[Pipeline]):
     return suspends, assignments
 
 
-__all__ = ["sjf_vector", "sjf_python"]
+# ---------------------------------------------------------------------------
+# Data-plane schedulers: vector implementations are produced by the
+# generalised priority machinery in scheduler.py; the Python twins reuse
+# the mirrored machinery in engine_python.py. Registered in BOTH worlds.
+# ---------------------------------------------------------------------------
+register_vector_scheduler("cache_aware")(cache_aware_scheduler)
+register_vector_scheduler("locality_pool")(locality_pool_scheduler)
+
+
+@register_scheduler_init(key="cache_aware")
+def _cache_aware_init(sch: Scheduler) -> None:
+    pass
+
+
+@register_scheduler(key="cache_aware")
+def cache_aware_python(
+    sch: Scheduler, failures: List[Failure], new: List[Pipeline]
+):
+    return _priority_like_py(sch, "cache")
+
+
+@register_scheduler_init(key="locality_pool")
+def _locality_pool_init(sch: Scheduler) -> None:
+    pass
+
+
+@register_scheduler(key="locality_pool")
+def locality_pool_python(
+    sch: Scheduler, failures: List[Failure], new: List[Pipeline]
+):
+    return _priority_like_py(sch, "locality")
+
+
+__all__ = [
+    "sjf_vector",
+    "sjf_python",
+    "cache_aware_python",
+    "locality_pool_python",
+]

@@ -62,7 +62,26 @@ def summarize(state: SimState, wl: Workload, params: SimParams) -> dict:
         "ram_utilization": util_ram / cap_ram_s if cap_ram_s else 0.0,
         "cost_dollars": float(state.cost_dollars),
         "per_priority": per_prio,
+        # ---- data plane ---------------------------------------------------
+        "cache_hit_gb": float(state.cache_hit_gb),
+        "bytes_moved_gb": float(state.bytes_moved_gb),
+        "cache_hit_rate": _cache_hit_rate(state),
+        "cache_hits": int(state.cache_hits),
+        "cache_lookups": int(state.cache_lookups),
+        "cache_resident_gb": float(np.sum(np.asarray(state.pool_cache_used))),
+        "cold_starts": int(state.cold_starts),
+        "warm_starts": int(state.warm_starts),
+        "cold_start_ticks": int(state.cold_start_tick_total),
+        "cold_start_s": float(state.cold_start_tick_total) / TICKS_PER_SECOND,
     }
+
+
+def _cache_hit_rate(state: SimState) -> float:
+    """Byte-level hit rate of the zero-copy caches (0.0 when no lookups)."""
+    hit = float(state.cache_hit_gb)
+    moved = float(state.bytes_moved_gb)
+    total = hit + moved
+    return hit / total if total > 0 else 0.0
 
 
 def completion_table(state: SimState, wl: Workload) -> np.ndarray:

@@ -14,10 +14,44 @@ from __future__ import annotations
 
 import dataclasses
 import pathlib
-import tomllib
 from typing import Any
 
 from .types import TICKS_PER_SECOND
+
+try:  # Python >= 3.11
+    import tomllib as _toml
+except ModuleNotFoundError:  # pragma: no cover - depends on interpreter
+    try:
+        import tomli as _toml  # type: ignore[no-redef]
+    except ModuleNotFoundError:
+        _toml = None
+
+
+def _toml_loads(text: str) -> dict:
+    """Parse TOML via stdlib/tomli, else a minimal ``key = value`` parser.
+
+    The fallback covers exactly the flat parameter files the paper uses
+    (§4.1.1): scalars, strings, booleans and one-level arrays.
+    """
+    if _toml is not None:
+        return _toml.loads(text)
+    import ast
+
+    out: dict[str, Any] = {}
+    for line in text.splitlines():
+        line = line.split("#", 1)[0].strip()
+        if not line or line.startswith("["):
+            continue
+        key, _, value = line.partition("=")
+        if not _:
+            raise ValueError(f"cannot parse TOML line: {line!r}")
+        value = value.strip()
+        low = value.lower()
+        if low in ("true", "false"):
+            out[key.strip()] = low == "true"
+        else:
+            out[key.strip()] = ast.literal_eval(value)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +90,22 @@ class SimParams:
     interactive_scale: float = 0.15
     query_scale: float = 0.5
 
+    # ---- data plane (intermediate datasets, caches, warm starts) -----------
+    # Per-operator output dataset size ~ LogNormal centred at
+    # ``op_out_gb_mean``; log-correlated with the op's 1-CPU runtime via
+    # ``out_runtime_corr`` (long ops tend to produce big intermediates).
+    op_out_gb_mean: float = 1.0
+    op_out_gb_sigma: float = 0.6
+    out_runtime_corr: float = 0.5
+    # Zero-copy intermediate-dataset cache per pool (Arrow-style; 0 = off).
+    cache_gb_per_pool: float = 0.0
+    # Ticks charged per GB of input data NOT resident in the pool's cache.
+    scan_ticks_per_gb: float = 0.0
+    # Ticks charged to boot a container on a cold slot (0 = off).
+    cold_start_ticks: int = 0
+    # How long a retired container keeps its slot warm on its pool.
+    container_warm_ticks: int = 20_000
+
     # ---- engine -------------------------------------------------------------
     engine: str = "event"              # "tick" | "event" | "python"
     max_containers: int = 64
@@ -67,6 +117,19 @@ class SimParams:
     @property
     def horizon_ticks(self) -> int:
         return int(round(self.duration * TICKS_PER_SECOND))
+
+    @property
+    def data_plane_active(self) -> bool:
+        """True when any data-plane cost/capacity knob is switched on.
+
+        With everything at the 0 defaults the simulator is bit-identical
+        to the pre-data-plane behaviour (backward-compat invariant the
+        test-suite checks)."""
+        return (
+            self.cache_gb_per_pool > 0
+            or self.scan_ticks_per_gb > 0
+            or self.cold_start_ticks > 0
+        )
 
     @property
     def pool_cpus(self) -> float:
@@ -82,7 +145,7 @@ class SimParams:
     # -------------------------------------------------------------------------
     @staticmethod
     def from_toml(path: str | pathlib.Path) -> "SimParams":
-        raw = tomllib.loads(pathlib.Path(path).read_text())
+        raw = _toml_loads(pathlib.Path(path).read_text())
         return SimParams.from_dict(raw)
 
     @staticmethod

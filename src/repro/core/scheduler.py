@@ -111,9 +111,42 @@ def naive_scheduler(
 
 
 # ---------------------------------------------------------------------------
-# PRIORITY / PRIORITY-POOL (paper §4.1.2).
+# PRIORITY / PRIORITY-POOL (paper §4.1.2) and the data-plane variants
+# (cache_aware / locality_pool, registered from extra_schedulers.py).
+#
+# ``pool_mode`` picks the pool-selection rule; every rule is mirrored
+# f32-op-for-op by ``engine_python._pool_select_py``:
+#   "single"   — always pool 0 (paper ``priority``)
+#   "free"     — most free resources (paper ``priority_pool``)
+#   "cache"    — pool holding the pipeline's parent outputs, else "free"
+#   "locality" — "free" score with a small bonus for pools holding any
+#                of the pipeline's data (locality tie-break)
 # ---------------------------------------------------------------------------
-def _priority_like(multi_pool: bool):
+LOCALITY_BONUS = 1e-3
+
+
+def _pool_select(pool_mode: str, free_cpu, free_ram, sim: SimState, pipe_c):
+    if pool_mode == "single":
+        return jnp.int32(0)
+    score = free_cpu / jnp.maximum(sim.pool_cpu_cap, EPS) + (
+        free_ram / jnp.maximum(sim.pool_ram_cap, EPS)
+    )
+    if pool_mode == "free":
+        return jnp.argmax(score).astype(jnp.int32)
+    row = sim.cache_bytes[:, pipe_c]  # [NP] bytes of this pipe's data
+    if pool_mode == "cache":
+        return jnp.where(
+            jnp.max(row) > 0, jnp.argmax(row), jnp.argmax(score)
+        ).astype(jnp.int32)
+    if pool_mode == "locality":
+        bonus = jnp.where(row > 0, jnp.float32(LOCALITY_BONUS), 0.0)
+        return jnp.argmax(score + bonus).astype(jnp.int32)
+    raise ValueError(f"unknown pool_mode {pool_mode!r}")
+
+
+def _priority_like(pool_mode: str):
+    multi_pool = pool_mode != "single"
+
     def scheduler(
         sched_state: Any, sim: SimState, wl: Workload, params: SimParams
     ):
@@ -161,13 +194,7 @@ def _priority_like(multi_pool: bool):
                 jnp.where(seen, sim.pipe_last_ram[pipe_c], chunk_ram),
             )
 
-            if multi_pool:
-                score = free_cpu / jnp.maximum(sim.pool_cpu_cap, EPS) + (
-                    free_ram / jnp.maximum(sim.pool_ram_cap, EPS)
-                )
-                pool = jnp.argmax(score).astype(jnp.int32)
-            else:
-                pool = jnp.int32(0)
+            pool = _pool_select(pool_mode, free_cpu, free_ram, sim, pipe_c)
 
             fits = (free_cpu[pool] >= want_cpu - EPS) & (
                 free_ram[pool] >= want_ram - EPS
@@ -191,12 +218,11 @@ def _priority_like(multi_pool: bool):
                 has_victim, live.at[victim_c].set(False), live
             )
             if multi_pool:
-                score2 = free_cpu2 / jnp.maximum(sim.pool_cpu_cap, EPS) + (
-                    free_ram2 / jnp.maximum(sim.pool_ram_cap, EPS)
-                )
-                pool2 = jnp.where(has_victim, vpool, jnp.argmax(score2)).astype(
-                    jnp.int32
-                )
+                pool2 = jnp.where(
+                    has_victim,
+                    vpool,
+                    _pool_select(pool_mode, free_cpu2, free_ram2, sim, pipe_c),
+                ).astype(jnp.int32)
             else:
                 pool2 = pool
             fits2 = (free_cpu2[pool2] >= want_cpu - EPS) & (
@@ -242,8 +268,10 @@ def _priority_like(multi_pool: bool):
     return scheduler
 
 
-priority_scheduler = _priority_like(multi_pool=False)
-priority_pool_scheduler = _priority_like(multi_pool=True)
+priority_scheduler = _priority_like("single")
+priority_pool_scheduler = _priority_like("free")
+cache_aware_scheduler = _priority_like("cache")
+locality_pool_scheduler = _priority_like("locality")
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +327,8 @@ def has_vector_scheduler(key: str) -> bool:
 register_vector_scheduler("naive")(naive_scheduler)
 register_vector_scheduler("priority")(priority_scheduler)
 register_vector_scheduler("priority_pool")(priority_pool_scheduler)
+# cache_aware / locality_pool are registered (in both worlds) from
+# extra_schedulers.py alongside their Python twins.
 
 
 __all__ = [
@@ -309,6 +339,8 @@ __all__ = [
     "naive_scheduler",
     "priority_scheduler",
     "priority_pool_scheduler",
+    "cache_aware_scheduler",
+    "locality_pool_scheduler",
     "register_vector_scheduler",
     "register_vector_scheduler_init",
     "get_vector_scheduler",

@@ -36,6 +36,11 @@ class Workload(NamedTuple):
     op_ram: jax.Array       # [MP, MO] f32 GB
     op_base: jax.Array      # [MP, MO] f32 runtime ticks at 1 CPU
     op_alpha: jax.Array     # [MP, MO] f32 CPU-scaling exponent
+    # ---- data plane: intermediate output dataset sizes -------------------
+    op_out: jax.Array       # [MP, MO] f32 GB produced by each operator
+    pipe_out: jax.Array     # [MP] f32 GB — precomputed Σ op_out per pipe
+    #   (precomputed once at generation so every engine reads identical
+    #    bits instead of re-reducing f32 arrays in engine-specific order)
 
     @property
     def max_pipelines(self) -> int:
@@ -73,12 +78,20 @@ class SimState(NamedTuple):
     ctr_end: jax.Array            # [MC] int32 completion tick
     ctr_oom: jax.Array            # [MC] int32 OOM tick (INF = will not OOM)
     ctr_prio: jax.Array           # [MC] int32 cached pipeline priority
+    # ---- containers: warm/cold status (data plane) -----------------------
+    ctr_warm: jax.Array           # [MC] bool — live container started warm
+    slot_warm_pool: jax.Array     # [MC] int32 pool kept warm in slot (-1)
+    slot_warm_until: jax.Array    # [MC] int32 warmth expiry tick
 
     # ---- pools -----------------------------------------------------------
     pool_cpu_cap: jax.Array       # [NP] f32
     pool_ram_cap: jax.Array       # [NP] f32
     pool_cpu_free: jax.Array      # [NP] f32
     pool_ram_free: jax.Array      # [NP] f32
+    # ---- pools: zero-copy intermediate-dataset cache (data plane) --------
+    pool_cache_used: jax.Array    # [NP] f32 GB resident
+    cache_bytes: jax.Array        # [NP, MP] f32 cached bytes per pipeline
+    cache_last: jax.Array         # [NP, MP] int32 LRU last-touch tick
 
     # ---- metrics ---------------------------------------------------------
     done_count: jax.Array         # [] int32
@@ -92,6 +105,14 @@ class SimState(NamedTuple):
     util_ram_s: jax.Array         # [NP] f32 ∫ used_ram dt (GB-seconds)
     cost_dollars: jax.Array       # [] f32 allocated-resource cost integral
     util_log: jax.Array           # [B, NP, 2] f32 bucketed (cpu, ram) usage-s
+    # ---- data-plane metrics ----------------------------------------------
+    cache_hit_gb: jax.Array       # [] f32 input bytes served from cache
+    bytes_moved_gb: jax.Array     # [] f32 input bytes scanned from storage
+    cache_hits: jax.Array         # [] int32 assignments with a cache hit
+    cache_lookups: jax.Array      # [] int32 assignments with any input data
+    cold_starts: jax.Array        # [] int32 containers started cold
+    warm_starts: jax.Array        # [] int32 containers reusing a warm slot
+    cold_start_tick_total: jax.Array  # [] int32 Σ cold-start ticks charged
 
     @property
     def max_containers(self) -> int:
@@ -131,10 +152,16 @@ def init_state(params: SimParams) -> SimState:
         ctr_end=jnp.full((MC,), INF_TICK, i32),
         ctr_oom=jnp.full((MC,), INF_TICK, i32),
         ctr_prio=jnp.full((MC,), -1, i32),
+        ctr_warm=jnp.zeros((MC,), bool),
+        slot_warm_pool=jnp.full((MC,), -1, i32),
+        slot_warm_until=jnp.zeros((MC,), i32),
         pool_cpu_cap=pool_cpu,
         pool_ram_cap=pool_ram,
         pool_cpu_free=pool_cpu,
         pool_ram_free=pool_ram,
+        pool_cache_used=jnp.zeros((NP,), f32),
+        cache_bytes=jnp.zeros((NP, MP), f32),
+        cache_last=jnp.zeros((NP, MP), i32),
         done_count=jnp.asarray(0, i32),
         failed_count=jnp.asarray(0, i32),
         oom_events=jnp.asarray(0, i32),
@@ -146,6 +173,13 @@ def init_state(params: SimParams) -> SimState:
         util_ram_s=jnp.zeros((NP,), f32),
         cost_dollars=jnp.asarray(0.0, f32),
         util_log=jnp.zeros((B, NP, 2), f32),
+        cache_hit_gb=jnp.asarray(0.0, f32),
+        bytes_moved_gb=jnp.asarray(0.0, f32),
+        cache_hits=jnp.asarray(0, i32),
+        cache_lookups=jnp.asarray(0, i32),
+        cold_starts=jnp.asarray(0, i32),
+        warm_starts=jnp.asarray(0, i32),
+        cold_start_tick_total=jnp.asarray(0, i32),
     )
 
 
@@ -202,6 +236,47 @@ def container_schedule(
         jnp.maximum(oom_min.astype(jnp.int32), 1),
     )
     return duration, oom_offset
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy cache transition (data plane). One pool row at a time: the
+# executor calls this per assignment. Mirrored op-for-op (f32, same
+# association order) by ``engine_python._cache_insert_py`` — engine
+# equivalence depends on the two staying in lockstep.
+# ---------------------------------------------------------------------------
+def cache_insert(
+    row_bytes: jax.Array,   # [MP] f32 cached bytes on this pool
+    row_last: jax.Array,    # [MP] int32 last-touch ticks
+    used: jax.Array,        # [] f32 pool cache occupancy
+    pipe: jax.Array,        # [] int32 pipeline whose dataset is materialised
+    size: jax.Array,        # [] f32 dataset size (GB)
+    tick: jax.Array,        # [] int32 insertion tick (becomes last-touch)
+    cap: float,             # python float — per-pool cache capacity
+):
+    """Insert ``pipe``'s intermediates, LRU-evicting (last-touch asc,
+    pipe asc) until the dataset fits. Datasets larger than the whole
+    cache are never inserted. Returns (row_bytes, row_last, used)."""
+    MP = row_bytes.shape[0]
+    cap32 = jnp.float32(cap)
+    cached = row_bytes[pipe]
+    fits_cache = size <= cap32
+    # bytes that must be freed before the (re-)insert fits
+    need = used - cached + size - cap32
+    evictable = (row_bytes > 0) & (jnp.arange(MP, dtype=jnp.int32) != pipe)
+    order = jnp.argsort(jnp.where(evictable, row_last, INF_TICK), stable=True)
+    freed_sorted = jnp.where(evictable[order], row_bytes[order], 0.0)
+    cum = jnp.cumsum(freed_sorted)
+    evict_sorted = evictable[order] & ((cum - freed_sorted) < need) & (need > 0)
+    evict = jnp.zeros((MP,), bool).at[order].set(evict_sorted)
+    freed_total = jnp.max(jnp.where(evict_sorted, cum, 0.0))
+    new_bytes = jnp.where(evict, 0.0, row_bytes).at[pipe].set(size)
+    new_last = jnp.where(evict, 0, row_last).at[pipe].set(tick)
+    new_used = used - freed_total - cached + size
+    return (
+        jnp.where(fits_cache, new_bytes, row_bytes),
+        jnp.where(fits_cache, new_last, row_last),
+        jnp.where(fits_cache, new_used, used),
+    )
 
 
 def used_resources(state: SimState):

@@ -92,7 +92,23 @@ def fleet_summary(states: SimState, params: SimParams) -> dict:
         "oom_events_mean": float(np.asarray(states.oom_events).mean()),
         "preempt_events_mean": float(np.asarray(states.preempt_events).mean()),
         "cost_dollars_mean": float(np.asarray(states.cost_dollars).mean()),
+        # ---- data plane (fleet means) -------------------------------------
+        "cache_hit_gb_mean": float(np.asarray(states.cache_hit_gb).mean()),
+        "bytes_moved_gb_mean": float(
+            np.asarray(states.bytes_moved_gb).mean()
+        ),
+        "cache_hit_rate_mean": _fleet_hit_rate(states),
+        "cold_starts_mean": float(np.asarray(states.cold_starts).mean()),
+        "warm_starts_mean": float(np.asarray(states.warm_starts).mean()),
     }
+
+
+def _fleet_hit_rate(states: SimState) -> float:
+    hit = np.asarray(states.cache_hit_gb, dtype=np.float64)
+    moved = np.asarray(states.bytes_moved_gb, dtype=np.float64)
+    total = hit + moved
+    rates = np.where(total > 0, hit / np.maximum(total, 1e-12), 0.0)
+    return float(rates.mean())
 
 
 __all__ = ["fleet_run", "fleet_summary", "make_workload_batch"]

@@ -67,6 +67,7 @@ class Operator:
     base_ticks: int        # runtime at exactly 1 CPU
     alpha: float           # CPU-scaling exponent: t(c) = base / c**alpha
     level: int             # topological depth inside the pipeline DAG
+    out_gb: float = 0.0    # intermediate output dataset size (data plane)
 
     def runtime_ticks(self, cpus: float) -> int:
         eff = max(float(cpus), 1e-6)
@@ -93,6 +94,11 @@ class Pipeline:
     @property
     def total_ram_gb(self) -> float:
         return float(sum(o.ram_gb for o in self.ops))
+
+    @property
+    def total_out_gb(self) -> float:
+        """Total intermediate dataset bytes the pipeline materialises."""
+        return float(sum(o.out_gb for o in self.ops))
 
     def level_ram(self) -> list[float]:
         if not self.ops:

@@ -17,9 +17,18 @@ the user-provided (or system default) parameters" (§3.2.1):
                           joins the previous level (parallel fan-out)
 * op RAM                ~ LogNormal centred at op_ram_gb_mean
 * op base runtime       ~ LogNormal centred at op_base_seconds_mean
+* op output dataset     ~ LogNormal centred at op_out_gb_mean, with its
+                          log-domain noise correlated (out_runtime_corr)
+                          with the runtime draw: long ops tend to emit
+                          large intermediates (data plane, cf. Bauplan)
 * CPU-scaling alpha     ~ Categorical(alpha_choices, alpha_probs)
 * priority              ~ Categorical(priority_probs); interactive/query
                           pipelines are scaled shorter & smaller.
+
+Dataset sizes are quantised to MiB granularity (multiples of 2**-10 GB)
+so that every cache-occupancy sum the engines compute is exact in f32 —
+the compiled and Python engines then agree bit-for-bit on cache state
+regardless of reduction order.
 
 Traces: ``load_trace`` accepts a list of dicts (or a JSON/TOML file) with
 explicit pipelines — the TPC-H validation benchmark uses this path.
@@ -39,12 +48,23 @@ from .state import INF_TICK, Workload
 from .types import Pipeline, Operator, Priority, TICKS_PER_SECOND
 
 
+GB_QUANTUM = 1.0 / 1024.0  # cache sizes live on a MiB grid (see module doc)
+
+
+def _quantize_gb(x: jax.Array) -> jax.Array:
+    """Snap dataset sizes onto the MiB grid; exact in f32 below ~16 TB."""
+    return jnp.maximum(jnp.round(x * 1024.0) / 1024.0, jnp.float32(GB_QUANTUM))
+
+
 def generate_workload(params: SimParams, key: jax.Array | None = None) -> Workload:
     """Vectorised random workload table."""
     if key is None:
         key = jax.random.PRNGKey(params.seed)
     MP, MO = params.max_pipelines, params.max_ops_per_pipeline
     k_arr, k_prio, k_nops, k_chain, k_ram, k_base, k_alpha = jax.random.split(key, 7)
+    # data-plane key is folded in (not split) so the seven draws above are
+    # bit-identical to the pre-data-plane generator — backward compat.
+    k_out = jax.random.fold_in(key, 7)
 
     # --- arrivals ----------------------------------------------------------
     gaps = jax.random.exponential(k_arr, (MP,)) * params.waiting_ticks_mean
@@ -83,18 +103,32 @@ def generate_workload(params: SimParams, key: jax.Array | None = None) -> Worklo
         * scale
     )
     ram = jnp.maximum(ram, 0.05)
+    z_base = jax.random.normal(k_base, (MP, MO))
     base_s = (
-        jnp.exp(jax.random.normal(k_base, (MP, MO)) * params.op_base_seconds_sigma)
+        jnp.exp(z_base * params.op_base_seconds_sigma)
         * params.op_base_seconds_mean
         * scale
     )
     base = jnp.maximum(base_s * TICKS_PER_SECOND, 1.0)
+
+    # --- intermediate output sizes (data plane) -----------------------------
+    # log-domain mix of the runtime noise and fresh noise => corr knob
+    rho = float(np.clip(params.out_runtime_corr, -1.0, 1.0))
+    z_out = jax.random.normal(k_out, (MP, MO))
+    z_mix = rho * z_base + np.sqrt(max(1.0 - rho * rho, 0.0)) * z_out
+    out = (
+        jnp.exp(z_mix * params.op_out_gb_sigma)
+        * params.op_out_gb_mean
+        * scale
+    )
+    out = _quantize_gb(out)
     aprobs = jnp.asarray(params.alpha_probs, jnp.float32)
     aprobs = aprobs / jnp.sum(aprobs)
     alpha_ix = jax.random.categorical(k_alpha, jnp.log(aprobs), shape=(MP, MO))
     alpha = jnp.asarray(params.alpha_choices, jnp.float32)[alpha_ix]
 
     zero_f = jnp.zeros((MP, MO), jnp.float32)
+    op_out = jnp.where(op_valid, out, zero_f).astype(jnp.float32)
     return Workload(
         arrival=arrival,
         prio=prio,
@@ -104,6 +138,8 @@ def generate_workload(params: SimParams, key: jax.Array | None = None) -> Worklo
         op_ram=jnp.where(op_valid, ram, zero_f),
         op_base=jnp.where(op_valid, base, zero_f),
         op_alpha=jnp.where(op_valid, alpha, zero_f),
+        op_out=op_out,
+        pipe_out=jnp.sum(op_out, axis=1, dtype=jnp.float32),
     )
 
 
@@ -125,6 +161,7 @@ def workload_from_pipelines(
     op_ram = np.zeros((MP, MO), np.float32)
     op_base = np.zeros((MP, MO), np.float32)
     op_alpha = np.zeros((MP, MO), np.float32)
+    op_out = np.zeros((MP, MO), np.float32)
     for i, p in enumerate(pipelines):
         if len(p.ops) > MO:
             raise ValueError(f"pipeline {p.pid} has {len(p.ops)} ops > {MO}")
@@ -137,6 +174,13 @@ def workload_from_pipelines(
             op_ram[i, j] = o.ram_gb
             op_base[i, j] = o.base_ticks
             op_alpha[i, j] = o.alpha
+            # MiB quantisation (see module doc); out_gb == 0 stays 0 so
+            # data-plane-free traces remain inert
+            op_out[i, j] = (
+                max(round(o.out_gb * 1024.0) / 1024.0, GB_QUANTUM)
+                if o.out_gb > 0
+                else 0.0
+            )
     return Workload(
         arrival=jnp.asarray(arrival),
         prio=jnp.asarray(prio),
@@ -146,12 +190,15 @@ def workload_from_pipelines(
         op_ram=jnp.asarray(op_ram),
         op_base=jnp.asarray(op_base),
         op_alpha=jnp.asarray(op_alpha),
+        op_out=jnp.asarray(op_out),
+        pipe_out=jnp.asarray(op_out.sum(axis=1, dtype=np.float32)),
     )
 
 
 def load_trace(path: str | pathlib.Path, params: SimParams) -> Workload:
     """Load a JSON trace: [{arrival_s, priority, ops: [{ram_gb, base_s,
-    alpha, level}]}]."""
+    alpha, level, out_gb}]}]. ``out_gb`` (intermediate dataset size) is
+    optional and defaults to 0 (data plane inert for that op)."""
     raw = json.loads(pathlib.Path(path).read_text())
     return workload_from_trace_records(raw, params)
 
@@ -167,6 +214,7 @@ def workload_from_trace_records(
                 base_ticks=int(round(float(o["base_s"]) * TICKS_PER_SECOND)),
                 alpha=float(o.get("alpha", 0.5)),
                 level=int(o.get("level", j)),
+                out_gb=float(o.get("out_gb", 0.0)),
             )
             for j, o in enumerate(rec["ops"])
         ]

@@ -239,7 +239,7 @@ def _moe_apply_global(cfg: ModelConfig, p: dict, x: jax.Array):
 # 3.8 GB/layer on arctic; EXPERIMENTS.md §Perf).
 # ---------------------------------------------------------------------------
 def _batch_local_gather(x_pad, tok_table):
-    from jax import shard_map
+    from repro.parallel.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.parallel.ctx import batch_axes_in_mesh, get_ctx
 
@@ -265,7 +265,7 @@ def _batch_local_gather(x_pad, tok_table):
 def _batch_local_combine(ye, tok_table, S):
     """ye [B, E, C, d] (experts sharded on 'model'), tok_table [B, E*C]
     -> [B, S+1, d] combined (psum over the expert/model axis)."""
-    from jax import shard_map
+    from repro.parallel.compat import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.parallel.ctx import batch_axes_in_mesh, get_ctx
 

@@ -18,7 +18,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.parallel.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

@@ -1,0 +1,29 @@
+"""JAX version compatibility shims for the parallel substrate.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its ``check_rep`` knob was renamed ``check_vma``
+along the way. ``shard_map`` below presents the modern signature on
+either version so call sites stay clean.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_HAS_VMA = "check_vma" in _PARAMS
+
+
+@functools.wraps(_shard_map)
+def shard_map(*args, **kwargs):
+    if not _HAS_VMA and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(*args, **kwargs)
+
+
+__all__ = ["shard_map"]

@@ -1,0 +1,105 @@
+"""Shared test config.
+
+When the real ``hypothesis`` package is unavailable (hermetic CI images,
+minimal containers) we install a tiny deterministic stand-in: each
+``@given`` test runs ``max_examples`` pseudo-random examples drawn from a
+PRNG seeded by the test's qualified name. This keeps the property suites
+runnable everywhere; real hypothesis (with shrinking and a database) is
+used automatically whenever it is installed.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+def _install_mini_hypothesis() -> None:
+    mod = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng: random.Random):
+            return self._draw(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def lists(inner, min_size=0, max_size=8):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [inner.example_from(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    class HealthCheck(enum.Enum):
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+    def settings(max_examples=10, deadline=None, suppress_health_check=()):
+        def deco(fn):
+            fn._mini_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_mini_max_examples", 10)
+                rng = random.Random(f"mini-hypothesis:{fn.__qualname__}")
+                for _ in range(n):
+                    drawn = {
+                        k: s.example_from(rng) for k, s in strategies.items()
+                    }
+                    fn(*args, **drawn, **kwargs)
+
+            # hide the strategy params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p
+                    for name, p in sig.parameters.items()
+                    if name not in strategies
+                ]
+            )
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = HealthCheck
+    mod.strategies = st_mod
+    st_mod.integers = integers
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+    st_mod.floats = floats
+    st_mod.lists = lists
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # pragma: no cover
+    _install_mini_hypothesis()

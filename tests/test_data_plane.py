@@ -1,0 +1,329 @@
+"""Data-plane semantics, hand-computed (ISSUE 1).
+
+Every scenario here is a small explicit trace whose cold-start charges,
+scan costs, cache hits and LRU evictions are worked out by hand in the
+comments; the engine must reproduce the numbers exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Operator,
+    Pipeline,
+    PipeStatus,
+    Priority,
+    SimParams,
+    generate_workload,
+    run,
+    workload_from_pipelines,
+)
+
+def one_op_pipe(pid, arrive_tick, *, ram=1.0, base=100, out_gb=0.0,
+                prio=Priority.BATCH):
+    return Pipeline(
+        pid=pid,
+        priority=prio,
+        arrival_tick=arrive_tick,
+        ops=[Operator(ram_gb=ram, base_ticks=base, alpha=0.0, level=0,
+                      out_gb=out_gb)],
+    )
+
+
+def P(**kw) -> SimParams:
+    base = dict(
+        duration=0.05,
+        scheduling_algo="naive",
+        total_cpus=16.0,
+        total_ram_gb=32.0,
+        max_pipelines=8,
+        max_containers=8,
+        engine="event",
+    )
+    base.update(kw)
+    return SimParams(**base)
+
+
+ENGINES = ["event", "tick", "python"]
+
+
+# ---------------------------------------------------------------------------
+# Cold / warm starts
+# ---------------------------------------------------------------------------
+class TestColdStart:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_cold_then_warm(self, engine):
+        # p0 arrives t=0 on a cold slot: 50 boot + 100 run -> done t=150.
+        # p1 arrives t=200; slot 0 is warm until 150+10000 -> no boot,
+        # done t=300.
+        params = P(cold_start_ticks=50, container_warm_ticks=10_000)
+        wl = workload_from_pipelines(
+            [one_op_pipe(0, 0), one_op_pipe(1, 200)], params
+        )
+        res = run(params, workload=wl, engine=engine)
+        comp = np.asarray(res.state.pipe_completion)
+        assert comp[0] == 150
+        assert comp[1] == 300
+        assert int(res.state.cold_starts) == 1
+        assert int(res.state.warm_starts) == 1
+        assert int(res.state.cold_start_tick_total) == 50
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_warmth_expires(self, engine):
+        # warm window only 30 ticks: p1 at t=200 > 150+30 -> cold again.
+        params = P(cold_start_ticks=50, container_warm_ticks=30)
+        wl = workload_from_pipelines(
+            [one_op_pipe(0, 0), one_op_pipe(1, 200)], params
+        )
+        res = run(params, workload=wl, engine=engine)
+        comp = np.asarray(res.state.pipe_completion)
+        assert comp[0] == 150
+        assert comp[1] == 350  # 200 + 50 boot + 100 run
+        assert int(res.state.cold_starts) == 2
+        assert int(res.state.warm_starts) == 0
+        assert int(res.state.cold_start_tick_total) == 100
+
+    def test_zero_cold_start_charges_nothing(self):
+        params = P()  # all data-plane knobs at their 0 defaults
+        wl = workload_from_pipelines(
+            [one_op_pipe(0, 0), one_op_pipe(1, 200)], params
+        )
+        res = run(params, workload=wl, engine="event")
+        comp = np.asarray(res.state.pipe_completion)
+        assert comp[0] == 100 and comp[1] == 300
+        assert int(res.state.cold_start_tick_total) == 0
+
+
+# ---------------------------------------------------------------------------
+# Data-scan cost + cache hit on re-run (OOM retry path)
+# ---------------------------------------------------------------------------
+class TestScanAndCacheHit:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_oom_retry_hits_cache(self, engine):
+        # priority scheduler: chunk_ram = 10% of 32 = 3.2 GB. The op needs
+        # 5 GB -> OOM on the first attempt, retried at 6.4 GB.
+        #   run 1 (t=0):   cache empty -> scan 2 GB * 100 t/GB = 200 ticks;
+        #                  OOM fires at 200 + max(1, 0) = 201.
+        #   run 2 (t=201): 2 GB resident -> no scan; done 201 + 100 = 301.
+        params = P(
+            scheduling_algo="priority",
+            cache_gb_per_pool=10.0,
+            scan_ticks_per_gb=100.0,
+        )
+        wl = workload_from_pipelines(
+            [one_op_pipe(0, 0, ram=5.0, out_gb=2.0)], params
+        )
+        res = run(params, workload=wl, engine=engine)
+        st = res.state
+        assert int(st.oom_events) == 1
+        assert np.asarray(st.pipe_completion)[0] == 301
+        assert float(st.bytes_moved_gb) == 2.0
+        assert float(st.cache_hit_gb) == 2.0
+        assert int(st.cache_hits) == 1
+        assert int(st.cache_lookups) == 2
+        s = res.summary()
+        assert s["cache_hit_rate"] == pytest.approx(0.5)
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_cache_capacity_zero_never_hits(self, engine):
+        # same scenario but no cache: both runs scan the full 2 GB
+        params = P(
+            scheduling_algo="priority",
+            cache_gb_per_pool=0.0,
+            scan_ticks_per_gb=100.0,
+        )
+        wl = workload_from_pipelines(
+            [one_op_pipe(0, 0, ram=5.0, out_gb=2.0)], params
+        )
+        res = run(params, workload=wl, engine=engine)
+        st = res.state
+        assert float(st.bytes_moved_gb) == 4.0
+        assert float(st.cache_hit_gb) == 0.0
+        assert int(st.cache_hits) == 0
+        # second run re-scans: completion = 201 + 200 + 100
+        assert np.asarray(st.pipe_completion)[0] == 501
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction
+# ---------------------------------------------------------------------------
+class TestLRU:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_oldest_entry_evicted_first(self, engine):
+        # cap 5 GB; A (2 GB, t=0), B (2 GB, t=200), C (2 GB, t=400).
+        # Inserting C needs 4 + 2 - 5 = 1 GB freed -> evict A (oldest,
+        # 2 GB >= 1) and stop; B survives.
+        params = P(cache_gb_per_pool=5.0)
+        wl = workload_from_pipelines(
+            [
+                one_op_pipe(0, 0, out_gb=2.0),
+                one_op_pipe(1, 200, out_gb=2.0),
+                one_op_pipe(2, 400, out_gb=2.0),
+            ],
+            params,
+        )
+        res = run(params, workload=wl, engine=engine)
+        cb = np.asarray(res.state.cache_bytes)[0]
+        assert cb[0] == 0.0          # A evicted
+        assert cb[1] == 2.0 and cb[2] == 2.0
+        assert float(res.state.pool_cache_used[0]) == 4.0
+        last = np.asarray(res.state.cache_last)[0]
+        assert last[1] == 200 and last[2] == 400
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_eviction_cascades_until_fit(self, engine):
+        # cap 5 GB; A (2), B (2), then D (4.5): needs 4 + 4.5 - 5 = 3.5
+        # freed -> evict A (2 < 3.5), then B (4 >= 3.5). Only D remains.
+        params = P(cache_gb_per_pool=5.0)
+        wl = workload_from_pipelines(
+            [
+                one_op_pipe(0, 0, out_gb=2.0),
+                one_op_pipe(1, 200, out_gb=2.0),
+                one_op_pipe(2, 400, out_gb=4.5),
+            ],
+            params,
+        )
+        res = run(params, workload=wl, engine=engine)
+        cb = np.asarray(res.state.cache_bytes)[0]
+        assert cb[0] == 0.0 and cb[1] == 0.0 and cb[2] == 4.5
+        assert float(res.state.pool_cache_used[0]) == 4.5
+
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_oversized_dataset_not_cached(self, engine):
+        # 7 GB dataset > 5 GB cache: never inserted, resident set intact
+        params = P(cache_gb_per_pool=5.0)
+        wl = workload_from_pipelines(
+            [
+                one_op_pipe(0, 0, out_gb=2.0),
+                one_op_pipe(1, 200, out_gb=7.0),
+            ],
+            params,
+        )
+        res = run(params, workload=wl, engine=engine)
+        cb = np.asarray(res.state.cache_bytes)[0]
+        assert cb[0] == 2.0 and cb[1] == 0.0
+        assert float(res.state.pool_cache_used[0]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Cache-aware scheduling
+# ---------------------------------------------------------------------------
+class TestCacheAwareScheduler:
+    def _retry_workload(self, params):
+        # one big pipeline that OOMs once (5 GB > 10% chunk of 3.2 GB)
+        # and carries a 2 GB intermediate dataset
+        return workload_from_pipelines(
+            [one_op_pipe(0, 0, ram=5.0, out_gb=2.0)], params
+        )
+
+    @pytest.mark.parametrize("engine", ["event", "python"])
+    def test_retry_lands_on_cached_pool(self, engine):
+        params = P(
+            scheduling_algo="cache_aware",
+            num_pools=2,
+            cache_gb_per_pool=10.0,
+            scan_ticks_per_gb=100.0,
+        )
+        wl = self._retry_workload(params)
+        res = run(params, workload=wl, engine=engine)
+        st = res.state
+        assert int(st.oom_events) == 1
+        # the retry found its parent outputs resident
+        assert float(st.cache_hit_gb) == 2.0
+        assert int(st.cache_hits) == 1
+        # data lives on exactly one pool
+        cb = np.asarray(st.cache_bytes)
+        assert (cb > 0).sum() == 1
+
+    def test_cache_aware_beats_priority_pool_on_bytes_moved(self):
+        # churny workload with tight resources -> OOM retries; the
+        # cache-aware placement must re-scan no more than priority_pool
+        params = P(
+            scheduling_algo="priority_pool",
+            num_pools=2,
+            duration=0.2,
+            waiting_ticks_mean=400,
+            max_pipelines=64,
+            max_containers=32,
+            op_ram_gb_mean=4.0,
+            op_base_seconds_mean=0.003,
+            cache_gb_per_pool=8.0,
+            scan_ticks_per_gb=50.0,
+            seed=4,
+        )
+        wl = generate_workload(params)
+        base = run(params, workload=wl, engine="event").summary()
+        aware = run(
+            params.replace(scheduling_algo="cache_aware"),
+            workload=wl,
+            engine="event",
+        ).summary()
+        assert aware["cache_hit_gb"] > 0  # the scenario really exercises it
+        assert aware["cache_hit_gb"] >= base["cache_hit_gb"]
+        assert aware["bytes_moved_gb"] <= base["bytes_moved_gb"]
+
+    def test_locality_pool_runs_and_reports(self):
+        params = P(
+            scheduling_algo="locality_pool",
+            num_pools=2,
+            duration=0.1,
+            waiting_ticks_mean=600,
+            op_base_seconds_mean=0.003,
+            max_pipelines=32,
+            cache_gb_per_pool=8.0,
+            scan_ticks_per_gb=50.0,
+            cold_start_ticks=40,
+        )
+        res = run(params, engine="event")
+        s = res.summary()
+        assert s["done"] > 0
+        assert 0.0 <= s["cache_hit_rate"] <= 1.0
+        assert s["cold_starts"] + s["warm_starts"] >= s["done"]
+
+
+# ---------------------------------------------------------------------------
+# Backward compatibility: data plane off == pre-data-plane behaviour
+# ---------------------------------------------------------------------------
+class TestBackwardCompat:
+    def test_defaults_are_inert(self):
+        params = P(
+            scheduling_algo="priority",
+            duration=0.1,
+            waiting_ticks_mean=500,
+            seed=9,
+        )
+        assert not params.data_plane_active
+        res = run(params, engine="event")
+        st = res.state
+        # no ticks were ever charged by the data plane
+        assert int(st.cold_start_tick_total) == 0
+        assert float(st.pool_cache_used.sum()) == 0.0
+        # done/failed bookkeeping unaffected
+        s = res.summary()
+        assert s["done"] + s["failed"] + s["in_flight"] == s["submitted"]
+
+    def test_workload_generation_unchanged_by_data_plane_params(self):
+        # the out-size draws must not perturb the pre-existing columns
+        a = generate_workload(P(seed=5))
+        b = generate_workload(P(seed=5, op_out_gb_mean=64.0,
+                                out_runtime_corr=0.9))
+        for field in ("arrival", "prio", "op_ram", "op_base", "op_alpha"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, field)), np.asarray(getattr(b, field))
+            )
+        assert not np.array_equal(np.asarray(a.op_out), np.asarray(b.op_out))
+
+    def test_out_sizes_correlate_with_runtime(self):
+        params = P(seed=2, max_pipelines=512, out_runtime_corr=0.9,
+                   op_out_gb_sigma=1.0)
+        wl = generate_workload(params)
+        valid = np.asarray(wl.op_valid)
+        out = np.log(np.asarray(wl.op_out)[valid])
+        base = np.log(np.asarray(wl.op_base)[valid])
+        r = np.corrcoef(out, base)[0, 1]
+        assert r > 0.5
+
+    def test_out_sizes_are_mib_quantised(self):
+        wl = generate_workload(P(seed=3))
+        out = np.asarray(wl.op_out, dtype=np.float64)
+        np.testing.assert_allclose(out * 1024, np.round(out * 1024),
+                                   atol=1e-4)

@@ -19,10 +19,23 @@ COMPARE_FIELDS = [
     "failed_count",
     "oom_events",
     "preempt_events",
+    # ---- data plane: exact agreement expected (quantised f32 arithmetic,
+    # identical accumulation order across engines) ------------------------
+    "cache_hits",
+    "cache_lookups",
+    "cold_starts",
+    "warm_starts",
+    "cold_start_tick_total",
+    "cache_hit_gb",
+    "bytes_moved_gb",
+    "cache_bytes",
+    "cache_last",
+    "pool_cache_used",
 ]
 
 
-def _params(seed, algo, num_pools, waiting_mean, ram_mean, duration=0.05):
+def _params(seed, algo, num_pools, waiting_mean, ram_mean, duration=0.05,
+            **extra):
     return SimParams(
         duration=duration,
         seed=seed,
@@ -34,7 +47,16 @@ def _params(seed, algo, num_pools, waiting_mean, ram_mean, duration=0.05):
         op_ram_gb_mean=ram_mean,
         max_pipelines=32,
         max_containers=32,
+        **extra,
     )
+
+
+DATA_PLANE = dict(
+    cache_gb_per_pool=4.0,
+    scan_ticks_per_gb=50.0,
+    cold_start_ticks=40,
+    container_warm_ticks=2_000,
+)
 
 
 def _assert_states_equal(a, b, ctx=""):
@@ -88,6 +110,66 @@ def test_tick_equals_event(seed, algo):
     r_tick = run(params, workload=wl, engine="tick")
     r_event = run(params, workload=wl, engine="event")
     _assert_states_equal(r_tick.state, r_event.state, ctx=f"{algo}/s{seed}")
+
+
+# ---------------------------------------------------------------------------
+# Data-plane equivalence: with nonzero cache capacity, scan cost and
+# cold-start latency, all three engines must agree exactly on cache hits,
+# bytes moved and cold-start ticks (ISSUE 1 acceptance criterion).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("algo", ["priority_pool", "cache_aware"])
+def test_data_plane_metrics_equivalence(seed, algo):
+    params = _params(
+        seed, algo, 2, 400.0, 2.0, duration=0.02, **DATA_PLANE
+    )
+    wl = generate_workload(params)
+    r_tick = run(params, workload=wl, engine="tick")
+    r_event = run(params, workload=wl, engine="event")
+    r_python = run(params, workload=wl, engine="python")
+    _assert_states_equal(
+        r_tick.state, r_event.state, ctx=f"tick-vs-event/{algo}/s{seed}"
+    )
+    _assert_states_equal(
+        r_event.state, r_python.state, ctx=f"event-vs-python/{algo}/s{seed}"
+    )
+
+
+@settings(
+    max_examples=6,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    seed=st.integers(0, 2**16),
+    algo=st.sampled_from(["priority", "priority_pool", "cache_aware",
+                          "locality_pool"]),
+    cache_gb=st.sampled_from([0.5, 4.0, 64.0]),
+)
+def test_event_equals_python_with_data_plane(seed, algo, cache_gb):
+    """Property version: random seeds/cache sizes, event vs python."""
+    params = _params(
+        seed,
+        algo,
+        2,
+        500.0,
+        2.0,
+        cache_gb_per_pool=cache_gb,
+        scan_ticks_per_gb=25.0,
+        cold_start_ticks=30,
+        container_warm_ticks=1_500,
+    )
+    wl = generate_workload(params)
+    r_event = run(params, workload=wl, engine="event")
+    r_python = run(params, workload=wl, engine="python")
+    _assert_states_equal(
+        r_event.state, r_python.state, ctx=f"dp/{algo}/s{seed}/c{cache_gb}"
+    )
+    # cache invariants: occupancy == Σ resident entries, never over capacity
+    cb = np.asarray(r_event.state.cache_bytes)
+    used = np.asarray(r_event.state.pool_cache_used)
+    np.testing.assert_allclose(cb.sum(axis=1), used, rtol=1e-5, atol=1e-5)
+    assert (used <= cache_gb + 1e-4).all()
 
 
 @settings(max_examples=10, deadline=None)
