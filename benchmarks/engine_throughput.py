@@ -1,32 +1,86 @@
 """Simulator engine throughput (paper §3.1 "low-cost" claim, and the
 headline §Perf hillclimb): paper-faithful tick loop vs event-skip vs
-vmap fleet, in simulated-seconds per wall-second and ticks/second."""
+the fleet engines, in simulated-seconds per wall-second and ticks/s.
+
+The fleet section compares the fleet-native fused engine (default
+`fleet_run` path) against the legacy vmap-of-while_loop path on a
+64-lane batch with skewed per-lane durations/event counts (LogNormal
+`op_base_seconds_sigma=1.2` — the chained-pipeline regime where
+lockstep vmap wastes the most work; see EXPERIMENTS.md §Fleet-Perf).
+"""
 from __future__ import annotations
 
 import time
 
 import jax
 
-from repro.core import SimParams, TICKS_PER_SECOND, fleet_run, generate_workload, run
+from repro.core import SimParams, fleet_run, generate_workload, run
 
 
 def _time(fn, reps=3):
+    """Post-compile wall-clock: (min, mean) over ``reps`` runs."""
     fn()  # compile
-    t0 = time.time()
+    ts = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         fn()
-    return (time.time() - t0) / reps
+        ts.append(time.perf_counter() - t0)
+    return min(ts), sum(ts) / len(ts)
 
 
-def main(print_rows: bool = True) -> list[dict]:
+def fleet_bench(smoke: bool = False) -> list[dict]:
+    """Fused fleet engine vs legacy vmap path on a skewed batch."""
+    fleet_size = 8 if smoke else 64
+    params = SimParams(
+        duration=0.05 if smoke else 1.0,
+        waiting_ticks_mean=5_000,      # the simulator default arrival rate
+        op_base_seconds_mean=0.03,
+        op_base_seconds_sigma=1.2,     # heavy-tailed durations -> skew
+        op_ram_gb_mean=2.0,
+        max_pipelines=32 if smoke else 128,
+        max_containers=32 if smoke else 64,
+        scheduling_algo="priority",
+    )
+    seeds = list(range(fleet_size))
+    horizon = params.horizon_ticks
+    reps = 1 if smoke else 3
+
+    rows = []
+    for fleet_engine in ("vmap", "fused"):
+        def go(fe=fleet_engine):
+            jax.block_until_ready(
+                fleet_run(params, seeds, fleet_engine=fe).done_count
+            )
+
+        t_min, t_mean = _time(go, reps=reps)
+        rows.append(
+            {
+                "engine": f"fleet {fleet_engine} x{fleet_size}",
+                "fleet_engine": fleet_engine,
+                "fleet_size": fleet_size,
+                "wall_s": round(t_mean, 4),
+                "wall_s_min": round(t_min, 4),
+                "ticks_per_s": round(fleet_size * horizon / t_min),
+                "sim_s_per_wall_s": round(
+                    fleet_size * params.duration / t_min, 2
+                ),
+            }
+        )
+    rows[1]["speedup_vs_vmap"] = round(
+        rows[0]["wall_s_min"] / rows[1]["wall_s_min"], 2
+    )
+    return rows
+
+
+def main(print_rows: bool = True, smoke: bool = False) -> list[dict]:
     rows = []
     params = SimParams(
-        duration=1.0,
+        duration=0.05 if smoke else 1.0,
         waiting_ticks_mean=2500,
         op_base_seconds_mean=0.03,
         op_ram_gb_mean=2.0,
-        max_pipelines=128,
-        max_containers=64,
+        max_pipelines=32 if smoke else 128,
+        max_containers=32 if smoke else 64,
         scheduling_algo="priority",
     )
     wl = generate_workload(params)
@@ -42,12 +96,13 @@ def main(print_rows: bool = True) -> list[dict]:
             run(params, workload=wl, engine="event").state.done_count
         )
 
-    t_tick = _time(tick_run, reps=1)
-    t_event = _time(event_run)
+    t_tick, t_tick_mean = _time(tick_run, reps=1)
+    t_event, t_event_mean = _time(event_run, reps=1 if smoke else 3)
     rows.append(
         {
             "engine": "tick (paper-faithful)",
-            "wall_s": round(t_tick, 4),
+            "wall_s": round(t_tick_mean, 4),
+            "wall_s_min": round(t_tick, 4),
             "ticks_per_s": round(horizon / t_tick),
             "sim_s_per_wall_s": round(params.duration / t_tick, 2),
         }
@@ -55,7 +110,8 @@ def main(print_rows: bool = True) -> list[dict]:
     rows.append(
         {
             "engine": "event-skip",
-            "wall_s": round(t_event, 4),
+            "wall_s": round(t_event_mean, 4),
+            "wall_s_min": round(t_event, 4),
             "ticks_per_s": round(horizon / t_event),
             "sim_s_per_wall_s": round(params.duration / t_event, 2),
             "speedup_vs_tick": round(t_tick / t_event, 1),
@@ -63,34 +119,20 @@ def main(print_rows: bool = True) -> list[dict]:
     )
 
     # python reference engine
-    t0 = time.time()
+    t0 = time.perf_counter()
     run(params, workload=wl, engine="python")
-    t_py = time.time() - t0
+    t_py = time.perf_counter() - t0
     rows.append(
         {
             "engine": "python (reference)",
             "wall_s": round(t_py, 4),
+            "wall_s_min": round(t_py, 4),
             "ticks_per_s": round(horizon / t_py),
             "sim_s_per_wall_s": round(params.duration / t_py, 2),
         }
     )
 
-    # vmap fleet: 64 simulations at once
-    seeds = list(range(64))
-
-    def fleet():
-        jax.block_until_ready(fleet_run(params, seeds).done_count)
-
-    t_fleet = _time(fleet)
-    rows.append(
-        {
-            "engine": "vmap fleet x64",
-            "wall_s": round(t_fleet, 4),
-            "ticks_per_s": round(64 * horizon / t_fleet),
-            "sim_s_per_wall_s": round(64 * params.duration / t_fleet, 2),
-            "speedup_vs_serial_event": round(64 * t_event / t_fleet, 1),
-        }
-    )
+    rows.extend(fleet_bench(smoke=smoke))
     if print_rows:
         for r in rows:
             print(r)

@@ -80,19 +80,24 @@ def main(print_rows: bool = True) -> list[dict]:
         "derived": f"cpu_ratio={t_seq / t_chk:.2f}x_(chunked_form_targets_MXU_matmuls)",
     })
 
-    # sim_tick fleet update
-    F, MC, NP = 4096, 64, 2
-    ks2 = jax.random.split(key, 7)
+    # sim_tick fused fleet phase-1 update
+    F, MC, MP, NP = 4096, 64, 128, 2
+    ks2 = jax.random.split(key, 9)
     status = jax.random.randint(ks2[0], (F, MC), 0, 2)
     end = jax.random.randint(ks2[1], (F, MC), 0, 1000)
     oom = jnp.full((F, MC), 2**31 - 1, jnp.int32)
     cpus = jax.random.uniform(ks2[2], (F, MC)) * 4
     ram = jax.random.uniform(ks2[3], (F, MC)) * 8
     pool = jax.random.randint(ks2[4], (F, MC), 0, NP)
+    pstat = jnp.asarray([0, 2, 4], jnp.int32)[
+        jax.random.randint(ks2[5], (F, MP), 0, 3)
+    ]
+    arrival = jax.random.randint(ks2[6], (F, MP), 0, 5000)
+    release = jax.random.randint(ks2[7], (F, MP), 0, 5000)
     tick = jnp.arange(F, dtype=jnp.int32)
     t = _bench(
-        lambda: fleet_tick_ref(status, end, oom, cpus, ram, pool, tick,
-                               num_pools=NP)
+        lambda: fleet_tick_ref(status, end, oom, cpus, ram, pool,
+                               pstat, arrival, release, tick, num_pools=NP)
     )
     rows.append({
         "name": "sim_tick_fleet4096",

@@ -1,26 +1,79 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark plus the
-section tables used by EXPERIMENTS.md.
+section tables used by EXPERIMENTS.md, and writes machine-readable
+fleet-throughput results to ``BENCH_fleet.json`` so the perf trajectory
+is tracked across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast | --smoke]
+
+``--smoke`` runs only a tiny fleet bench and validates the JSON output
+(used by CI to keep the benchmark code from rotting).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
+
+BENCH_JSON = pathlib.Path("BENCH_fleet.json")
+# smoke runs validate the same machinery but must not clobber the
+# committed cross-PR perf record
+BENCH_JSON_SMOKE = pathlib.Path("BENCH_fleet.smoke.json")
 
 
 def _csv(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def write_fleet_json(rows: list[dict], smoke: bool) -> dict:
+    """Persist the fleet-engine rows; returns the validated payload."""
+    path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
+    fleet_rows = [r for r in rows if "fleet_engine" in r]
+    by_engine = {r["fleet_engine"]: r for r in fleet_rows}
+    payload = {
+        "benchmark": "fleet_engine_throughput",
+        "smoke": smoke,
+        "fleet_size": fleet_rows[0]["fleet_size"] if fleet_rows else 0,
+        "rows": fleet_rows,
+        "speedup_fused_vs_vmap": by_engine.get("fused", {}).get(
+            "speedup_vs_vmap"
+        ),
+    }
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    # read-back validation: well-formed JSON with the tracked metrics
+    loaded = json.loads(path.read_text())
+    assert loaded["benchmark"] == "fleet_engine_throughput"
+    assert loaded["rows"], "no fleet rows recorded"
+    for r in loaded["rows"]:
+        for key in ("fleet_engine", "fleet_size", "wall_s", "wall_s_min",
+                    "ticks_per_s", "sim_s_per_wall_s"):
+            assert key in r, f"missing {key} in {r}"
+    print(f"wrote {path} "
+          f"(speedup fused vs vmap: {loaded['speedup_fused_vs_vmap']})")
+    return loaded
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the slower benches (tick engine, fleet)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fleet bench only; asserts BENCH_fleet.json "
+                         "is produced and well-formed (CI)")
     args = ap.parse_args()
+
+    if args.smoke:
+        from benchmarks import engine_throughput
+
+        rows = engine_throughput.fleet_bench(smoke=True)
+        for r in rows:
+            print(r)
+        write_fleet_json(rows, smoke=True)
+        print("benchmarks smoke OK")
+        return
 
     print("== tpch_validation (paper Fig. 3) ==")
     from benchmarks import tpch_validation
@@ -69,17 +122,19 @@ def main() -> None:
             f"_util={v['cpu_utilization']:.3f}",
         )
 
-    print("== engine_throughput (§Perf headline) ==")
+    print("== engine_throughput (§Perf + §Fleet-Perf headline) ==")
     from benchmarks import engine_throughput
 
     if not args.fast:
         rows = engine_throughput.main(print_rows=False)
         for r in rows:
             _csv(
-                f"engine_{r['engine'].split()[0]}",
+                f"engine_{r['engine'].split()[0]}_{r.get('fleet_engine', '')}"
+                .rstrip("_"),
                 r["wall_s"] * 1e6,
                 f"ticks/s={r['ticks_per_s']}",
             )
+        write_fleet_json(rows, smoke=False)
 
     print("== kernels ==")
     from benchmarks import kernels_bench

@@ -73,6 +73,45 @@ def _tick_body(
     return state, sched_state, acted
 
 
+def _sorted_arrivals(arrival: jax.Array) -> jax.Array:
+    """Arrival ticks sorted ascending, INF-padded by one slot so a cursor
+    that has consumed every arrival reads INF_TICK. Works along the last
+    axis, so it serves both single workloads [MP] and fleets [F, MP]."""
+    pad_shape = arrival.shape[:-1] + (1,)
+    return jnp.concatenate(
+        [jnp.sort(arrival, axis=-1), jnp.full(pad_shape, INF_TICK, jnp.int32)],
+        axis=-1,
+    )
+
+
+def _next_event_registers(
+    state: SimState, arr_sorted: jax.Array, tick: jax.Array, acted
+):
+    """Register-based twin of :func:`_next_event`.
+
+    Instead of re-reducing the pipeline/container tables, reads the
+    executor-maintained ``nxt_retire``/``nxt_release`` registers and
+    binary-searches the arrival-sorted workload — O(log MP) per event
+    rather than O(MP + MC). Provably equal to the full recompute:
+    after ``process_arrivals`` at tick t, a pipeline slot is EMPTY iff
+    its arrival tick is > t, so the pending-arrival minimum is the first
+    sorted arrival beyond t; the register invariants cover the rest
+    (see the property test in tests/test_fleet.py).
+
+    Returns ``(next_tick, cursor)``; the cursor (count of arrivals <= t)
+    is stored on the state as ``nxt_arrival_cursor``.
+    """
+    cursor = jnp.searchsorted(arr_sorted[:-1], tick, side="right").astype(
+        jnp.int32
+    )
+    next_arrival = arr_sorted[cursor]
+    nxt = jnp.minimum(
+        jnp.minimum(next_arrival, state.nxt_retire), state.nxt_release
+    )
+    nxt = jnp.where(acted, jnp.minimum(nxt, tick + 1), nxt)
+    return jnp.maximum(nxt, tick + 1), cursor
+
+
 def _next_event(state: SimState, wl: Workload, tick: jax.Array, acted) -> jax.Array:
     """Earliest tick strictly after ``tick`` at which state can change."""
     pending = state.pipe_status == int(PipeStatus.EMPTY)
@@ -126,6 +165,7 @@ def _run_tick_engine(params, wl, scheduler_fn, sched_state0):
 
 def _run_event_engine(params, wl, scheduler_fn, sched_state0):
     horizon = jnp.int32(params.horizon_ticks)
+    arr_sorted = _sorted_arrivals(wl.arrival)
 
     def cond(carry):
         state, _ = carry
@@ -137,14 +177,103 @@ def _run_event_engine(params, wl, scheduler_fn, sched_state0):
         state, sched_state, acted = _tick_body(
             state, sched_state, wl, params, scheduler_fn, tick
         )
-        nxt = jnp.minimum(_next_event(state, wl, tick, acted), horizon)
+        # register-based next event: executor-maintained nxt_retire /
+        # nxt_release + a binary search of the sorted arrivals, instead
+        # of the full-table reduction (_next_event stays as the
+        # recompute-from-scratch reference, property-tested against this)
+        nxt, cursor = _next_event_registers(state, arr_sorted, tick, acted)
+        nxt = jnp.minimum(nxt, horizon)
         state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
-        state = state._replace(tick=nxt)
+        state = state._replace(tick=nxt, nxt_arrival_cursor=cursor)
         return state, sched_state
 
     state0 = init_state(params)
     state, sched_state = jax.lax.while_loop(cond, body, (state0, sched_state0))
     return state, sched_state
+
+
+# ---------------------------------------------------------------------------
+# Fleet-native event engine: one shared while_loop over the whole batch.
+#
+# ``vmap(_run_event_engine)`` (the legacy fleet path) keeps every lane in
+# lockstep paying the *full* generic tick body until the slowest lane
+# exhausts its events. This engine batches the loop by hand instead:
+#
+# * phase 1 (completions + releases + arrival admission + per-pool freed
+#   resources + next-event registers) is one fused [F, MC]/[F, MP] pass
+#   through ``repro.kernels.sim_tick.fleet_tick`` (Pallas on TPU, the
+#   bitwise-equivalent jnp reference elsewhere);
+# * the scheduler and ``apply_decision`` run their *early-exit* variants,
+#   whose inner while_loops vmap into max-over-lanes trip counts — an
+#   event with an empty queue no longer pays K sequential steps;
+# * each lane skips to its own next event via the incremental registers
+#   (O(log MP) binary search instead of O(MP + MC) table reductions);
+# * finished lanes pass through untouched (`jnp.where` on the carry) and
+#   the loop exits when every lane is done.
+#
+# Per-lane results are bitwise-identical to ``run(..., engine="event")``
+# (property-tested in tests/test_fleet.py).
+# ---------------------------------------------------------------------------
+def _run_fleet_event_engine(params, wls, scheduler_fn, sched_state0, impl="auto"):
+    from repro.kernels.sim_tick import fleet_tick
+
+    horizon = jnp.int32(params.horizon_ticks)
+    F = wls.arrival.shape[0]
+    arr_sorted = _sorted_arrivals(wls.arrival)  # [F, MP + 1]
+
+    def bcast(x):
+        x = jnp.asarray(x)
+        return jnp.broadcast_to(x, (F,) + x.shape)
+
+    states0 = jax.tree.map(bcast, init_state(params))
+    scheds0 = jax.tree.map(bcast, sched_state0)
+
+    def cond(carry):
+        states, _ = carry
+        return jnp.any(states.tick < horizon)
+
+    def body(carry):
+        states, scheds = carry
+        tick = states.tick                     # [F]
+        active = tick < horizon                # [F]
+
+        ph = fleet_tick(
+            states.ctr_status, states.ctr_end, states.ctr_oom,
+            states.ctr_cpus, states.ctr_ram, states.ctr_pool,
+            states.pipe_status, wls.arrival, states.pipe_release,
+            tick, num_pools=params.num_pools, impl=impl,
+        )
+
+        def lane(st, ss, wl, arr_l, t, ph_l):
+            st = executor.apply_fused_phase1(st, wl, t, params, ph_l)
+            ss, dec = scheduler_fn(ss, st, wl, params)
+            st = executor.apply_decision(
+                st, wl, dec, t, params, early_exit=True
+            )
+            acted = (
+                jnp.any(dec.suspend)
+                | jnp.any(dec.reject)
+                | jnp.any(dec.assign_pipe >= 0)
+            )
+            nxt, cursor = _next_event_registers(st, arr_l, t, acted)
+            nxt = jnp.minimum(nxt, horizon)
+            st = executor.integrate(st, t, nxt, params, exact_buckets=True)
+            return st._replace(tick=nxt, nxt_arrival_cursor=cursor), ss
+
+        new_states, new_scheds = jax.vmap(lane)(
+            states, scheds, wls, arr_sorted, tick, ph
+        )
+
+        # finished lanes pass through untouched
+        def keep(n, o):
+            mask = jnp.reshape(active, (F,) + (1,) * (n.ndim - 1))
+            return jnp.where(mask, n, o)
+
+        states = jax.tree.map(keep, new_states, states)
+        scheds = jax.tree.map(keep, new_scheds, scheds)
+        return states, scheds
+
+    return jax.lax.while_loop(cond, body, (states0, scheds0))
 
 
 @functools.partial(jax.jit, static_argnames=("params", "scheduler_key", "engine"))
@@ -183,4 +312,12 @@ def run(
     return SimResult(state=state, workload=wl, params=params, sched_state=sched_state)
 
 
-__all__ = ["SimResult", "run", "_tick_body", "_next_event"]
+__all__ = [
+    "SimResult",
+    "run",
+    "_tick_body",
+    "_next_event",
+    "_next_event_registers",
+    "_sorted_arrivals",
+    "_run_fleet_event_engine",
+]

@@ -609,7 +609,21 @@ def run_python_engine(params: SimParams, wl: Workload):
         # not-yet-arrived pipelines are indistinguishable from empty slots
         # in the SoA representation — normalise for engine equivalence
         status_arr[pid] = int(PipeStatus.EMPTY if s == PipeStatus.PENDING else s)
+    # next-event registers: same invariants the compiled executor keeps
+    # (min end/oom over running containers, min release over suspended,
+    # count of consumed arrivals)
+    nxt_retire = min(
+        (
+            c.end if c.oom is None else min(c.end, c.oom)
+            for c in sch.running.values()
+        ),
+        default=int(INF_TICK),
+    )
+    nxt_release = min(release.values(), default=int(INF_TICK))
     st = st._replace(
+        nxt_retire=jnp.asarray(min(nxt_retire, int(INF_TICK)), jnp.int32),
+        nxt_release=jnp.asarray(min(nxt_release, int(INF_TICK)), jnp.int32),
+        nxt_arrival_cursor=jnp.asarray(arr_ix, jnp.int32),
         tick=jnp.asarray(horizon, jnp.int32),
         pipe_status=jnp.asarray(status_arr),
         pipe_completion=jnp.asarray(

@@ -65,32 +65,38 @@ def process_arrivals(state: SimState, wl: Workload, tick: jax.Array) -> SimState
 def process_releases(state: SimState, tick: jax.Array) -> SimState:
     """Suspended pipelines re-enter the waiting queue after their 1-tick
     stay in the suspending queue (paper §4.1.3 (1))."""
-    rel = (state.pipe_status == int(PipeStatus.SUSPENDED)) & (
-        state.pipe_release <= tick
-    )
+    suspended = state.pipe_status == int(PipeStatus.SUSPENDED)
+    rel = suspended & (state.pipe_release <= tick)
+    # next-event register: min release over the pipes still suspended
+    still = suspended & ~rel
+    nxt_release = jnp.min(jnp.where(still, state.pipe_release, INF_TICK))
     return state._replace(
         pipe_status=jnp.where(rel, int(PipeStatus.WAITING), state.pipe_status),
         pipe_entered=jnp.where(rel, state.pipe_release, state.pipe_entered),
         pipe_release=jnp.where(rel, INF_TICK, state.pipe_release),
+        nxt_release=nxt_release,
     )
 
 
-def process_completions(
-    state: SimState, wl: Workload, tick: jax.Array, params: SimParams
+def _apply_retirements(
+    state: SimState,
+    wl: Workload,
+    tick: jax.Array,
+    params: SimParams,
+    oomed: jax.Array,
+    done: jax.Array,
+    freed_cpu: jax.Array,
+    freed_ram: jax.Array,
+    nxt_retire: jax.Array,
 ) -> SimState:
-    """Retire containers whose OOM or completion tick has arrived."""
-    running = state.ctr_status == int(ContainerStatus.RUNNING)
-    oomed = running & (state.ctr_oom <= tick)
-    done = running & ~oomed & (state.ctr_end <= tick)
-    retired = oomed | done
+    """Apply precomputed retire masks + freed-resource sums to the state.
 
-    # ---- free pool resources ------------------------------------------------
-    NP = state.pool_cpu_cap.shape[0]
-    pool_oh = (
-        state.ctr_pool[None, :] == jnp.arange(NP, dtype=jnp.int32)[:, None]
-    ) & retired[None, :]
-    freed_cpu = jnp.sum(jnp.where(pool_oh, state.ctr_cpus[None, :], 0.0), axis=1)
-    freed_ram = jnp.sum(jnp.where(pool_oh, state.ctr_ram[None, :], 0.0), axis=1)
+    Shared by :func:`process_completions` (which derives the masks
+    itself) and :func:`apply_fused_phase1` (which gets them from the
+    fused ``sim_tick`` pass) — one body, so the bitwise fused-vs-
+    sequential invariant cannot drift when completion effects change.
+    """
+    retired = oomed | done
 
     # ---- per-pipeline effects (scatter via segment-sum over containers) ----
     MP = state.pipe_status.shape[0]
@@ -117,7 +123,8 @@ def process_completions(
         wl.prio[None, :] == jnp.arange(3, dtype=jnp.int32)[:, None]
     )  # [3, MP]
 
-    state = state._replace(
+    return state._replace(
+        nxt_retire=nxt_retire,
         pipe_status=jnp.where(
             oom_hit,
             int(PipeStatus.WAITING),
@@ -151,7 +158,34 @@ def process_completions(
         done_prio=state.done_prio
         + jnp.sum(prio_oh & done_hit[None, :], axis=1).astype(jnp.int32),
     )
-    return state
+
+
+def process_completions(
+    state: SimState, wl: Workload, tick: jax.Array, params: SimParams
+) -> SimState:
+    """Retire containers whose OOM or completion tick has arrived."""
+    running = state.ctr_status == int(ContainerStatus.RUNNING)
+    oomed = running & (state.ctr_oom <= tick)
+    done = running & ~oomed & (state.ctr_end <= tick)
+    retired = oomed | done
+
+    # ---- free pool resources ------------------------------------------------
+    NP = state.pool_cpu_cap.shape[0]
+    pool_oh = (
+        state.ctr_pool[None, :] == jnp.arange(NP, dtype=jnp.int32)[:, None]
+    ) & retired[None, :]
+    freed_cpu = jnp.sum(jnp.where(pool_oh, state.ctr_cpus[None, :], 0.0), axis=1)
+    freed_ram = jnp.sum(jnp.where(pool_oh, state.ctr_ram[None, :], 0.0), axis=1)
+
+    # next-event register: min(end, oom) over the containers still running
+    still = running & ~retired
+    nxt_retire = jnp.min(
+        jnp.where(still, jnp.minimum(state.ctr_end, state.ctr_oom), INF_TICK)
+    )
+
+    return _apply_retirements(
+        state, wl, tick, params, oomed, done, freed_cpu, freed_ram, nxt_retire
+    )
 
 
 def apply_decision(
@@ -160,7 +194,17 @@ def apply_decision(
     dec: SchedDecision,
     tick: jax.Array,
     params: SimParams,
+    early_exit: bool = False,
 ) -> SimState:
+    """Apply one scheduler decision.
+
+    ``early_exit=True`` replaces the fixed ``fori_loop`` over the K
+    assignment slots with a ``while_loop`` that stops after the last
+    populated slot — bitwise-identical (skipped slots are provable
+    no-ops: ``assign_one`` ignores slots with ``assign_pipe < 0``), but
+    events with empty decisions no longer pay K sequential iterations.
+    The fleet engine uses it; the legacy paths keep the static loop.
+    """
     # ---- 1. suspensions (preemptions) --------------------------------------
     susp = dec.suspend & (state.ctr_status == int(ContainerStatus.RUNNING))
     NP = params.num_pools
@@ -175,7 +219,21 @@ def apply_decision(
         jnp.zeros((MP,), jnp.int32).at[pid].add(susp.astype(jnp.int32), mode="drop")
     ) > 0
 
+    # next-event registers: preempted containers leave the running set
+    # (recompute the retire min over the survivors); every new suspension
+    # releases at tick + 1, so the release min is a running minimum.
+    any_susp = jnp.any(susp)
+    still = (state.ctr_status == int(ContainerStatus.RUNNING)) & ~susp
+    nxt_retire = jnp.min(
+        jnp.where(still, jnp.minimum(state.ctr_end, state.ctr_oom), INF_TICK)
+    )
+    nxt_release = jnp.where(
+        any_susp, jnp.minimum(state.nxt_release, tick + 1), state.nxt_release
+    )
+
     state = state._replace(
+        nxt_retire=nxt_retire,
+        nxt_release=nxt_release,
         pipe_status=jnp.where(
             susp_hit, int(PipeStatus.SUSPENDED), state.pipe_status
         ),
@@ -255,6 +313,7 @@ def apply_decision(
 
         def commit(st: SimState) -> SimState:
             st = st._replace(
+                nxt_retire=jnp.minimum(st.nxt_retire, jnp.minimum(end, oom)),
                 pipe_status=st.pipe_status.at[pipe_c].set(int(PipeStatus.RUNNING)),
                 pipe_last_cpus=st.pipe_last_cpus.at[pipe_c].set(cpus),
                 pipe_last_ram=st.pipe_last_ram.at[pipe_c].set(ram),
@@ -302,10 +361,59 @@ def apply_decision(
 
         return jax.lax.cond(valid, commit, lambda s: s, st)
 
-    state = jax.lax.fori_loop(
-        0, params.max_assignments_per_tick, assign_one, state
-    )
+    K = params.max_assignments_per_tick
+    if early_exit:
+        # process only up to the last populated slot; most events carry
+        # zero or one assignment, so this usually runs 0-1 iterations
+        ks = jnp.arange(K, dtype=jnp.int32)
+        n_slots = jnp.max(jnp.where(dec.assign_pipe >= 0, ks + 1, 0))
+
+        def w_cond(carry):
+            k, _ = carry
+            return k < n_slots
+
+        def w_body(carry):
+            k, st = carry
+            return k + 1, assign_one(k, st)
+
+        _, state = jax.lax.while_loop(w_cond, w_body, (jnp.int32(0), state))
+    else:
+        state = jax.lax.fori_loop(0, K, assign_one, state)
     return state
+
+
+# ---------------------------------------------------------------------------
+# Fused phase 1 (fleet-native event engine): apply the masks produced by
+# ``repro.kernels.sim_tick.fleet_tick`` — arrivals + suspension releases +
+# completions/OOMs in one pass. Bitwise-identical to the sequential
+# ``process_arrivals -> process_releases -> process_completions``
+# composition: the three phases read disjoint status partitions (EMPTY /
+# SUSPENDED / RUNNING-container), so masks computed from the pre-state
+# and applied together commute with the sequential wheres.
+# ---------------------------------------------------------------------------
+def apply_fused_phase1(
+    state: SimState, wl: Workload, tick: jax.Array, params: SimParams, ph
+) -> SimState:
+    (oomed, done, _new_ctr_status, freed_cpu, freed_ram,
+     fresh, rel, nxt_retire, nxt_release) = ph
+
+    # ---- arrivals, then releases (same write order as the sequential path) -
+    pipe_status = jnp.where(fresh, int(PipeStatus.WAITING), state.pipe_status)
+    pipe_entered = jnp.where(fresh, wl.arrival, state.pipe_entered)
+    pipe_status = jnp.where(rel, int(PipeStatus.WAITING), pipe_status)
+    pipe_entered = jnp.where(rel, state.pipe_release, pipe_entered)
+    pipe_release = jnp.where(rel, INF_TICK, state.pipe_release)
+    state = state._replace(
+        pipe_status=pipe_status,
+        pipe_entered=pipe_entered,
+        pipe_release=pipe_release,
+        nxt_release=nxt_release,
+    )
+
+    # ---- completions: identical body as the sequential engines -------------
+    return _apply_retirements(
+        state, wl, tick, params, oomed, done, freed_cpu, freed_ram, nxt_retire
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -361,5 +469,6 @@ __all__ = [
     "process_releases",
     "process_completions",
     "apply_decision",
+    "apply_fused_phase1",
     "integrate",
 ]

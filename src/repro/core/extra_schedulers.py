@@ -30,9 +30,12 @@ from .params import SimParams
 from .scheduler import (
     EPS,
     SchedDecision,
+    _priority_like,
     cache_aware_scheduler,
+    decision_loop,
     empty_decision,
     locality_pool_scheduler,
+    register_fleet_vector_scheduler,
     register_vector_scheduler,
 )
 from .state import INF_TICK, SimState, Workload
@@ -55,51 +58,56 @@ def _select_sjf(mask, n_ops, prio, entered):
     return jnp.where(any_, idx, -1)
 
 
-@register_vector_scheduler("sjf")
-def sjf_vector(sched_state: Any, sim: SimState, wl: Workload, params: SimParams):
-    K = params.max_assignments_per_tick
-    total_cpu = jnp.sum(sim.pool_cpu_cap)
-    total_ram = jnp.sum(sim.pool_ram_cap)
-    chunk_cpu, chunk_ram = CHUNK * total_cpu, CHUNK * total_ram
-    cap_cpu, cap_ram = CAP * total_cpu, CAP * total_ram
+def _sjf_like(early_exit: bool = False):
+    def sjf(sched_state: Any, sim: SimState, wl: Workload, params: SimParams):
+        K = params.max_assignments_per_tick
+        total_cpu = jnp.sum(sim.pool_cpu_cap)
+        total_ram = jnp.sum(sim.pool_ram_cap)
+        chunk_cpu, chunk_ram = CHUNK * total_cpu, CHUNK * total_ram
+        cap_cpu, cap_ram = CAP * total_cpu, CAP * total_ram
 
-    dec = empty_decision(params)
-    waiting0 = sim.pipe_status == int(PipeStatus.WAITING)
-    reject = waiting0 & sim.pipe_fail_flag & (sim.pipe_last_ram >= cap_ram - EPS)
-    dec = dec._replace(reject=reject)
+        dec = empty_decision(params)
+        waiting0 = sim.pipe_status == int(PipeStatus.WAITING)
+        reject = waiting0 & sim.pipe_fail_flag & (sim.pipe_last_ram >= cap_ram - EPS)
+        dec = dec._replace(reject=reject)
 
-    def body(k, carry):
-        dec, free_cpu, free_ram, tried = carry
-        mask = waiting0 & ~reject & ~tried
-        pipe = _select_sjf(mask, wl.n_ops, wl.prio, sim.pipe_entered)
-        valid = pipe >= 0
-        pipe_c = jnp.maximum(pipe, 0)
-        failed = sim.pipe_fail_flag[pipe_c]
-        seen = sim.pipe_last_ram[pipe_c] > 0.0
-        want_cpu = jnp.where(
-            failed, jnp.minimum(2.0 * sim.pipe_last_cpus[pipe_c], cap_cpu),
-            jnp.where(seen, sim.pipe_last_cpus[pipe_c], chunk_cpu))
-        want_ram = jnp.where(
-            failed, jnp.minimum(2.0 * sim.pipe_last_ram[pipe_c], cap_ram),
-            jnp.where(seen, sim.pipe_last_ram[pipe_c], chunk_ram))
-        fits = (free_cpu[0] >= want_cpu - EPS) & (free_ram[0] >= want_ram - EPS)
-        do = valid & fits
-        dec = dec._replace(
-            assign_pipe=dec.assign_pipe.at[k].set(jnp.where(do, pipe_c, -1)),
-            assign_pool=dec.assign_pool.at[k].set(0),
-            assign_cpus=dec.assign_cpus.at[k].set(want_cpu),
-            assign_ram=dec.assign_ram.at[k].set(want_ram),
-        )
-        free_cpu = jnp.where(do, free_cpu.at[0].add(-want_cpu), free_cpu)
-        free_ram = jnp.where(do, free_ram.at[0].add(-want_ram), free_ram)
-        tried = jnp.where(valid, tried.at[pipe_c].set(True), tried)
-        return dec, free_cpu, free_ram, tried
+        def step(k, carry):
+            dec, free_cpu, free_ram, tried = carry
+            mask = waiting0 & ~reject & ~tried
+            pipe = _select_sjf(mask, wl.n_ops, wl.prio, sim.pipe_entered)
+            valid = pipe >= 0
+            pipe_c = jnp.maximum(pipe, 0)
+            failed = sim.pipe_fail_flag[pipe_c]
+            seen = sim.pipe_last_ram[pipe_c] > 0.0
+            want_cpu = jnp.where(
+                failed, jnp.minimum(2.0 * sim.pipe_last_cpus[pipe_c], cap_cpu),
+                jnp.where(seen, sim.pipe_last_cpus[pipe_c], chunk_cpu))
+            want_ram = jnp.where(
+                failed, jnp.minimum(2.0 * sim.pipe_last_ram[pipe_c], cap_ram),
+                jnp.where(seen, sim.pipe_last_ram[pipe_c], chunk_ram))
+            fits = (free_cpu[0] >= want_cpu - EPS) & (free_ram[0] >= want_ram - EPS)
+            do = valid & fits
+            dec = dec._replace(
+                assign_pipe=dec.assign_pipe.at[k].set(jnp.where(do, pipe_c, -1)),
+                assign_pool=dec.assign_pool.at[k].set(0),
+                assign_cpus=dec.assign_cpus.at[k].set(want_cpu),
+                assign_ram=dec.assign_ram.at[k].set(want_ram),
+            )
+            free_cpu = jnp.where(do, free_cpu.at[0].add(-want_cpu), free_cpu)
+            free_ram = jnp.where(do, free_ram.at[0].add(-want_ram), free_ram)
+            tried = jnp.where(valid, tried.at[pipe_c].set(True), tried)
+            return (dec, free_cpu, free_ram, tried), valid
 
-    tried0 = jnp.zeros((params.max_pipelines,), bool)
-    dec, *_ = jax.lax.fori_loop(
-        0, K, body, (dec, sim.pool_cpu_free, sim.pool_ram_free, tried0)
-    )
-    return sched_state, dec
+        tried0 = jnp.zeros((params.max_pipelines,), bool)
+        carry0 = (dec, sim.pool_cpu_free, sim.pool_ram_free, tried0)
+        dec, *_ = decision_loop(step, K, carry0, early_exit)
+        return sched_state, dec
+
+    return sjf
+
+
+sjf_vector = register_vector_scheduler("sjf")(_sjf_like())
+register_fleet_vector_scheduler("sjf")(_sjf_like(early_exit=True))
 
 
 @register_scheduler_init(key="sjf")
@@ -169,6 +177,13 @@ def sjf_python(sch: Scheduler, failures: List[Failure], new: List[Pipeline]):
 # ---------------------------------------------------------------------------
 register_vector_scheduler("cache_aware")(cache_aware_scheduler)
 register_vector_scheduler("locality_pool")(locality_pool_scheduler)
+# fleet-specialised (early-exit) twins for the fleet-native engine
+register_fleet_vector_scheduler("cache_aware")(
+    _priority_like("cache", early_exit=True)
+)
+register_fleet_vector_scheduler("locality_pool")(
+    _priority_like("locality", early_exit=True)
+)
 
 
 @register_scheduler_init(key="cache_aware")

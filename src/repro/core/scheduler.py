@@ -84,6 +84,38 @@ def select_victim(
 
 
 # ---------------------------------------------------------------------------
+# Decision-slot loop runner shared by the K-assignment schedulers.
+# ---------------------------------------------------------------------------
+def decision_loop(step, K: int, carry0, early_exit: bool):
+    """Run ``step(k, carry) -> (carry, keep_going)`` over the K decision
+    slots. With ``early_exit`` the loop stops at the first ``keep_going
+    = False`` — valid whenever later iterations are provable no-ops
+    (the waiting-queue mask can only shrink); under vmap the while_loop
+    trip count becomes the max over lanes of actual queue length."""
+    if early_exit:
+
+        def w_cond(c):
+            k, go, _ = c
+            return (k < K) & go
+
+        def w_body(c):
+            k, _, carry = c
+            carry, go = step(k, carry)
+            return k + 1, go, carry
+
+        *_, carry = jax.lax.while_loop(
+            w_cond, w_body, (jnp.int32(0), jnp.bool_(True), carry0)
+        )
+        return carry
+
+    def body(k, carry):
+        carry, _ = step(k, carry)
+        return carry
+
+    return jax.lax.fori_loop(0, K, body, carry0)
+
+
+# ---------------------------------------------------------------------------
 # NAIVE (paper §4.1.2): single pool, everything to the queue head, no
 # concurrency, no preemption. A pipeline that OOMed with all resources can
 # never succeed -> permanent failure.
@@ -144,7 +176,16 @@ def _pool_select(pool_mode: str, free_cpu, free_ram, sim: SimState, pipe_c):
     raise ValueError(f"unknown pool_mode {pool_mode!r}")
 
 
-def _priority_like(pool_mode: str):
+def _priority_like(pool_mode: str, early_exit: bool = False):
+    """The generalised priority scheduler family.
+
+    ``early_exit=True`` swaps the fixed K-iteration ``fori_loop`` for a
+    ``while_loop`` that stops as soon as the waiting queue is exhausted
+    (once ``select_next_pipe`` returns -1 the candidate mask can only
+    shrink, so every later iteration is a no-op). Bitwise-identical
+    decisions; the fleet engine registers these variants so events with
+    short queues stop paying K sequential scheduler steps.
+    """
     multi_pool = pool_mode != "single"
 
     def scheduler(
@@ -168,7 +209,7 @@ def _priority_like(pool_mode: str):
         reject = waiting0 & sim.pipe_fail_flag & (sim.pipe_last_ram >= cap_ram - EPS)
         dec = dec._replace(reject=reject)
 
-        def body(k, carry):
+        def step(k, carry):
             dec, free_cpu, free_ram, live, tried = carry
             mask = (
                 waiting0
@@ -257,12 +298,11 @@ def _priority_like(pool_mode: str):
             )
             # whether assigned or blocked, don't reconsider this pipe today
             tried = jnp.where(valid, tried.at[pipe_c].set(True), tried)
-            return dec, free_cpu4, free_ram4, live3, tried
+            return (dec, free_cpu4, free_ram4, live3, tried), valid
 
         tried0 = jnp.zeros((params.max_pipelines,), bool)
-        dec, *_ = jax.lax.fori_loop(
-            0, K, body, (dec, free_cpu, free_ram, live, tried0)
-        )
+        carry0 = (dec, free_cpu, free_ram, live, tried0)
+        dec, *_ = decision_loop(step, K, carry0, early_exit)
         return sched_state, dec
 
     return scheduler
@@ -277,6 +317,12 @@ locality_pool_scheduler = _priority_like("locality")
 # ---------------------------------------------------------------------------
 # Vector-scheduler registry (compiled engines). The Python-API registry
 # (paper Listing 4 decorators) lives in ``algorithm.py``.
+#
+# A second, optional registry holds *fleet-specialised* variants: the
+# same decision function restructured for the fleet-native event engine
+# (early-exit inner loops that vmap into max-over-lanes trip counts).
+# ``get_fleet_vector_scheduler`` falls back to the plain variant, so
+# custom user schedulers work in fleets unchanged.
 # ---------------------------------------------------------------------------
 VectorScheduler = Callable[
     [Any, SimState, Workload, SimParams], tuple[Any, SchedDecision]
@@ -284,6 +330,7 @@ VectorScheduler = Callable[
 
 _VECTOR_SCHEDULERS: dict[str, VectorScheduler] = {}
 _VECTOR_INITS: dict[str, Callable[[SimParams], Any]] = {}
+_FLEET_SCHEDULERS: dict[str, VectorScheduler] = {}
 
 
 def register_vector_scheduler(key: str):
@@ -324,15 +371,34 @@ def has_vector_scheduler(key: str) -> bool:
     return _norm(key) in _VECTOR_SCHEDULERS
 
 
+def register_fleet_vector_scheduler(key: str):
+    def deco(fn: VectorScheduler) -> VectorScheduler:
+        _FLEET_SCHEDULERS[_norm(key)] = fn
+        return fn
+
+    return deco
+
+
+def get_fleet_vector_scheduler(key: str) -> VectorScheduler:
+    """Fleet-specialised variant if registered, else the plain one."""
+    k = _norm(key)
+    return _FLEET_SCHEDULERS.get(k) or get_vector_scheduler(k)
+
+
 register_vector_scheduler("naive")(naive_scheduler)
 register_vector_scheduler("priority")(priority_scheduler)
 register_vector_scheduler("priority_pool")(priority_pool_scheduler)
+# naive has no inner loop: the plain function IS the fleet variant
+register_fleet_vector_scheduler("naive")(naive_scheduler)
+register_fleet_vector_scheduler("priority")(_priority_like("single", early_exit=True))
+register_fleet_vector_scheduler("priority_pool")(_priority_like("free", early_exit=True))
 # cache_aware / locality_pool are registered (in both worlds) from
 # extra_schedulers.py alongside their Python twins.
 
 
 __all__ = [
     "SchedDecision",
+    "decision_loop",
     "empty_decision",
     "select_next_pipe",
     "select_victim",
@@ -343,7 +409,9 @@ __all__ = [
     "locality_pool_scheduler",
     "register_vector_scheduler",
     "register_vector_scheduler_init",
+    "register_fleet_vector_scheduler",
     "get_vector_scheduler",
     "get_vector_scheduler_init",
+    "get_fleet_vector_scheduler",
     "has_vector_scheduler",
 ]

@@ -83,6 +83,18 @@ class SimState(NamedTuple):
     slot_warm_pool: jax.Array     # [MC] int32 pool kept warm in slot (-1)
     slot_warm_until: jax.Array    # [MC] int32 warmth expiry tick
 
+    # ---- next-event registers (incremental event tracking) ---------------
+    # Invariants maintained by the executor after every transition:
+    #   nxt_retire  == min over RUNNING containers of min(ctr_end, ctr_oom)
+    #   nxt_release == min over SUSPENDED pipelines of pipe_release
+    # so the event engines read O(1) registers instead of re-reducing the
+    # container/pipeline tables at every event. ``nxt_arrival_cursor`` is
+    # the engine-maintained count of arrivals <= current tick in the
+    # arrival-sorted workload (binary search, not a table scan).
+    nxt_retire: jax.Array         # [] int32 (INF_TICK = no running ctr)
+    nxt_release: jax.Array        # [] int32 (INF_TICK = nothing suspended)
+    nxt_arrival_cursor: jax.Array  # [] int32 index into sorted arrivals
+
     # ---- pools -----------------------------------------------------------
     pool_cpu_cap: jax.Array       # [NP] f32
     pool_ram_cap: jax.Array       # [NP] f32
@@ -155,6 +167,9 @@ def init_state(params: SimParams) -> SimState:
         ctr_warm=jnp.zeros((MC,), bool),
         slot_warm_pool=jnp.full((MC,), -1, i32),
         slot_warm_until=jnp.zeros((MC,), i32),
+        nxt_retire=jnp.asarray(INF_TICK, i32),
+        nxt_release=jnp.asarray(INF_TICK, i32),
+        nxt_arrival_cursor=jnp.asarray(0, i32),
         pool_cpu_cap=pool_cpu,
         pool_ram_cap=pool_ram,
         pool_cpu_free=pool_cpu,

@@ -22,24 +22,45 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import _run_event_engine, _run_tick_engine
+from .engine import (
+    _run_event_engine,
+    _run_fleet_event_engine,
+    _run_tick_engine,
+)
 from .params import SimParams
-from .scheduler import get_vector_scheduler, get_vector_scheduler_init
+from .scheduler import (
+    get_fleet_vector_scheduler,
+    get_vector_scheduler,
+    get_vector_scheduler_init,
+)
 from .state import SimState, Workload
 from .workload import generate_workload
 
 
 @functools.partial(
-    jax.jit, static_argnames=("params", "scheduler_key", "engine")
+    jax.jit,
+    static_argnames=("params", "scheduler_key", "engine", "fleet_engine"),
 )
 def _fleet_compiled(
     params: SimParams,
     workloads: Workload,  # batched: leading axis = fleet
     scheduler_key: str,
     engine: str,
+    fleet_engine: str = "fused",
 ):
-    scheduler_fn = get_vector_scheduler(scheduler_key)
     sched_state0 = get_vector_scheduler_init(scheduler_key)(params)
+    if engine == "event" and fleet_engine == "fused":
+        # fleet-native engine: shared while_loop, fused phase-1 pass,
+        # early-exit schedulers, incremental next-event registers
+        scheduler_fn = get_fleet_vector_scheduler(scheduler_key)
+        states, _ = _run_fleet_event_engine(
+            params, workloads, scheduler_fn, sched_state0
+        )
+        return states
+
+    # legacy path: vmap the single-sim engine (kept as the comparison
+    # baseline; see benchmarks/engine_throughput.py)
+    scheduler_fn = get_vector_scheduler(scheduler_key)
     runner = _run_event_engine if engine == "event" else _run_tick_engine
 
     def one(wl: Workload) -> SimState:
@@ -50,7 +71,9 @@ def _fleet_compiled(
 
 
 def make_workload_batch(params: SimParams, seeds: Sequence[int]) -> Workload:
-    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    # host-loop-free batch construction: vmap the key derivation too, so
+    # fleets in the thousands don't pay a per-seed Python round-trip
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds, jnp.uint32))
     return jax.vmap(lambda k: generate_workload(params, k))(keys)
 
 
@@ -61,10 +84,15 @@ def fleet_run(
     engine: str = "event",
     mesh: jax.sharding.Mesh | None = None,
     axis: str = "data",
+    fleet_engine: str = "fused",
 ) -> SimState:
     """Run len(seeds) simulations in parallel; optionally sharded on a mesh.
 
-    Returns the batched final SimState (leading axis = fleet member).
+    ``fleet_engine="fused"`` (default) runs the fleet-native event engine
+    — one shared masked while_loop over the batch; ``"vmap"`` keeps the
+    legacy vmap-of-while_loop path. Both are bitwise-identical per lane
+    to ``run(..., engine="event")``. Returns the batched final SimState
+    (leading axis = fleet member).
     """
     scheduler_key = scheduler_key or params.scheduling_algo
     wls = make_workload_batch(params, seeds)
@@ -72,7 +100,7 @@ def fleet_run(
         pspec = jax.sharding.PartitionSpec(axis)
         sharding = jax.sharding.NamedSharding(mesh, pspec)
         wls = jax.tree.map(lambda x: jax.device_put(x, sharding), wls)
-    return _fleet_compiled(params, wls, scheduler_key, engine)
+    return _fleet_compiled(params, wls, scheduler_key, engine, fleet_engine)
 
 
 def fleet_summary(states: SimState, params: SimParams) -> dict:

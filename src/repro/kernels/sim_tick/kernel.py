@@ -1,11 +1,18 @@
-"""Pallas TPU kernel for the fleet executor tick.
+"""Pallas TPU kernel for the fused fleet executor tick (phase 1).
 
 One grid step processes a [FB, MC] tile of the fleet x container table
-entirely in VMEM: the retire masks are VPU compares, the per-pool
-freed-resource reduction is NP masked row-sums. The tile is the unit of
-HBM traffic — each fleet member's container table is read exactly once
-per tick, which is what makes the fleet engine memory-bound-optimal on
+and the matching [FB, MP] tile of the pipeline table entirely in VMEM:
+retire/admission/release masks are VPU compares, the per-pool
+freed-resource reduction is NP masked row-sums, and the next-event
+registers (min end/oom over surviving containers, min release over
+still-suspended pipelines) are masked row-mins. The tile pair is the
+unit of HBM traffic — each fleet member's tables are read exactly once
+per event, which is what makes the fleet engine memory-bound-optimal on
 TPU (see benchmarks/kernels_bench.py).
+
+Scalar-per-lane outputs (the registers) are emitted as [FB, 8] tiles
+(sublane-aligned broadcast, same convention as the [FB, 8] tick input);
+the dispatch wrapper takes column 0.
 """
 from __future__ import annotations
 
@@ -15,20 +22,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import EMPTY, RUNNING
+from .ref import EMPTY, INF_TICK, P_EMPTY, P_SUSPENDED, RUNNING
 
 
 def _tick_kernel(
-    status_ref, end_ref, oom_ref, cpus_ref, ram_ref, pool_ref, tick_ref,
+    status_ref, end_ref, oom_ref, cpus_ref, ram_ref, pool_ref,
+    pstat_ref, arr_ref, rel_ref, tick_ref,
     oomed_ref, done_ref, nstat_ref, fcpu_ref, fram_ref,
+    fresh_ref, relm_ref, nret_ref, nrel_ref,
     *,
     num_pools: int,
 ):
     status = status_ref[...]
     t = tick_ref[...][:, :1]                      # [FB, 1]
     running = status == RUNNING
-    oomed = running & (oom_ref[...] <= t)
-    done = running & ~oomed & (end_ref[...] <= t)
+    end = end_ref[...]
+    oom = oom_ref[...]
+    oomed = running & (oom <= t)
+    done = running & ~oomed & (end <= t)
     retired = oomed | done
 
     oomed_ref[...] = oomed.astype(jnp.int32)
@@ -43,36 +54,86 @@ def _tick_kernel(
         fcpu_ref[:, p] = jnp.sum(jnp.where(sel, freed_c, 0.0), axis=1)
         fram_ref[:, p] = jnp.sum(jnp.where(sel, freed_r, 0.0), axis=1)
 
+    pstat = pstat_ref[...]
+    fresh = (pstat == P_EMPTY) & (arr_ref[...] <= t)
+    suspended = pstat == P_SUSPENDED
+    rel = suspended & (rel_ref[...] <= t)
+    fresh_ref[...] = fresh.astype(jnp.int32)
+    relm_ref[...] = rel.astype(jnp.int32)
+
+    still_run = running & ~retired
+    nret = jnp.min(
+        jnp.where(still_run, jnp.minimum(end, oom), INF_TICK),
+        axis=1, keepdims=True,
+    )
+    nret_ref[...] = jnp.broadcast_to(nret, nret_ref.shape)
+    still_susp = suspended & ~rel
+    nrel = jnp.min(
+        jnp.where(still_susp, rel_ref[...], INF_TICK), axis=1, keepdims=True
+    )
+    nrel_ref[...] = jnp.broadcast_to(nrel, nrel_ref.shape)
+
 
 @functools.partial(
     jax.jit, static_argnames=("num_pools", "block_fleet", "interpret")
 )
 def fleet_tick_kernel(
-    status, end, oom, cpus, ram, pool, tick, *, num_pools: int,
-    block_fleet: int = 256, interpret: bool = False,
+    ctr_status, ctr_end, ctr_oom, cpus, ram, pool,
+    pipe_status, arrival, release, tick,
+    *, num_pools: int, block_fleet: int = 256, interpret: bool = False,
 ):
-    F, MC = status.shape
+    F, MC = ctr_status.shape
+    MP = pipe_status.shape[1]
     FB = min(block_fleet, F)
-    assert F % FB == 0
-    grid = (F // FB,)
-    tick2 = jnp.broadcast_to(tick[:, None], (F, 8)).astype(jnp.int32)
+    # pad the fleet axis to a whole number of tiles; padding lanes carry
+    # zeroed tables whose outputs are garbage (e.g. their `fresh` masks
+    # are all true: status EMPTY, arrival 0 <= tick 0) and are sliced
+    # off below — never reduce across the fleet axis inside the kernel
+    pad = (-F) % FB
+    if pad:
+        def padded(x):
+            return jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+            )
 
-    tile = pl.BlockSpec((FB, MC), lambda i: (i, 0))
+        ctr_status, ctr_end, ctr_oom, cpus, ram, pool = map(
+            padded, (ctr_status, ctr_end, ctr_oom, cpus, ram, pool)
+        )
+        pipe_status, arrival, release, tick = map(
+            padded, (pipe_status, arrival, release, tick)
+        )
+    FP = F + pad
+    grid = (FP // FB,)
+    tick2 = jnp.broadcast_to(tick[:, None], (FP, 8)).astype(jnp.int32)
+
+    ctile = pl.BlockSpec((FB, MC), lambda i: (i, 0))
+    ptile = pl.BlockSpec((FB, MP), lambda i: (i, 0))
     pool_tile = pl.BlockSpec((FB, num_pools), lambda i: (i, 0))
+    reg_tile = pl.BlockSpec((FB, 8), lambda i: (i, 0))
     outs = pl.pallas_call(
         functools.partial(_tick_kernel, num_pools=num_pools),
         grid=grid,
-        in_specs=[tile, tile, tile, tile, tile, tile,
-                  pl.BlockSpec((FB, 8), lambda i: (i, 0))],
-        out_specs=[tile, tile, tile, pool_tile, pool_tile],
+        in_specs=[ctile, ctile, ctile, ctile, ctile, ctile,
+                  ptile, ptile, ptile, reg_tile],
+        out_specs=[ctile, ctile, ctile, pool_tile, pool_tile,
+                   ptile, ptile, reg_tile, reg_tile],
         out_shape=[
-            jax.ShapeDtypeStruct((F, MC), jnp.int32),
-            jax.ShapeDtypeStruct((F, MC), jnp.int32),
-            jax.ShapeDtypeStruct((F, MC), status.dtype),
-            jax.ShapeDtypeStruct((F, num_pools), jnp.float32),
-            jax.ShapeDtypeStruct((F, num_pools), jnp.float32),
+            jax.ShapeDtypeStruct((FP, MC), jnp.int32),
+            jax.ShapeDtypeStruct((FP, MC), jnp.int32),
+            jax.ShapeDtypeStruct((FP, MC), ctr_status.dtype),
+            jax.ShapeDtypeStruct((FP, num_pools), jnp.float32),
+            jax.ShapeDtypeStruct((FP, num_pools), jnp.float32),
+            jax.ShapeDtypeStruct((FP, MP), jnp.int32),
+            jax.ShapeDtypeStruct((FP, MP), jnp.int32),
+            jax.ShapeDtypeStruct((FP, 8), jnp.int32),
+            jax.ShapeDtypeStruct((FP, 8), jnp.int32),
         ],
         interpret=interpret,
-    )(status, end, oom, cpus, ram, pool, tick2)
-    oomed, done, nstat, fcpu, fram = outs
-    return oomed.astype(bool), done.astype(bool), nstat, fcpu, fram
+    )(ctr_status, ctr_end, ctr_oom, cpus, ram, pool,
+      pipe_status, arrival, release, tick2)
+    oomed, done, nstat, fcpu, fram, fresh, rel, nret, nrel = outs
+    return (
+        oomed[:F].astype(bool), done[:F].astype(bool), nstat[:F],
+        fcpu[:F], fram[:F], fresh[:F].astype(bool), rel[:F].astype(bool),
+        nret[:F, 0], nrel[:F, 0],
+    )

@@ -1,4 +1,4 @@
-"""Dispatch wrapper for the fleet executor tick."""
+"""Dispatch wrapper for the fused fleet executor tick (phase 1)."""
 from __future__ import annotations
 
 import jax
@@ -7,18 +7,32 @@ from .kernel import fleet_tick_kernel
 from .ref import fleet_tick_ref
 
 
-def fleet_tick(status, end, oom, cpus, ram, pool, tick, *, num_pools: int,
-               impl: str = "auto", interpret: bool = False):
+def fleet_tick(
+    ctr_status, ctr_end, ctr_oom, cpus, ram, pool,
+    pipe_status, arrival, release, tick,
+    *, num_pools: int, impl: str = "auto", interpret: bool = False,
+):
+    """Fused completions + releases + arrival admission + per-pool freed
+    resources + next-event registers over a fleet batch.
+
+    Returns ``(oomed, done, new_ctr_status, freed_cpu, freed_ram, fresh,
+    rel, nxt_retire, nxt_release)``; see ``ref.fleet_tick_ref`` for
+    shapes. ``impl="auto"`` picks the Pallas kernel on TPU and the
+    bitwise-equivalent jnp reference elsewhere (CPU/interpret mode).
+    """
     use_kernel = impl == "kernel" or (
         impl == "auto" and jax.default_backend() == "tpu"
     )
     if use_kernel:
         return fleet_tick_kernel(
-            status, end, oom, cpus, ram, pool, tick, num_pools=num_pools,
-            interpret=interpret,
+            ctr_status, ctr_end, ctr_oom, cpus, ram, pool,
+            pipe_status, arrival, release, tick,
+            num_pools=num_pools, interpret=interpret,
         )
-    return fleet_tick_ref(status, end, oom, cpus, ram, pool, tick,
-                          num_pools=num_pools)
+    return fleet_tick_ref(
+        ctr_status, ctr_end, ctr_oom, cpus, ram, pool,
+        pipe_status, arrival, release, tick, num_pools=num_pools,
+    )
 
 
 __all__ = ["fleet_tick"]

@@ -1,13 +1,22 @@
-"""Pure-jnp oracle for the fleet executor tick.
+"""Pure-jnp oracle for the fused fleet executor tick (phase 1).
 
 The hot inner loop of a *fleet* of Eudoxia simulations (sweep.py runs
-thousands of policy x seed simulations in parallel) is the executor's
-container-retirement step: for every fleet member, compare every live
-container's completion/OOM tick against the member's clock, retire the
-firing ones and return the per-pool freed resources.
+thousands of policy x seed simulations in parallel) starts every event
+with the same read of the container + pipeline tables: which containers
+complete/OOM, which suspended pipelines release, which arrivals are
+admitted, what resources the retirements free per pool, and the
+next-event registers over the survivors. This oracle fuses all of that
+into one batched pass — the Pallas kernel in ``kernel.py`` is the TPU
+twin, tiled [FB, MC]/[FB, MP] in VMEM.
 
-Shapes: F = fleet, MC = containers, NP = pools.
-status/end/oom/pool [F, MC] i32; cpus/ram [F, MC] f32; tick [F] i32.
+Shapes: F = fleet, MC = containers, MP = pipelines, NP = pools.
+ctr_status/ctr_end/ctr_oom/pool [F, MC] i32; cpus/ram [F, MC] f32;
+pipe_status/arrival/release [F, MP] i32; tick [F] i32.
+
+The freed-resource reductions use the [F, NP, MC] one-hot layout with
+the sum over the trailing MC axis — the exact batched analogue of
+``executor.process_completions`` so the fused path stays bitwise equal
+to the sequential single-sim path (engine equivalence).
 """
 from __future__ import annotations
 
@@ -16,23 +25,48 @@ import functools
 import jax
 import jax.numpy as jnp
 
-RUNNING = 1
-EMPTY = 0
+INF_TICK = 2**31 - 1
+
+RUNNING = 1        # ContainerStatus.RUNNING
+EMPTY = 0          # ContainerStatus.EMPTY
+P_EMPTY = 0        # PipeStatus.EMPTY
+P_SUSPENDED = 4    # PipeStatus.SUSPENDED
 
 
 @functools.partial(jax.jit, static_argnames=("num_pools",))
-def fleet_tick_ref(status, end, oom, cpus, ram, pool, tick, *, num_pools: int):
-    running = status == RUNNING
+def fleet_tick_ref(
+    ctr_status, ctr_end, ctr_oom, cpus, ram, pool,
+    pipe_status, arrival, release, tick, *, num_pools: int,
+):
     t = tick[:, None]
-    oomed = running & (oom <= t)
-    done = running & ~oomed & (end <= t)
-    retired = oomed | done
-    new_status = jnp.where(retired, EMPTY, status)
 
-    freed_c = jnp.where(retired, cpus, 0.0)
-    freed_r = jnp.where(retired, ram, 0.0)
+    # ---- container completions / OOMs -------------------------------------
+    running = ctr_status == RUNNING
+    oomed = running & (ctr_oom <= t)
+    done = running & ~oomed & (ctr_end <= t)
+    retired = oomed | done
+    new_status = jnp.where(retired, EMPTY, ctr_status)
+
+    # ---- per-pool freed resources ([F, NP, MC], sum over MC) ---------------
     pools = jnp.arange(num_pools, dtype=jnp.int32)
-    onehot = pool[:, :, None] == pools[None, None, :]          # [F, MC, NP]
-    freed_cpu = jnp.sum(jnp.where(onehot, freed_c[:, :, None], 0.0), axis=1)
-    freed_ram = jnp.sum(jnp.where(onehot, freed_r[:, :, None], 0.0), axis=1)
-    return oomed, done, new_status, freed_cpu, freed_ram
+    pool_oh = (pool[:, None, :] == pools[None, :, None]) & retired[:, None, :]
+    freed_cpu = jnp.sum(jnp.where(pool_oh, cpus[:, None, :], 0.0), axis=2)
+    freed_ram = jnp.sum(jnp.where(pool_oh, ram[:, None, :], 0.0), axis=2)
+
+    # ---- arrival admission / suspension release ----------------------------
+    fresh = (pipe_status == P_EMPTY) & (arrival <= t)
+    suspended = pipe_status == P_SUSPENDED
+    rel = suspended & (release <= t)
+
+    # ---- next-event registers over the survivors ---------------------------
+    still_run = running & ~retired
+    nxt_retire = jnp.min(
+        jnp.where(still_run, jnp.minimum(ctr_end, ctr_oom), INF_TICK), axis=1
+    )
+    still_susp = suspended & ~rel
+    nxt_release = jnp.min(jnp.where(still_susp, release, INF_TICK), axis=1)
+
+    return (
+        oomed, done, new_status, freed_cpu, freed_ram,
+        fresh, rel, nxt_retire, nxt_release,
+    )

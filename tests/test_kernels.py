@@ -196,12 +196,14 @@ def test_ssm_decode_consistency():
 @settings(max_examples=10, deadline=None)
 @given(
     seed=st.integers(0, 1000),
-    F=st.sampled_from([4, 8, 16]),
+    # 6 exercises the fleet-axis padding path (6 % block_fleet=4 != 0)
+    F=st.sampled_from([4, 6, 16]),
     MC=st.sampled_from([8, 32]),
+    MP=st.sampled_from([8, 16]),
     NP=st.integers(1, 4),
 )
-def test_fleet_tick_kernel_matches_ref(seed, F, MC, NP):
-    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+def test_fleet_tick_kernel_matches_ref(seed, F, MC, MP, NP):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 10)
     status = jax.random.randint(ks[0], (F, MC), 0, 2)
     end = jax.random.randint(ks[1], (F, MC), 0, 100)
     oom = jnp.where(
@@ -212,12 +214,17 @@ def test_fleet_tick_kernel_matches_ref(seed, F, MC, NP):
     cpus = jax.random.uniform(ks[4], (F, MC)) * 4
     ram = jax.random.uniform(ks[5], (F, MC)) * 8
     pool = jax.random.randint(ks[6], (F, MC), 0, NP)
+    # pipe table: EMPTY / WAITING / SUSPENDED mix, arrivals + releases
+    pstat = jnp.asarray([0, 2, 4], jnp.int32)[
+        jax.random.randint(ks[7], (F, MP), 0, 3)
+    ]
+    arrival = jax.random.randint(ks[8], (F, MP), 0, 150)
+    release = jax.random.randint(ks[9], (F, MP), 0, 150)
     tick = (jnp.arange(F, dtype=jnp.int32) * 7) % 100
-    ref = fleet_tick_ref(status, end, oom, cpus, ram, pool, tick, num_pools=NP)
-    out = fleet_tick_kernel(
-        status, end, oom, cpus, ram, pool, tick, num_pools=NP,
-        block_fleet=4, interpret=True,
-    )
+    args = (status, end, oom, cpus, ram, pool, pstat, arrival, release, tick)
+    ref = fleet_tick_ref(*args, num_pools=NP)
+    out = fleet_tick_kernel(*args, num_pools=NP, block_fleet=4, interpret=True)
+    assert len(ref) == len(out) == 9
     for a, b in zip(ref, out):
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-6
