@@ -1,20 +1,38 @@
 """Simulator engine throughput (paper §3.1 "low-cost" claim, and the
-headline §Perf hillclimb): paper-faithful tick loop vs event-skip vs
-the fleet engines, in simulated-seconds per wall-second and ticks/s.
+headline §Perf / §Fleet-Perf hillclimbs): the unified lane-major core
+vs the Python reference, in simulated-seconds per wall-second, and the
+fleet section on a 64-lane batch with skewed per-lane durations/event
+counts (LogNormal ``op_base_seconds_sigma=1.2`` — the chained-pipeline
+regime where lockstep batching wastes the most work).
 
-The fleet section compares the fleet-native fused engine (default
-`fleet_run` path) against the legacy vmap-of-while_loop path on a
-64-lane batch with skewed per-lane durations/event counts (LogNormal
-`op_base_seconds_sigma=1.2` — the chained-pipeline regime where
-lockstep vmap wastes the most work; see EXPERIMENTS.md §Fleet-Perf).
+The fleet rows compare three paths:
+
+* ``vmap`` — a benchmark-local reconstruction of the DELETED legacy
+  fleet path (vmap of a per-simulation event while_loop over the
+  reference ``_tick_body`` composition). It exists only here, as the
+  baseline the lane-major core is tracked against across PRs
+  (BENCH_fleet.json).
+* ``fused`` — the lane-major core, ``fleet_run(..., shard=None)``.
+* ``sharded`` — ``fleet_run(..., shard="auto")``: the same core
+  shard_mapped over every local device (force >1 on CPU with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
 """
 from __future__ import annotations
 
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import SimParams, fleet_run, generate_workload, run
+from repro.core import engine as engine_mod
+from repro.core import executor
+from repro.core.scheduler import (
+    get_vector_scheduler,
+    get_vector_scheduler_init,
+)
+from repro.core.state import init_state
+from repro.core.sweep import make_workload_batch
 
 
 def _time(fn, reps=3):
@@ -28,8 +46,46 @@ def _time(fn, reps=3):
     return min(ts), sum(ts) / len(ts)
 
 
+def _legacy_vmap_runner(params: SimParams, scheduler_key: str):
+    """Reconstruct the deleted ``fleet_engine="vmap"`` path: vmap of a
+    per-simulation event while_loop over the generic tick body. Kept
+    only as the benchmark baseline."""
+    scheduler_fn = get_vector_scheduler(scheduler_key)
+    sched_state0 = get_vector_scheduler_init(scheduler_key)(params)
+    horizon = jnp.int32(params.horizon_ticks)
+
+    def one(wl):
+        arr_sorted = engine_mod._sorted_arrivals(wl.arrival)
+
+        def cond(carry):
+            state, _ = carry
+            return state.tick < horizon
+
+        def body(carry):
+            state, ss = carry
+            tick = state.tick
+            state, ss, acted = engine_mod._tick_body(
+                state, ss, wl, params, scheduler_fn, tick
+            )
+            nxt, cursor = engine_mod._next_event_registers(
+                state, arr_sorted, tick, acted
+            )
+            nxt = jnp.minimum(nxt, horizon)
+            state = executor.integrate(
+                state, tick, nxt, params, exact_buckets=True
+            )
+            return state._replace(tick=nxt, nxt_arrival_cursor=cursor), ss
+
+        state, _ = jax.lax.while_loop(
+            cond, body, (init_state(params), sched_state0)
+        )
+        return state
+
+    return jax.jit(jax.vmap(one))
+
+
 def fleet_bench(smoke: bool = False) -> list[dict]:
-    """Fused fleet engine vs legacy vmap path on a skewed batch."""
+    """Lane-major core (unsharded + sharded) vs the deleted vmap path."""
     fleet_size = 8 if smoke else 64
     params = SimParams(
         duration=0.05 if smoke else 1.0,
@@ -44,20 +100,30 @@ def fleet_bench(smoke: bool = False) -> list[dict]:
     seeds = list(range(fleet_size))
     horizon = params.horizon_ticks
     reps = 1 if smoke else 3
+    n_dev = jax.local_device_count()
+
+    legacy = _legacy_vmap_runner(params, "priority")
+    wls = make_workload_batch(params, seeds)
+
+    runners = {
+        "vmap": lambda: jax.block_until_ready(legacy(wls).done_count),
+        "fused": lambda: jax.block_until_ready(
+            fleet_run(params, seeds, shard=None).done_count
+        ),
+        "sharded": lambda: jax.block_until_ready(
+            fleet_run(params, seeds, shard="auto").done_count
+        ),
+    }
 
     rows = []
-    for fleet_engine in ("vmap", "fused"):
-        def go(fe=fleet_engine):
-            jax.block_until_ready(
-                fleet_run(params, seeds, fleet_engine=fe).done_count
-            )
-
+    for name, go in runners.items():
         t_min, t_mean = _time(go, reps=reps)
         rows.append(
             {
-                "engine": f"fleet {fleet_engine} x{fleet_size}",
-                "fleet_engine": fleet_engine,
+                "engine": f"fleet {name} x{fleet_size}",
+                "fleet_engine": name,
                 "fleet_size": fleet_size,
+                "devices": n_dev if name == "sharded" else 1,
                 "wall_s": round(t_mean, 4),
                 "wall_s_min": round(t_min, 4),
                 "ticks_per_s": round(fleet_size * horizon / t_min),
@@ -66,9 +132,9 @@ def fleet_bench(smoke: bool = False) -> list[dict]:
                 ),
             }
         )
-    rows[1]["speedup_vs_vmap"] = round(
-        rows[0]["wall_s_min"] / rows[1]["wall_s_min"], 2
-    )
+    base = rows[0]["wall_s_min"]
+    for r in rows[1:]:
+        r["speedup_vs_vmap"] = round(base / r["wall_s_min"], 2)
     return rows
 
 
@@ -86,39 +152,23 @@ def main(print_rows: bool = True, smoke: bool = False) -> list[dict]:
     wl = generate_workload(params)
     horizon = params.horizon_ticks
 
-    def tick_run():
-        jax.block_until_ready(
-            run(params, workload=wl, engine="tick").state.done_count
-        )
-
     def event_run():
         jax.block_until_ready(
             run(params, workload=wl, engine="event").state.done_count
         )
 
-    t_tick, t_tick_mean = _time(tick_run, reps=1)
     t_event, t_event_mean = _time(event_run, reps=1 if smoke else 3)
     rows.append(
         {
-            "engine": "tick (paper-faithful)",
-            "wall_s": round(t_tick_mean, 4),
-            "wall_s_min": round(t_tick, 4),
-            "ticks_per_s": round(horizon / t_tick),
-            "sim_s_per_wall_s": round(params.duration / t_tick, 2),
-        }
-    )
-    rows.append(
-        {
-            "engine": "event-skip",
+            "engine": "lane-major core (F=1)",
             "wall_s": round(t_event_mean, 4),
             "wall_s_min": round(t_event, 4),
             "ticks_per_s": round(horizon / t_event),
             "sim_s_per_wall_s": round(params.duration / t_event, 2),
-            "speedup_vs_tick": round(t_tick / t_event, 1),
         }
     )
 
-    # python reference engine
+    # python reference engine (per-tick plain-object loop)
     t0 = time.perf_counter()
     run(params, workload=wl, engine="python")
     t_py = time.perf_counter() - t0
@@ -129,6 +179,7 @@ def main(print_rows: bool = True, smoke: bool = False) -> list[dict]:
             "wall_s_min": round(t_py, 4),
             "ticks_per_s": round(horizon / t_py),
             "sim_s_per_wall_s": round(params.duration / t_py, 2),
+            "speedup_core_vs_python": round(t_py / t_event, 1),
         }
     )
 

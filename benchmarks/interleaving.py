@@ -4,10 +4,9 @@ same hardware into dedicated pools — the XFaaS/Borg observation that
 motivates the unified FaaS runtime."""
 from __future__ import annotations
 
-from repro.core import Priority, SimParams, generate_workload, run
+from repro.core import SimParams, generate_workload, run
 
 
-import numpy as np
 
 from repro.core.engine_python import pipelines_from_workload
 from repro.core import workload_from_pipelines

@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-import sys
 import time
 
 BENCH_JSON = pathlib.Path("BENCH_fleet.json")
@@ -29,7 +28,13 @@ def _csv(name: str, us: float, derived: str = "") -> None:
 
 
 def write_fleet_json(rows: list[dict], smoke: bool) -> dict:
-    """Persist the fleet-engine rows; returns the validated payload."""
+    """Persist the fleet-engine rows; returns the validated payload.
+
+    The ``vmap`` row is the benchmark-local reconstruction of the
+    deleted legacy fleet path (see ``engine_throughput``), kept so the
+    lane-major core's speedup stays tracked across PRs; ``sharded`` is
+    the same core shard_mapped over every local device.
+    """
     path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
     fleet_rows = [r for r in rows if "fleet_engine" in r]
     by_engine = {r["fleet_engine"]: r for r in fleet_rows}
@@ -37,8 +42,12 @@ def write_fleet_json(rows: list[dict], smoke: bool) -> dict:
         "benchmark": "fleet_engine_throughput",
         "smoke": smoke,
         "fleet_size": fleet_rows[0]["fleet_size"] if fleet_rows else 0,
+        "devices": by_engine.get("sharded", {}).get("devices", 1),
         "rows": fleet_rows,
         "speedup_fused_vs_vmap": by_engine.get("fused", {}).get(
+            "speedup_vs_vmap"
+        ),
+        "speedup_sharded_vs_vmap": by_engine.get("sharded", {}).get(
             "speedup_vs_vmap"
         ),
     }
@@ -47,12 +56,18 @@ def write_fleet_json(rows: list[dict], smoke: bool) -> dict:
     loaded = json.loads(path.read_text())
     assert loaded["benchmark"] == "fleet_engine_throughput"
     assert loaded["rows"], "no fleet rows recorded"
+    assert {r["fleet_engine"] for r in loaded["rows"]} >= {
+        "vmap", "fused", "sharded"
+    }, "missing fleet path rows"
     for r in loaded["rows"]:
         for key in ("fleet_engine", "fleet_size", "wall_s", "wall_s_min",
                     "ticks_per_s", "sim_s_per_wall_s"):
             assert key in r, f"missing {key} in {r}"
     print(f"wrote {path} "
-          f"(speedup fused vs vmap: {loaded['speedup_fused_vs_vmap']})")
+          f"(speedup vs vmap baseline: fused "
+          f"{loaded['speedup_fused_vs_vmap']}, sharded "
+          f"{loaded['speedup_sharded_vs_vmap']} "
+          f"on {loaded['devices']} device(s))")
     return loaded
 
 

@@ -17,7 +17,6 @@ from eudoxia.core import Scheduler
 from eudoxia.core import Failure, Assignment, Pipeline
 from eudoxia.algorithm import register_scheduler, register_scheduler_init
 
-import eudoxia
 from repro.core import SimParams, generate_workload, run
 
 

@@ -1,7 +1,9 @@
-"""Monte-Carlo policy evaluation with vmap fleets — the TPU-native
-payoff of the SoA simulator redesign (DESIGN.md §2).
+"""Monte-Carlo policy evaluation with lane-major fleets — the
+device-scale payoff of the SoA simulator redesign (DESIGN.md §2).
 
-Runs a fleet of simulations per (policy x seed) entirely inside XLA and
+Runs a fleet of simulations per (policy x seed) entirely inside XLA —
+sharded across every local device (``shard="auto"``; force several on
+CPU with XLA_FLAGS=--xla_force_host_platform_device_count=4) — and
 prints the aggregate comparison a platform team would use to pick a
 scheduler.
 
@@ -35,7 +37,7 @@ def main():
             num_pools=2 if policy == "priority_pool" else 1,
         )
         t0 = time.time()
-        states = fleet_run(params, seeds)
+        states = fleet_run(params, seeds, shard="auto")
         s = fleet_summary(states, params)
         wall = time.time() - t0
         print(

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Mapping
+from typing import Mapping
 
 from repro.models.common import ModelConfig
 

@@ -15,11 +15,13 @@ from .params import SimParams, load_params
 from .scheduler import (
     SchedDecision,
     register_vector_scheduler,
+    register_vector_scheduler_family,
     register_vector_scheduler_init,
 )
 from .state import (
     SimState,
     Workload,
+    broadcast_lanes,
     cache_insert,
     container_schedule,
     init_state,
@@ -71,6 +73,7 @@ __all__ = [
     "register_scheduler",
     "register_scheduler_init",
     "register_vector_scheduler",
+    "register_vector_scheduler_family",
     "register_vector_scheduler_init",
     "generate_workload",
     "workload_from_pipelines",
@@ -79,6 +82,7 @@ __all__ = [
     "container_schedule",
     "cache_insert",
     "init_state",
+    "broadcast_lanes",
     "summarize",
     "completion_table",
     "fleet_run",

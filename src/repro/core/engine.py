@@ -1,19 +1,31 @@
-"""Simulation engines.
+"""The lane-major simulation core.
 
-Two compiled engines advance the same transition functions:
+One compiled engine advances every simulation. State is batched
+*lane-major* — every array carries a leading fleet axis ``[F, ...]`` —
+and a single shared ``lax.while_loop`` steps all lanes at once:
 
-* **tick** — the paper-faithful loop: one `lax.scan` iteration per 10 µs
-  tick ("Each iteration represents 1 CPU tick", §3.2).
-* **event** — an event-skip engine (`lax.while_loop`) that jumps straight
-  to the next arrival / completion / OOM / suspension-release / decision
-  follow-up tick. Because scheduler decisions are pure functions of the
-  state and the state is constant between events, both engines produce
-  identical metrics — a property the test-suite checks. This is the
-  headline performance optimisation over the paper's implementation
-  (see EXPERIMENTS.md §Perf).
+* phase 1 (completions + releases + arrival admission + per-pool freed
+  resources + next-event registers) is one fused [F, MC]/[F, MP] pass
+  through ``repro.kernels.sim_tick.fleet_tick`` (Pallas on TPU, the
+  bitwise-equivalent jnp reference elsewhere);
+* the scheduler and ``apply_decision`` run with early-exit inner loops
+  (``decision_loop(early_exit=True)``), whose while_loops vmap into
+  max-over-lanes trip counts — an event with an empty queue no longer
+  pays K sequential steps;
+* each lane skips to its own next event via the incremental
+  ``nxt_retire``/``nxt_release`` registers plus an O(log MP) binary
+  search of the sorted arrivals (``_next_event`` stays as the
+  recompute-from-scratch oracle, property-tested in tests/test_fleet.py);
+* finished lanes pass through untouched (``jnp.where`` on the carry)
+  and the loop exits when every lane is done.
 
-Both are pure JAX: a whole simulation is one XLA program, so fleets of
-simulations vmap/shard over devices (see ``sweep.py``).
+``run()`` is the F=1 special case (squeezed on return); ``fleet_run``
+(``sweep.py``) is the N-lane case, optionally sharded across local
+devices with ``shard_map``. Both engines the paper's design implied —
+the per-tick ``lax.scan`` loop and a per-simulation event loop — were
+deleted in the lane-major unification; the Python reference engine
+(``engine="python"``) remains as the readable executable specification,
+and the property suite checks the compiled core against it.
 """
 from __future__ import annotations
 
@@ -27,11 +39,10 @@ import jax.numpy as jnp
 from . import executor
 from .params import SimParams, load_params
 from .scheduler import (
-    SchedDecision,
     get_vector_scheduler,
     get_vector_scheduler_init,
 )
-from .state import INF_TICK, SimState, Workload, init_state
+from .state import INF_TICK, SimState, Workload, broadcast_lanes, init_state
 from .types import ContainerStatus, PipeStatus
 from .workload import get_workload
 
@@ -50,7 +61,11 @@ class SimResult:
 
 
 # ---------------------------------------------------------------------------
-# One tick worth of work (shared by both engines).
+# One tick worth of work, as the sequential composition of executor
+# passes. This is the *reference* body: the lane-major engine fuses the
+# first three passes (see ``lane_event_step``), and the property suite +
+# the benchmark reconstruction of the deleted vmap baseline drive this
+# composition to prove the fusion semantics-preserving.
 # ---------------------------------------------------------------------------
 def _tick_body(
     state: SimState,
@@ -93,7 +108,7 @@ def _next_event_registers(
     executor-maintained ``nxt_retire``/``nxt_release`` registers and
     binary-searches the arrival-sorted workload — O(log MP) per event
     rather than O(MP + MC). Provably equal to the full recompute:
-    after ``process_arrivals`` at tick t, a pipeline slot is EMPTY iff
+    after arrival admission at tick t, a pipeline slot is EMPTY iff
     its arrival tick is > t, so the pending-arrival minimum is the first
     sorted arrival beyond t; the register invariants cover the rest
     (see the property test in tests/test_fleet.py).
@@ -113,7 +128,13 @@ def _next_event_registers(
 
 
 def _next_event(state: SimState, wl: Workload, tick: jax.Array, acted) -> jax.Array:
-    """Earliest tick strictly after ``tick`` at which state can change."""
+    """Earliest tick strictly after ``tick`` at which state can change.
+
+    The recompute-from-scratch oracle for the ``nxt_retire`` /
+    ``nxt_release`` registers the engine actually navigates by:
+    tests/test_fleet.py steps ``lane_event_step`` and asserts this full
+    table reduction equals :func:`_next_event_registers` at every event.
+    """
     pending = state.pipe_status == int(PipeStatus.EMPTY)
     arr = jnp.where(pending & (wl.arrival > tick), wl.arrival, INF_TICK)
     next_arrival = jnp.min(arr)
@@ -140,93 +161,52 @@ def _next_event(state: SimState, wl: Workload, tick: jax.Array, acted) -> jax.Ar
 
 
 # ---------------------------------------------------------------------------
-# Engines.
+# The lane-major engine.
 # ---------------------------------------------------------------------------
-def _run_tick_engine(params, wl, scheduler_fn, sched_state0):
-    horizon = params.horizon_ticks
+def lane_event_step(
+    params: SimParams,
+    horizon: jax.Array,
+    scheduler_fn: Callable,
+    state: SimState,
+    sched_state: Any,
+    wl: Workload,
+    arr_sorted: jax.Array,
+    tick: jax.Array,
+    ph,
+):
+    """Advance ONE lane by one event: apply the fused phase-1 masks,
+    schedule, apply the decision, and jump to the lane's next event.
 
-    def step(carry, tick):
-        state, sched_state = carry
-        state, sched_state, _ = _tick_body(
-            state, sched_state, wl, params, scheduler_fn, tick
-        )
-        state = executor.integrate(state, tick, tick + 1, params, exact_buckets=False)
-        return (state, sched_state), None
-
-    state0 = init_state(params)
-    (state, sched_state), _ = jax.lax.scan(
-        step,
-        (state0, sched_state0),
-        jnp.arange(horizon, dtype=jnp.int32),
+    Module-level so the oracle test can drive a single lane directly
+    (``_next_event`` vs ``_next_event_registers`` at every event); the
+    engine vmaps it over the fleet axis.
+    """
+    state = executor.apply_fused_phase1(state, wl, tick, params, ph)
+    sched_state, dec = scheduler_fn(sched_state, state, wl, params)
+    state = executor.apply_decision(state, wl, dec, tick, params, early_exit=True)
+    acted = (
+        jnp.any(dec.suspend)
+        | jnp.any(dec.reject)
+        | jnp.any(dec.assign_pipe >= 0)
     )
-    state = state._replace(tick=jnp.asarray(horizon, jnp.int32))
-    return state, sched_state
+    nxt, cursor = _next_event_registers(state, arr_sorted, tick, acted)
+    nxt = jnp.minimum(nxt, horizon)
+    state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
+    return state._replace(tick=nxt, nxt_arrival_cursor=cursor), sched_state
 
 
-def _run_event_engine(params, wl, scheduler_fn, sched_state0):
-    horizon = jnp.int32(params.horizon_ticks)
-    arr_sorted = _sorted_arrivals(wl.arrival)
-
-    def cond(carry):
-        state, _ = carry
-        return state.tick < horizon
-
-    def body(carry):
-        state, sched_state = carry
-        tick = state.tick
-        state, sched_state, acted = _tick_body(
-            state, sched_state, wl, params, scheduler_fn, tick
-        )
-        # register-based next event: executor-maintained nxt_retire /
-        # nxt_release + a binary search of the sorted arrivals, instead
-        # of the full-table reduction (_next_event stays as the
-        # recompute-from-scratch reference, property-tested against this)
-        nxt, cursor = _next_event_registers(state, arr_sorted, tick, acted)
-        nxt = jnp.minimum(nxt, horizon)
-        state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
-        state = state._replace(tick=nxt, nxt_arrival_cursor=cursor)
-        return state, sched_state
-
-    state0 = init_state(params)
-    state, sched_state = jax.lax.while_loop(cond, body, (state0, sched_state0))
-    return state, sched_state
-
-
-# ---------------------------------------------------------------------------
-# Fleet-native event engine: one shared while_loop over the whole batch.
-#
-# ``vmap(_run_event_engine)`` (the legacy fleet path) keeps every lane in
-# lockstep paying the *full* generic tick body until the slowest lane
-# exhausts its events. This engine batches the loop by hand instead:
-#
-# * phase 1 (completions + releases + arrival admission + per-pool freed
-#   resources + next-event registers) is one fused [F, MC]/[F, MP] pass
-#   through ``repro.kernels.sim_tick.fleet_tick`` (Pallas on TPU, the
-#   bitwise-equivalent jnp reference elsewhere);
-# * the scheduler and ``apply_decision`` run their *early-exit* variants,
-#   whose inner while_loops vmap into max-over-lanes trip counts — an
-#   event with an empty queue no longer pays K sequential steps;
-# * each lane skips to its own next event via the incremental registers
-#   (O(log MP) binary search instead of O(MP + MC) table reductions);
-# * finished lanes pass through untouched (`jnp.where` on the carry) and
-#   the loop exits when every lane is done.
-#
-# Per-lane results are bitwise-identical to ``run(..., engine="event")``
-# (property-tested in tests/test_fleet.py).
-# ---------------------------------------------------------------------------
-def _run_fleet_event_engine(params, wls, scheduler_fn, sched_state0, impl="auto"):
+def _run_lane_major_engine(params, wls, scheduler_fn, sched_state0, impl="auto"):
+    """Shared masked while_loop over the whole batch ``wls`` [F, ...]."""
     from repro.kernels.sim_tick import fleet_tick
 
     horizon = jnp.int32(params.horizon_ticks)
     F = wls.arrival.shape[0]
     arr_sorted = _sorted_arrivals(wls.arrival)  # [F, MP + 1]
 
-    def bcast(x):
-        x = jnp.asarray(x)
-        return jnp.broadcast_to(x, (F,) + x.shape)
+    states0 = broadcast_lanes(init_state(params), F)
+    scheds0 = broadcast_lanes(sched_state0, F)
 
-    states0 = jax.tree.map(bcast, init_state(params))
-    scheds0 = jax.tree.map(bcast, sched_state0)
+    lane = functools.partial(lane_event_step, params, horizon, scheduler_fn)
 
     def cond(carry):
         states, _ = carry
@@ -244,22 +224,6 @@ def _run_fleet_event_engine(params, wls, scheduler_fn, sched_state0, impl="auto"
             tick, num_pools=params.num_pools, impl=impl,
         )
 
-        def lane(st, ss, wl, arr_l, t, ph_l):
-            st = executor.apply_fused_phase1(st, wl, t, params, ph_l)
-            ss, dec = scheduler_fn(ss, st, wl, params)
-            st = executor.apply_decision(
-                st, wl, dec, t, params, early_exit=True
-            )
-            acted = (
-                jnp.any(dec.suspend)
-                | jnp.any(dec.reject)
-                | jnp.any(dec.assign_pipe >= 0)
-            )
-            nxt, cursor = _next_event_registers(st, arr_l, t, acted)
-            nxt = jnp.minimum(nxt, horizon)
-            st = executor.integrate(st, t, nxt, params, exact_buckets=True)
-            return st._replace(tick=nxt, nxt_arrival_cursor=cursor), ss
-
         new_states, new_scheds = jax.vmap(lane)(
             states, scheds, wls, arr_sorted, tick, ph
         )
@@ -276,20 +240,26 @@ def _run_fleet_event_engine(params, wls, scheduler_fn, sched_state0, impl="auto"
     return jax.lax.while_loop(cond, body, (states0, scheds0))
 
 
-@functools.partial(jax.jit, static_argnames=("params", "scheduler_key", "engine"))
-def _run_compiled(
+@functools.partial(
+    jax.jit, static_argnames=("params", "scheduler_key", "impl")
+)
+def _fleet_compiled(
     params: SimParams,
-    wl: Workload,
+    workloads: Workload,  # batched: leading axis = fleet
     scheduler_key: str,
-    engine: str,
-    sched_state0: Any,
+    impl: str = "auto",
 ):
-    scheduler_fn = get_vector_scheduler(scheduler_key)
-    if engine == "tick":
-        return _run_tick_engine(params, wl, scheduler_fn, sched_state0)
-    if engine == "event":
-        return _run_event_engine(params, wl, scheduler_fn, sched_state0)
-    raise ValueError(f"unknown engine {engine!r}")
+    """THE compiled simulation core: every entry point lands here.
+
+    ``run()`` passes a batch of one lane, ``fleet_run`` a batch of N
+    (possibly one shard of a device-sharded fleet). Returns the batched
+    final ``(SimState, sched_state)``.
+    """
+    scheduler_fn = get_vector_scheduler(scheduler_key, early_exit=True)
+    sched_state0 = get_vector_scheduler_init(scheduler_key)(params)
+    return _run_lane_major_engine(
+        params, workloads, scheduler_fn, sched_state0, impl
+    )
 
 
 def run(
@@ -297,7 +267,15 @@ def run(
     workload: Workload | None = None,
     engine: str | None = None,
 ) -> SimResult:
-    """Run one simulation; this is what ``eudoxia.run_simulator`` wraps."""
+    """Run one simulation; this is what ``eudoxia.run_simulator`` wraps.
+
+    A single run is a fleet of one: the workload gains a lane axis, the
+    lane-major core advances it, and the result is squeezed back —
+    bitwise-identical to the dedicated single-sim event engine this
+    replaced (checked against a frozen capture during the unification
+    refactor; continuously guarded by the Python-reference equivalence
+    suite and the run-vs-fleet-lane tests in tests/test_fleet.py).
+    """
     params = load_params(paramfile)
     engine = engine or params.engine
     wl = workload if workload is not None else get_workload(params)
@@ -305,19 +283,28 @@ def run(
         from .engine_python import run_python_engine
 
         return run_python_engine(params, wl)
-    sched_state0 = get_vector_scheduler_init(params.scheduling_algo)(params)
-    state, sched_state = _run_compiled(
-        params, wl, params.scheduling_algo, engine, sched_state0
-    )
+    if engine != "event":
+        raise ValueError(
+            f"unknown engine {engine!r}: the per-tick scan engine was removed "
+            "in the lane-major unification (the event core is "
+            "bitwise-identical and strictly faster); use engine='event' "
+            "(default) or the reference engine='python'"
+        )
+    wls = jax.tree.map(lambda x: x[None], wl)
+    states, scheds = _fleet_compiled(params, wls, params.scheduling_algo)
+    state = jax.tree.map(lambda x: x[0], states)
+    sched_state = jax.tree.map(lambda x: x[0], scheds)
     return SimResult(state=state, workload=wl, params=params, sched_state=sched_state)
 
 
 __all__ = [
     "SimResult",
     "run",
+    "lane_event_step",
+    "_fleet_compiled",
     "_tick_body",
     "_next_event",
     "_next_event_registers",
     "_sorted_arrivals",
-    "_run_fleet_event_engine",
+    "_run_lane_major_engine",
 ]

@@ -20,10 +20,9 @@ from .algorithm import (
     register_scheduler_init,
 )
 from .params import SimParams
-from .state import INF_TICK, SimState, Workload, init_state
+from .state import INF_TICK, Workload, init_state
 from .types import (
     Assignment,
-    ContainerStatus,
     Failure,
     Operator,
     Pipeline,

@@ -19,9 +19,9 @@ extension path the paper's registry design enables.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, List
 
-import jax
 import jax.numpy as jnp
 
 from .algorithm import register_scheduler, register_scheduler_init
@@ -29,14 +29,11 @@ from .engine_python import Scheduler, _priority_like_py
 from .params import SimParams
 from .scheduler import (
     EPS,
-    SchedDecision,
     _priority_like,
-    cache_aware_scheduler,
     decision_loop,
     empty_decision,
-    locality_pool_scheduler,
-    register_fleet_vector_scheduler,
-    register_vector_scheduler,
+    get_vector_scheduler,
+    register_vector_scheduler_family,
 )
 from .state import INF_TICK, SimState, Workload
 from .types import Failure, Pipeline, PipeStatus, Suspension
@@ -106,8 +103,9 @@ def _sjf_like(early_exit: bool = False):
     return sjf
 
 
-sjf_vector = register_vector_scheduler("sjf")(_sjf_like())
-register_fleet_vector_scheduler("sjf")(_sjf_like(early_exit=True))
+# ``_sjf_like`` IS the family: make(early_exit) -> scheduler
+register_vector_scheduler_family("sjf")(_sjf_like)
+sjf_vector = get_vector_scheduler("sjf")
 
 
 @register_scheduler_init(key="sjf")
@@ -171,18 +169,16 @@ def sjf_python(sch: Scheduler, failures: List[Failure], new: List[Pipeline]):
 
 
 # ---------------------------------------------------------------------------
-# Data-plane schedulers: vector implementations are produced by the
-# generalised priority machinery in scheduler.py; the Python twins reuse
-# the mirrored machinery in engine_python.py. Registered in BOTH worlds.
+# Data-plane schedulers: the vector families are the generalised
+# priority machinery in scheduler.py (parameterised by the early_exit
+# knob in the unified registry); the Python twins reuse the mirrored
+# machinery in engine_python.py. Registered in BOTH worlds.
 # ---------------------------------------------------------------------------
-register_vector_scheduler("cache_aware")(cache_aware_scheduler)
-register_vector_scheduler("locality_pool")(locality_pool_scheduler)
-# fleet-specialised (early-exit) twins for the fleet-native engine
-register_fleet_vector_scheduler("cache_aware")(
-    _priority_like("cache", early_exit=True)
+register_vector_scheduler_family("cache_aware")(
+    functools.partial(_priority_like, "cache")
 )
-register_fleet_vector_scheduler("locality_pool")(
-    _priority_like("locality", early_exit=True)
+register_vector_scheduler_family("locality_pool")(
+    functools.partial(_priority_like, "locality")
 )
 
 

@@ -107,7 +107,7 @@ class SimParams:
     container_warm_ticks: int = 20_000
 
     # ---- engine -------------------------------------------------------------
-    engine: str = "event"              # "tick" | "event" | "python"
+    engine: str = "event"              # "event" (lane-major core) | "python"
     max_containers: int = 64
     max_assignments_per_tick: int = 16
     util_log_buckets: int = 512        # downsampled utilisation log length

@@ -21,6 +21,7 @@ Three built-ins mirror §4.1.2:
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -91,7 +92,10 @@ def decision_loop(step, K: int, carry0, early_exit: bool):
     slots. With ``early_exit`` the loop stops at the first ``keep_going
     = False`` — valid whenever later iterations are provable no-ops
     (the waiting-queue mask can only shrink); under vmap the while_loop
-    trip count becomes the max over lanes of actual queue length."""
+    trip count becomes the max over lanes of actual queue length. This
+    knob is what parameterises a scheduler *family* in the unified
+    registry below: both variants are bitwise-identical, and the
+    lane-major core compiles ``early_exit=True``."""
     if early_exit:
 
         def w_cond(c):
@@ -183,8 +187,8 @@ def _priority_like(pool_mode: str, early_exit: bool = False):
     ``while_loop`` that stops as soon as the waiting queue is exhausted
     (once ``select_next_pipe`` returns -1 the candidate mask can only
     shrink, so every later iteration is a no-op). Bitwise-identical
-    decisions; the fleet engine registers these variants so events with
-    short queues stop paying K sequential scheduler steps.
+    decisions; the lane-major core compiles the early-exit variant so
+    events with short queues stop paying K sequential scheduler steps.
     """
     multi_pool = pool_mode != "single"
 
@@ -308,35 +312,67 @@ def _priority_like(pool_mode: str, early_exit: bool = False):
     return scheduler
 
 
-priority_scheduler = _priority_like("single")
-priority_pool_scheduler = _priority_like("free")
-cache_aware_scheduler = _priority_like("cache")
-locality_pool_scheduler = _priority_like("locality")
-
-
 # ---------------------------------------------------------------------------
-# Vector-scheduler registry (compiled engines). The Python-API registry
-# (paper Listing 4 decorators) lives in ``algorithm.py``.
+# Vector-scheduler registry (the compiled lane-major core). The
+# Python-API registry (paper Listing 4 decorators) lives in
+# ``algorithm.py``.
 #
-# A second, optional registry holds *fleet-specialised* variants: the
-# same decision function restructured for the fleet-native event engine
-# (early-exit inner loops that vmap into max-over-lanes trip counts).
-# ``get_fleet_vector_scheduler`` falls back to the plain variant, so
-# custom user schedulers work in fleets unchanged.
+# ONE registry of scheduler *families*: a family is a factory
+# ``make(early_exit: bool) -> scheduler`` over the existing
+# ``decision_loop(early_exit=...)`` knob. Both variants of a family make
+# bitwise-identical decisions; ``early_exit=True`` (what the engine
+# compiles) trades the fixed K-iteration loop for a while_loop that
+# vmaps into max-over-lanes trip counts. Plain schedulers (the custom
+# user path) register a single function that serves both variants.
+# Builds are cached per (key, early_exit) so repeated lookups hand jit
+# the same callable.
 # ---------------------------------------------------------------------------
 VectorScheduler = Callable[
     [Any, SimState, Workload, SimParams], tuple[Any, SchedDecision]
 ]
+SchedulerFamily = Callable[[bool], VectorScheduler]
 
-_VECTOR_SCHEDULERS: dict[str, VectorScheduler] = {}
+_VECTOR_FAMILIES: dict[str, SchedulerFamily] = {}
 _VECTOR_INITS: dict[str, Callable[[SimParams], Any]] = {}
-_FLEET_SCHEDULERS: dict[str, VectorScheduler] = {}
+_BUILT: dict[tuple[str, bool], VectorScheduler] = {}
+# early-exit overrides installed via the deprecated fleet-registry shim;
+# kept separate so (re-)registering a plain scheduler cannot clobber
+# them — registration order stays irrelevant, as under the old dual
+# registries. Dies with the shim.
+_SHIM_EARLY_EXIT: dict[str, VectorScheduler] = {}
+
+
+def _norm(key: str) -> str:
+    return key.replace("-", "_").lower()
+
+
+def _invalidate(k: str) -> None:
+    _BUILT.pop((k, False), None)
+    _BUILT.pop((k, True), None)
+    if k in _SHIM_EARLY_EXIT:
+        _BUILT[(k, True)] = _SHIM_EARLY_EXIT[k]
 
 
 def register_vector_scheduler(key: str):
+    """Register a plain lane-major scheduler (used for both variants)."""
+
     def deco(fn: VectorScheduler) -> VectorScheduler:
-        _VECTOR_SCHEDULERS[_norm(key)] = fn
+        k = _norm(key)
+        _VECTOR_FAMILIES[k] = lambda early_exit, _fn=fn: _fn
+        _invalidate(k)
         return fn
+
+    return deco
+
+
+def register_vector_scheduler_family(key: str):
+    """Register a scheduler family ``make(early_exit: bool) -> fn``."""
+
+    def deco(make: SchedulerFamily) -> SchedulerFamily:
+        k = _norm(key)
+        _VECTOR_FAMILIES[k] = make
+        _invalidate(k)
+        return make
 
     return deco
 
@@ -349,18 +385,17 @@ def register_vector_scheduler_init(key: str):
     return deco
 
 
-def _norm(key: str) -> str:
-    return key.replace("-", "_").lower()
-
-
-def get_vector_scheduler(key: str) -> VectorScheduler:
+def get_vector_scheduler(key: str, early_exit: bool = False) -> VectorScheduler:
     k = _norm(key)
-    if k not in _VECTOR_SCHEDULERS:
+    if k not in _VECTOR_FAMILIES:
         raise KeyError(
             f"unknown scheduler {key!r}; registered: "
-            f"{sorted(_VECTOR_SCHEDULERS)}"
+            f"{sorted(_VECTOR_FAMILIES)}"
         )
-    return _VECTOR_SCHEDULERS[k]
+    ck = (k, bool(early_exit))
+    if ck not in _BUILT:
+        _BUILT[ck] = _VECTOR_FAMILIES[k](bool(early_exit))
+    return _BUILT[ck]
 
 
 def get_vector_scheduler_init(key: str) -> Callable[[SimParams], Any]:
@@ -368,32 +403,66 @@ def get_vector_scheduler_init(key: str) -> Callable[[SimParams], Any]:
 
 
 def has_vector_scheduler(key: str) -> bool:
-    return _norm(key) in _VECTOR_SCHEDULERS
+    return _norm(key) in _VECTOR_FAMILIES
 
 
+# ---------------------------------------------------------------------------
+# Deprecated fleet-registry shims (one release). The single/fleet split
+# collapsed into the family registry above; these keep old call sites
+# working while warning.
+# ---------------------------------------------------------------------------
 def register_fleet_vector_scheduler(key: str):
+    import warnings
+
+    warnings.warn(
+        "register_fleet_vector_scheduler is deprecated: the scheduler "
+        "registries were unified — register a family with "
+        "register_vector_scheduler_family(key)(make) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+
     def deco(fn: VectorScheduler) -> VectorScheduler:
-        _FLEET_SCHEDULERS[_norm(key)] = fn
+        k = _norm(key)
+        # honour the old semantics: this fn is the variant the engine
+        # runs, regardless of plain-registration order
+        _SHIM_EARLY_EXIT[k] = fn
+        _BUILT[(k, True)] = fn
+        if k not in _VECTOR_FAMILIES:
+            _VECTOR_FAMILIES[k] = lambda early_exit, _fn=fn: _fn
         return fn
 
     return deco
 
 
 def get_fleet_vector_scheduler(key: str) -> VectorScheduler:
-    """Fleet-specialised variant if registered, else the plain one."""
-    k = _norm(key)
-    return _FLEET_SCHEDULERS.get(k) or get_vector_scheduler(k)
+    """Deprecated alias for ``get_vector_scheduler(key, early_exit=True)``."""
+    import warnings
+
+    warnings.warn(
+        "get_fleet_vector_scheduler is deprecated: use "
+        "get_vector_scheduler(key, early_exit=True)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return get_vector_scheduler(key, early_exit=True)
 
 
 register_vector_scheduler("naive")(naive_scheduler)
-register_vector_scheduler("priority")(priority_scheduler)
-register_vector_scheduler("priority_pool")(priority_pool_scheduler)
-# naive has no inner loop: the plain function IS the fleet variant
-register_fleet_vector_scheduler("naive")(naive_scheduler)
-register_fleet_vector_scheduler("priority")(_priority_like("single", early_exit=True))
-register_fleet_vector_scheduler("priority_pool")(_priority_like("free", early_exit=True))
-# cache_aware / locality_pool are registered (in both worlds) from
+register_vector_scheduler_family("priority")(
+    functools.partial(_priority_like, "single")
+)
+register_vector_scheduler_family("priority_pool")(
+    functools.partial(_priority_like, "free")
+)
+# cache_aware / locality_pool / sjf families are registered from
 # extra_schedulers.py alongside their Python twins.
+
+# stable aliases for the no-early-exit builds (public API compat)
+priority_scheduler = get_vector_scheduler("priority")
+priority_pool_scheduler = get_vector_scheduler("priority_pool")
+cache_aware_scheduler = _priority_like("cache")
+locality_pool_scheduler = _priority_like("locality")
 
 
 __all__ = [
@@ -408,6 +477,7 @@ __all__ = [
     "cache_aware_scheduler",
     "locality_pool_scheduler",
     "register_vector_scheduler",
+    "register_vector_scheduler_family",
     "register_vector_scheduler_init",
     "register_fleet_vector_scheduler",
     "get_vector_scheduler",

@@ -294,6 +294,21 @@ def cache_insert(
     )
 
 
+def broadcast_lanes(tree, n_lanes: int):
+    """Broadcast a single-sim pytree to ``n_lanes`` lane-major copies.
+
+    Every leaf gains a leading fleet axis ``[F, ...]`` — the layout the
+    unified engine advances. Works on ``SimState``, scheduler states and
+    any other pytree (including ``None``-leaved ones).
+    """
+
+    def b(x):
+        x = jnp.asarray(x)
+        return jnp.broadcast_to(x, (n_lanes,) + x.shape)
+
+    return jax.tree.map(b, tree)
+
+
 def used_resources(state: SimState):
     """Per-pool (used_cpus, used_ram) from live containers."""
     NP = state.pool_cpu_cap.shape[0]
@@ -315,6 +330,7 @@ __all__ = [
     "Workload",
     "SimState",
     "init_state",
+    "broadcast_lanes",
     "container_schedule",
     "used_resources",
     "seconds",

@@ -1,14 +1,18 @@
-"""Simulation fleets: the TPU-native payoff of the SoA redesign.
+"""Simulation fleets: the device-scale payoff of the lane-major core.
 
 The paper pitches Eudoxia as "a cheap mechanism for developers to
 evaluate different scheduling algorithms against their infrastructure".
-On a TPU pod, *cheap* becomes *massively parallel*: because one
-simulation is a pure JAX program over fixed-shape arrays, we can
+Because the whole simulator is one lane-major XLA program
+(``engine._fleet_compiled``), *cheap* becomes *massively parallel*:
 
-* ``vmap`` it over seeds / workload parameters -> Monte-Carlo policy
-  evaluation in a single XLA program, and
-* ``shard_map`` that batch over the ``data`` axis of a production mesh,
-  scaling to thousands of concurrent simulations.
+* a fleet of seeds is just more lanes in the batch axis — Monte-Carlo
+  policy evaluation in a single compiled program, and
+* ``fleet_run(..., shard="auto")`` splits the fleet axis across every
+  local device with ``shard_map``: each device runs the engine's shared
+  while_loop on its own lanes and exits when *its* lanes drain, with no
+  cross-device synchronisation at all (there are no collectives in the
+  engine). Lanes are padded to a device multiple inside this module and
+  the padding is stripped before returning.
 
 ``fleet_run`` is also what the serving layer uses to pick an admission /
 preemption policy before it touches the real cluster (DESIGN.md §4).
@@ -16,58 +20,19 @@ preemption policy before it touches the real cluster (DESIGN.md §4).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .engine import (
-    _run_event_engine,
-    _run_fleet_event_engine,
-    _run_tick_engine,
-)
+from repro.parallel.compat import shard_map
+
+from .engine import _fleet_compiled
 from .params import SimParams
-from .scheduler import (
-    get_fleet_vector_scheduler,
-    get_vector_scheduler,
-    get_vector_scheduler_init,
-)
-from .state import SimState, Workload
+from .state import INF_TICK, SimState, Workload
 from .workload import generate_workload
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("params", "scheduler_key", "engine", "fleet_engine"),
-)
-def _fleet_compiled(
-    params: SimParams,
-    workloads: Workload,  # batched: leading axis = fleet
-    scheduler_key: str,
-    engine: str,
-    fleet_engine: str = "fused",
-):
-    sched_state0 = get_vector_scheduler_init(scheduler_key)(params)
-    if engine == "event" and fleet_engine == "fused":
-        # fleet-native engine: shared while_loop, fused phase-1 pass,
-        # early-exit schedulers, incremental next-event registers
-        scheduler_fn = get_fleet_vector_scheduler(scheduler_key)
-        states, _ = _run_fleet_event_engine(
-            params, workloads, scheduler_fn, sched_state0
-        )
-        return states
-
-    # legacy path: vmap the single-sim engine (kept as the comparison
-    # baseline; see benchmarks/engine_throughput.py)
-    scheduler_fn = get_vector_scheduler(scheduler_key)
-    runner = _run_event_engine if engine == "event" else _run_tick_engine
-
-    def one(wl: Workload) -> SimState:
-        state, _ = runner(params, wl, scheduler_fn, sched_state0)
-        return state
-
-    return jax.vmap(one)(workloads)
 
 
 def make_workload_batch(params: SimParams, seeds: Sequence[int]) -> Workload:
@@ -77,30 +42,122 @@ def make_workload_batch(params: SimParams, seeds: Sequence[int]) -> Workload:
     return jax.vmap(lambda k: generate_workload(params, k))(keys)
 
 
+def pad_lanes(wls: Workload, n_lanes: int) -> Workload:
+    """Pad the fleet axis of ``wls`` up to ``n_lanes``.
+
+    Padding lanes replicate lane 0's shapes but have every arrival at
+    INF_TICK, so the engine retires them in a single event (no arrivals
+    -> the first next-event jump lands on the horizon) — they cost one
+    loop iteration, not a simulation.
+    """
+    F = wls.arrival.shape[0]
+    pad = n_lanes - F
+    if pad <= 0:
+        return wls
+
+    def pad_leaf(x):
+        fill = jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])
+        return jnp.concatenate([x, fill], axis=0)
+
+    padded = jax.tree.map(pad_leaf, wls)
+    return padded._replace(
+        arrival=padded.arrival.at[F:].set(INF_TICK)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("params", "scheduler_key", "impl", "n_shards")
+)
+def _fleet_sharded(
+    params: SimParams,
+    workloads: Workload,  # [F, ...] with F a multiple of n_shards
+    scheduler_key: str,
+    impl: str,
+    n_shards: int,
+):
+    """shard_map the lane-major core over the fleet axis of a 1-D local
+    device mesh. Each shard is an independent run of the same engine on
+    F/n_shards lanes; per-lane results are bitwise those of the
+    unsharded call (tests/test_fleet.py asserts it lane-for-lane)."""
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.local_devices()[:n_shards]), ("fleet",)
+    )
+    spec = jax.sharding.PartitionSpec("fleet")
+
+    def shard_fn(wls):
+        states, _ = _fleet_compiled(params, wls, scheduler_key, impl)
+        return states
+
+    return shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(spec,),
+        out_specs=spec,
+        check_vma=False,
+    )(workloads)
+
+
+def _resolve_shards(shard, fleet_size: int) -> int:
+    if shard is None:
+        return 1
+    n_dev = jax.local_device_count()
+    n = n_dev if shard == "auto" else int(shard)
+    if n > n_dev:
+        raise ValueError(
+            f"shard={shard!r} asks for {n} devices but only {n_dev} are "
+            "local (hint for CPU testing: "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+    return max(1, min(n, fleet_size))
+
+
 def fleet_run(
     params: SimParams,
     seeds: Sequence[int],
     scheduler_key: str | None = None,
-    engine: str = "event",
-    mesh: jax.sharding.Mesh | None = None,
-    axis: str = "data",
-    fleet_engine: str = "fused",
+    *,
+    shard: str | int | None = None,
+    impl: str = "auto",
+    fleet_engine: str | None = None,
 ) -> SimState:
-    """Run len(seeds) simulations in parallel; optionally sharded on a mesh.
+    """Run len(seeds) simulations in parallel on the lane-major core.
 
-    ``fleet_engine="fused"`` (default) runs the fleet-native event engine
-    — one shared masked while_loop over the batch; ``"vmap"`` keeps the
-    legacy vmap-of-while_loop path. Both are bitwise-identical per lane
-    to ``run(..., engine="event")``. Returns the batched final SimState
-    (leading axis = fleet member).
+    ``shard=None`` (default) keeps the whole fleet on one device;
+    ``shard="auto"`` splits the fleet axis across all local devices with
+    ``shard_map`` (``shard=n`` for the first n). Lane padding to a
+    device multiple is handled here and stripped from the result.
+    Returns the batched final SimState (leading axis = fleet member),
+    per-lane bitwise-identical whatever the sharding.
+
+    ``fleet_engine`` is deprecated: the fused lane-major engine is the
+    only simulation core (the legacy ``"vmap"`` path was deleted).
     """
+    if fleet_engine is not None:
+        warnings.warn(
+            "fleet_engine is deprecated and ignored unless it names the "
+            "removed path: the fused lane-major engine is the only core",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if fleet_engine != "fused":
+            raise ValueError(
+                f"fleet_engine={fleet_engine!r} was removed in the "
+                "lane-major unification; the fused engine is the only path"
+            )
     scheduler_key = scheduler_key or params.scheduling_algo
     wls = make_workload_batch(params, seeds)
-    if mesh is not None:
-        pspec = jax.sharding.PartitionSpec(axis)
-        sharding = jax.sharding.NamedSharding(mesh, pspec)
-        wls = jax.tree.map(lambda x: jax.device_put(x, sharding), wls)
-    return _fleet_compiled(params, wls, scheduler_key, engine, fleet_engine)
+    F = wls.arrival.shape[0]
+    n_shards = _resolve_shards(shard, F)
+    if n_shards <= 1:
+        states, _ = _fleet_compiled(params, wls, scheduler_key, impl)
+        return states
+    F_pad = -(-F // n_shards) * n_shards
+    states = _fleet_sharded(
+        params, pad_lanes(wls, F_pad), scheduler_key, impl, n_shards
+    )
+    if F_pad != F:
+        states = jax.tree.map(lambda x: x[:F], states)
+    return states
 
 
 def fleet_summary(states: SimState, params: SimParams) -> dict:
@@ -139,4 +196,10 @@ def _fleet_hit_rate(states: SimState) -> float:
     return float(rates.mean())
 
 
-__all__ = ["fleet_run", "fleet_summary", "make_workload_batch"]
+__all__ = [
+    "fleet_run",
+    "fleet_summary",
+    "make_workload_batch",
+    "pad_lanes",
+    "_fleet_compiled",
+]

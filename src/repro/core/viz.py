@@ -10,7 +10,6 @@ from __future__ import annotations
 import numpy as np
 
 from .engine import SimResult
-from .state import INF_TICK
 from .types import PipeStatus, Priority, TICKS_PER_SECOND
 
 BLOCKS = " ▁▂▃▄▅▆▇█"

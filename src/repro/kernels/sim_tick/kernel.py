@@ -6,8 +6,8 @@ retire/admission/release masks are VPU compares, the per-pool
 freed-resource reduction is NP masked row-sums, and the next-event
 registers (min end/oom over surviving containers, min release over
 still-suspended pipelines) are masked row-mins. The tile pair is the
-unit of HBM traffic — each fleet member's tables are read exactly once
-per event, which is what makes the fleet engine memory-bound-optimal on
+unit of HBM traffic — each lane's tables are read exactly once per
+event, which is what makes the lane-major core memory-bound-optimal on
 TPU (see benchmarks/kernels_bench.py).
 
 Scalar-per-lane outputs (the registers) are emitted as [FB, 8] tiles

@@ -1,8 +1,9 @@
-"""Pure-jnp oracle for the fused fleet executor tick (phase 1).
+"""Pure-jnp oracle for the fused executor tick (phase 1).
 
-The hot inner loop of a *fleet* of Eudoxia simulations (sweep.py runs
-thousands of policy x seed simulations in parallel) starts every event
-with the same read of the container + pipeline tables: which containers
+The hot inner loop of the lane-major core (EVERY simulation goes
+through it — ``run()`` with one lane, ``fleet_run`` with thousands of
+policy x seed lanes, possibly device-sharded) starts every event with
+the same read of the container + pipeline tables: which containers
 complete/OOM, which suspended pipelines release, which arrivals are
 admitted, what resources the retirements free per pool, and the
 next-event registers over the survivors. This oracle fuses all of that

@@ -19,7 +19,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.configs.registry import ArchSpec
 from repro.models import lm
 from repro.models.common import ModelConfig
 from repro.models.encdec import dec_len

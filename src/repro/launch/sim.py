@@ -2,7 +2,7 @@
 visual output.
 
     PYTHONPATH=src python -m repro.launch.sim examples/project.toml \
-        [--engine event|tick|python] [--csv out.csv]
+        [--engine event|python] [--csv out.csv]
 """
 from __future__ import annotations
 
@@ -23,7 +23,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("paramfile")
     ap.add_argument("--engine", default=None,
-                    choices=[None, "event", "tick", "python"])
+                    choices=[None, "event", "python"])
     ap.add_argument("--csv", default=None,
                     help="write the utilisation timeline as CSV")
     ap.add_argument("--json", default=None, help="write the summary JSON")

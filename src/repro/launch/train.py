@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
 
 from repro.configs.registry import get_arch
 from repro.launch.mesh import make_host_mesh

@@ -7,13 +7,12 @@ dense-residual + MoE).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from .attention import (
-    KVCache,
     Param,
     attn_apply,
     attn_init,
@@ -22,14 +21,12 @@ from .attention import (
 from .common import AX_EMBED, LayerSpec, ModelConfig, rms_norm
 from .mlp import mlp_apply, mlp_init, moe_apply, moe_init
 from .rwkv import (
-    RWKVState,
     init_rwkv_state,
     rwkv_apply,
     rwkv_decode,
     rwkv_init,
 )
 from .ssm import (
-    MambaState,
     init_mamba_state,
     mamba_apply,
     mamba_decode,

@@ -19,7 +19,6 @@ import jax
 import jax.numpy as jnp
 
 from .attention import (
-    KVCache,
     Param,
     attn_apply,
     attn_init,

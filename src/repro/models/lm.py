@@ -7,8 +7,7 @@ stacked cache pytree per pattern position.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ one-token shift state per mixer.
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple, Optional
 
 import jax

@@ -13,13 +13,12 @@ of int32-accumulated int8 payloads), not GSPMD-chosen.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from repro.parallel.compat import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def quantize_int8(x: jax.Array):

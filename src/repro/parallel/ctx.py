@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding

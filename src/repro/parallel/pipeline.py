@@ -15,7 +15,6 @@ shard_map maps ONLY the stage axis; `model`/`data` stay auto axes inside.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from functools import lru_cache
 from typing import Optional
 
 from .hw import DTYPE_BYTES

@@ -1,7 +1,6 @@
 """Train / serve step factories, generic over the architecture zoo."""
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -13,7 +13,6 @@ import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.registry import ArchSpec
@@ -25,7 +24,6 @@ from repro.launch.lowering import (
     shardings_of,
 )
 from repro.launch.shapes import opt_axes
-from repro.optim.optimizers import OptConfig
 from repro.runtime.failures import FailureInjector, StragglerMonitor
 from repro.runtime.steps import TrainState, make_train_step
 

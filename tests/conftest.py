@@ -1,20 +1,34 @@
 """Shared test config.
 
-When the real ``hypothesis`` package is unavailable (hermetic CI images,
-minimal containers) we install a tiny deterministic stand-in: each
-``@given`` test runs ``max_examples`` pseudo-random examples drawn from a
-PRNG seeded by the test's qualified name. This keeps the property suites
-runnable everywhere; real hypothesis (with shrinking and a database) is
-used automatically whenever it is installed.
+Two jobs:
+
+* Force 4 XLA host devices (before anything imports jax) so the
+  device-sharded fleet path (``fleet_run(shard="auto")``) is exercised
+  by every test run, CPU CI included.
+* When the real ``hypothesis`` package is unavailable (hermetic CI
+  images, minimal containers), install a tiny deterministic stand-in:
+  each ``@given`` test runs ``max_examples`` pseudo-random examples
+  drawn from a PRNG seeded by the test's qualified name. This keeps the
+  property suites runnable everywhere; real hypothesis (with shrinking
+  and a database) is used automatically whenever it is installed.
 """
 from __future__ import annotations
 
 import enum
 import functools
 import inspect
+import os
 import random
 import sys
 import types
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()
 
 
 def _install_mini_hypothesis() -> None:

@@ -8,15 +8,8 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_arch, list_archs
-from repro.launch.shapes import ShapeSpec, batch_specs
 from repro.models import lm
-from repro.models.encdec import (
-    dec_len,
-    encdec_decode_step,
-    encdec_init,
-    encdec_loss,
-    encdec_prefill,
-)
+from repro.models.encdec import encdec_init
 from repro.optim.optimizers import OptConfig
 from repro.runtime.steps import make_serve_steps, make_train_step
 

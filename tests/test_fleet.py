@@ -1,12 +1,15 @@
-"""Fleet-native event engine: equivalence + next-event register tests.
+"""Lane-major core: equivalence, sharding and registry-unification tests.
 
-The fleet engine (`engine._run_fleet_event_engine`, the default
-`fleet_run` path) batches the event loop by hand: shared masked
-while_loop, fused phase-1 pass (`kernels.sim_tick.fleet_tick`),
-early-exit scheduler/apply variants and incremental next-event
-registers. Everything here checks the headline safety property: each
-lane is *bitwise* the same simulation as `run(..., engine="event")`.
+One compiled engine (`engine._fleet_compiled`) advances everything:
+`run()` is a fleet of one (squeezed), `fleet_run` is N lanes, and
+`fleet_run(shard="auto")` splits the fleet axis across local devices
+with shard_map (conftest forces 4 XLA host devices so the sharded path
+runs on CPU CI). Everything here checks the headline safety property:
+lanes are *bitwise* the same simulation however they are batched or
+sharded.
 """
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,9 +28,11 @@ from repro.core.scheduler import (
     get_fleet_vector_scheduler,
     get_vector_scheduler,
     get_vector_scheduler_init,
+    register_fleet_vector_scheduler,
+    register_vector_scheduler,
 )
-from repro.core.state import INF_TICK
-from repro.core.sweep import _fleet_compiled
+from repro.core.state import INF_TICK, init_state
+from repro.core.sweep import _fleet_compiled, pad_lanes
 
 DATA_PLANE = dict(
     cache_gb_per_pool=4.0,
@@ -35,10 +40,6 @@ DATA_PLANE = dict(
     cold_start_ticks=40,
     container_warm_ticks=2_000,
 )
-
-# cost_dollars is a f32 sum whose reduction the XLA batcher may
-# reassociate (~1 ULP); every other field must agree bit-for-bit.
-BITWISE_EXEMPT = {"cost_dollars"}
 
 
 def _params(algo, dp, duration=0.04, **extra):
@@ -57,16 +58,32 @@ def _params(algo, dp, duration=0.04, **extra):
     )
 
 
-def _assert_lane_equal(states, lane, ref_state, ctx=""):
+# cost_dollars is a f32 accumulator whose multiply-add chain XLA codegens
+# differently at different batch widths (~1 ULP); comparisons across
+# DIFFERENT fleet sizes exempt it. Same-width comparisons (run vs
+# fleet-of-one, sharded vs unsharded) stay strict on every field.
+BITWISE_EXEMPT = {"cost_dollars"}
+
+
+def _assert_lane_equal(states, lane, ref_state, ctx="", exempt=()):
     for f in states._fields:
         a = np.asarray(getattr(states, f))[lane]
         b = np.asarray(getattr(ref_state, f))
-        if f in BITWISE_EXEMPT:
+        if f in exempt:
             np.testing.assert_allclose(
                 a, b, rtol=1e-6, atol=1e-9, err_msg=f"{ctx}: field {f}"
             )
         else:
             np.testing.assert_array_equal(a, b, err_msg=f"{ctx}: field {f}")
+
+
+def _assert_states_equal(a, b, ctx=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)),
+            np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: field {f}",
+        )
 
 
 ALL_SCHEDULERS = [
@@ -75,32 +92,62 @@ ALL_SCHEDULERS = [
 ]
 
 
+# ---------------------------------------------------------------------------
+# run() is a fleet of one, and fleet lanes are independent simulations.
+# ---------------------------------------------------------------------------
 @pytest.mark.parametrize("dp", [False, True], ids=["plain", "data_plane"])
 @pytest.mark.parametrize("algo", ALL_SCHEDULERS)
-def test_fleet_fused_bitwise_equals_per_seed(algo, dp):
-    """Every fleet lane == the same seed run alone in the event engine."""
-    params = _params(algo, dp)
+def test_run_equals_fleet_lane(algo, dp):
+    """run(seed) == fleet_run([seed])[0] bitwise, and every lane of a
+    wider fleet equals the same workload run alone."""
+    params = _params(algo, dp).replace(seed=11)
+    single = run(params, engine="event")
+    lane0 = fleet_run(params, [11])
+    _assert_lane_equal(lane0, 0, single.state, ctx=f"{algo}/dp={dp}/run-vs-1")
+
     seeds = [0, 1, 2]
-    states = fleet_run(params, seeds, fleet_engine="fused")
+    states = fleet_run(params, seeds)
     wls = make_workload_batch(params, seeds)
     for i, s in enumerate(seeds):
         wl = jax.tree.map(lambda x: x[i], wls)
         ref = run(params, workload=wl, engine="event")
-        _assert_lane_equal(states, i, ref.state, ctx=f"{algo}/dp={dp}/s{s}")
+        _assert_lane_equal(
+            states, i, ref.state, ctx=f"{algo}/dp={dp}/s{s}",
+            exempt=BITWISE_EXEMPT,  # cross-batch-width comparison
+        )
 
 
-@pytest.mark.parametrize("algo", ["priority", "cache_aware"])
-def test_fleet_fused_bitwise_equals_legacy_vmap(algo):
-    """Fused vs legacy vmap path: all fields bitwise, no exemptions."""
-    params = _params(algo, dp=True)
-    seeds = [0, 1, 2, 3]
-    a = fleet_run(params, seeds, fleet_engine="fused")
-    b = fleet_run(params, seeds, fleet_engine="vmap")
-    for f in a._fields:
+# ---------------------------------------------------------------------------
+# Device sharding: shard="auto" on 4 forced host devices, lane-for-lane.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dp", [False, True], ids=["plain", "data_plane"])
+@pytest.mark.parametrize("algo", ALL_SCHEDULERS)
+def test_sharded_fleet_matches_unsharded(algo, dp):
+    assert jax.local_device_count() >= 4, "conftest forces 4 host devices"
+    params = _params(algo, dp)
+    seeds = list(range(6))  # 6 lanes on 4 devices -> exercises lane padding
+    a = fleet_run(params, seeds, shard=None)
+    b = fleet_run(params, seeds, shard="auto")
+    _assert_states_equal(a, b, ctx=f"{algo}/dp={dp}/shard")
+
+
+def test_shard_validates_device_count():
+    with pytest.raises(ValueError, match="device"):
+        fleet_run(_params("priority", False), [0, 1],
+                  shard=jax.local_device_count() + 1)
+
+
+def test_pad_lanes_shapes_and_inertness():
+    params = _params("priority", False)
+    wls = make_workload_batch(params, [0, 1, 2])
+    padded = pad_lanes(wls, 8)
+    assert padded.arrival.shape[0] == 8
+    # padding lanes never receive an arrival
+    assert (np.asarray(padded.arrival)[3:] == INF_TICK).all()
+    # original lanes are untouched
+    for f in wls._fields:
         np.testing.assert_array_equal(
-            np.asarray(getattr(a, f)),
-            np.asarray(getattr(b, f)),
-            err_msg=f"{algo}: field {f}",
+            np.asarray(getattr(padded, f))[:3], np.asarray(getattr(wls, f))
         )
 
 
@@ -116,25 +163,31 @@ def test_finished_lane_untouched():
     )
     wls = wls._replace(arrival=wls.arrival.at[0].set(sparse_arrival))
 
-    states = _fleet_compiled(params, wls, "priority", "event", "fused")
+    states, _ = _fleet_compiled(params, wls, "priority")
     wl0 = jax.tree.map(lambda x: x[0], wls)
     ref = run(params, workload=wl0, engine="event")
-    _assert_lane_equal(states, 0, ref.state, ctx="sparse lane")
+    _assert_lane_equal(
+        states, 0, ref.state, ctx="sparse lane", exempt=BITWISE_EXEMPT
+    )
     # sanity: the busy lane really does run longer than the sparse one
     assert int(ref.state.done_count) <= 1
     assert int(states.done_count[1]) > int(states.done_count[0])
 
 
+# ---------------------------------------------------------------------------
+# Next-event oracle: the registers the unified engine navigates by equal
+# the recompute-from-scratch `_next_event` at every event of the actual
+# lane step.
+# ---------------------------------------------------------------------------
 @pytest.mark.parametrize(
     "algo,dp", [("priority", False), ("priority_pool", True)]
 )
 def test_next_event_registers_match_full_recompute(algo, dp):
-    """At every event, the register-based next-event (binary-searched
-    arrivals + executor-maintained nxt_retire/nxt_release) equals the
-    recomputed-from-scratch `_next_event` table reduction."""
+    from repro.kernels.sim_tick import fleet_tick
+
     params = _params(algo, dp, duration=0.03)
     wl = generate_workload(params)
-    scheduler_fn = get_vector_scheduler(algo)
+    scheduler_fn = get_vector_scheduler(algo, early_exit=True)
     ss = get_vector_scheduler_init(algo)(params)
     arr_sorted = engine_mod._sorted_arrivals(wl.arrival)
     horizon = jnp.int32(params.horizon_ticks)
@@ -142,47 +195,125 @@ def test_next_event_registers_match_full_recompute(algo, dp):
     @jax.jit
     def step(state, ss):
         tick = state.tick
-        state, ss, acted = engine_mod._tick_body(
-            state, ss, wl, params, scheduler_fn, tick
+        ph = fleet_tick(
+            state.ctr_status[None], state.ctr_end[None], state.ctr_oom[None],
+            state.ctr_cpus[None], state.ctr_ram[None], state.ctr_pool[None],
+            state.pipe_status[None], wl.arrival[None],
+            state.pipe_release[None], tick[None],
+            num_pools=params.num_pools,
         )
-        nxt_full = engine_mod._next_event(state, wl, tick, acted)
-        nxt_reg, cursor = engine_mod._next_event_registers(
-            state, arr_sorted, tick, acted
+        ph_l = jax.tree.map(lambda x: x[0], ph)
+        # recompute the oracle on the exact state the engine's register
+        # read sees (post fused phase 1 + decision application)
+        st1 = executor.apply_fused_phase1(state, wl, tick, params, ph_l)
+        ss1, dec = scheduler_fn(ss, st1, wl, params)
+        st2 = executor.apply_decision(
+            st1, wl, dec, tick, params, early_exit=True
         )
-        nxt = jnp.minimum(nxt_full, horizon)
-        state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
-        state = state._replace(tick=nxt, nxt_arrival_cursor=cursor)
-        return state, ss, nxt_full, nxt_reg
-
-    from repro.core.state import init_state
+        acted = (
+            jnp.any(dec.suspend)
+            | jnp.any(dec.reject)
+            | jnp.any(dec.assign_pipe >= 0)
+        )
+        nxt_full = engine_mod._next_event(st2, wl, tick, acted)
+        new_state, new_ss = engine_mod.lane_event_step(
+            params, horizon, scheduler_fn, state, ss, wl, arr_sorted, tick,
+            ph_l,
+        )
+        return new_state, new_ss, nxt_full
 
     state = init_state(params)
     n_events = 0
     while int(state.tick) < params.horizon_ticks:
-        state, ss, nxt_full, nxt_reg = step(state, ss)
-        assert int(nxt_full) == int(nxt_reg), (
-            f"event {n_events} @tick {int(state.tick)}: "
-            f"full {int(nxt_full)} != registers {int(nxt_reg)}"
+        state, ss, nxt_full = step(state, ss)
+        # the engine's register-based jump == the oracle, clipped to horizon
+        assert int(state.tick) == min(int(nxt_full), params.horizon_ticks), (
+            f"event {n_events}: engine jumped to {int(state.tick)}, "
+            f"oracle says {int(nxt_full)}"
         )
         n_events += 1
     assert n_events > 10  # the run actually exercised the loop
 
 
-def test_fleet_scheduler_fallback_for_custom_schedulers():
-    """Schedulers registered only in the plain registry (i.e. custom
-    user schedulers) fall back to that variant in fleets."""
-    from repro.core.scheduler import (
-        naive_scheduler,
-        register_vector_scheduler,
+# ---------------------------------------------------------------------------
+# Registry unification + deprecation shims.
+# ---------------------------------------------------------------------------
+def test_unified_registry_families_and_plain_schedulers():
+    # families build distinct early-exit / static-loop variants...
+    assert get_vector_scheduler("priority", early_exit=True) is not (
+        get_vector_scheduler("priority", early_exit=False)
     )
+    # ...cached per variant
+    assert get_vector_scheduler("priority", early_exit=True) is (
+        get_vector_scheduler("priority", early_exit=True)
+    )
+    # plain registrations (the custom-scheduler path) serve both variants
+    from repro.core.scheduler import naive_scheduler
 
     key = "_test_only_custom_sched"
     register_vector_scheduler(key)(naive_scheduler)
-    assert get_fleet_vector_scheduler(key) is naive_scheduler
-    # registered specialisations are distinct callables
-    assert get_fleet_vector_scheduler("priority") is not (
-        get_vector_scheduler("priority")
+    assert get_vector_scheduler(key, early_exit=True) is naive_scheduler
+    assert get_vector_scheduler(key, early_exit=False) is naive_scheduler
+
+
+def test_fleet_registry_shims_warn_and_alias():
+    with pytest.warns(DeprecationWarning):
+        fn = get_fleet_vector_scheduler("priority")
+    assert fn is get_vector_scheduler("priority", early_exit=True)
+
+    from repro.core.scheduler import naive_scheduler
+
+    key = "_test_only_fleet_shim"
+    with pytest.warns(DeprecationWarning):
+        register_fleet_vector_scheduler(key)(naive_scheduler)
+    assert get_vector_scheduler(key, early_exit=True) is naive_scheduler
+
+
+def test_fleet_shim_survives_plain_reregistration():
+    """Under the old dual registries, registering the plain variant
+    never clobbered a fleet-specialised one — order must stay
+    irrelevant through the deprecation shim."""
+    from repro.core.scheduler import naive_scheduler
+
+    def plain(ss, sim, wl, params):  # pragma: no cover - never invoked
+        return naive_scheduler(ss, sim, wl, params)
+
+    key = "_test_only_shim_order"
+    with pytest.warns(DeprecationWarning):
+        register_fleet_vector_scheduler(key)(naive_scheduler)
+    register_vector_scheduler(key)(plain)  # PR-2-era code, any order
+    assert get_vector_scheduler(key, early_exit=True) is naive_scheduler
+    assert get_vector_scheduler(key, early_exit=False) is plain
+
+
+def test_fleet_engine_kwarg_deprecated():
+    params = _params("priority", False, duration=0.01)
+    with pytest.warns(DeprecationWarning):
+        fleet_run(params, [0], fleet_engine="fused")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="removed"):
+            fleet_run(params, [0], fleet_engine="vmap")
+
+
+def test_tick_engine_removed():
+    with pytest.raises(ValueError, match="lane-major"):
+        run(_params("priority", False), engine="tick")
+
+
+def test_custom_scheduler_runs_in_fleet():
+    """A plain-registered custom scheduler runs through the unified core
+    (single and fleet) without a fleet-specific registration."""
+    from repro.core.scheduler import naive_scheduler
+
+    key = "_test_only_fleet_custom"
+    register_vector_scheduler(key)(naive_scheduler)
+    params = _params("naive", False, duration=0.02).replace(
+        scheduling_algo=key
     )
+    ref = _params("naive", False, duration=0.02)
+    a = fleet_run(params, [0, 1])
+    b = fleet_run(ref, [0, 1])
+    _assert_states_equal(a, b, ctx="custom-vs-naive")
 
 
 def test_make_workload_batch_matches_host_loop():
@@ -198,3 +329,19 @@ def test_make_workload_batch_matches_host_loop():
             np.asarray(getattr(ref, f)),
             err_msg=f"field {f}",
         )
+
+
+def test_no_stray_deprecation_warnings_on_default_paths():
+    """The default entry points must not trip the deprecation shims."""
+    params = _params("priority", False, duration=0.01)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        run(params, engine="event")
+        fleet_run(params, [0, 1], shard="auto")
+    ours = [
+        w for w in rec
+        if issubclass(w.category, DeprecationWarning)
+        and ("fleet_vector_scheduler" in str(w.message)
+             or "fleet_engine" in str(w.message))
+    ]
+    assert not ours, [str(w.message) for w in ours]

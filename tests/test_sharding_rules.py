@@ -1,6 +1,4 @@
 """Property tests for the divisibility-aware sharding rules."""
-import jax
-import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
