@@ -92,7 +92,14 @@ class Scheduler:
 
     # -- queue views ------------------------------------------------------
     def waiting_pids(self) -> list[int]:
-        """Waiting queue in scheduling order: priority desc, entry asc, pid."""
+        """Waiting queue in scheduling order: priority desc, entry asc, pid.
+
+        This sort IS the readable specification of the compiled
+        engines' masked selection: the lane-major core picks the same
+        head via ``repro.kernels.sched_select.masked_lex_argmin`` (one
+        fused lexicographic argmin over ``(-prio, entered, pid)``; the
+        three-pass oracle form lives in ``scheduler.select_next_pipe``).
+        """
         pids = [pid for pid, st in self.status.items() if st == PipeStatus.WAITING]
         pids.sort(
             key=lambda pid: (

@@ -19,17 +19,17 @@ extension path the paper's registry design enables.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, List
 
 import jax.numpy as jnp
+
+from repro.kernels.sched_select import masked_lex_argmin
 
 from .algorithm import register_scheduler, register_scheduler_init
 from .engine_python import Scheduler, _priority_like_py
 from .params import SimParams
 from .scheduler import (
     EPS,
-    _priority_like,
     decision_loop,
     empty_decision,
     get_vector_scheduler,
@@ -43,7 +43,12 @@ CAP = 0.50
 
 
 def _select_sjf(mask, n_ops, prio, entered):
-    """Fewest ops, then highest priority, then earliest entry, then pid."""
+    """Fewest ops, then highest priority, then earliest entry, then pid.
+
+    Five-pass oracle form, kept (like ``scheduler.select_next_pipe``)
+    as the reference the fused ``sched_select.select_sjf`` is
+    property-tested against; the sjf scheduler below runs the fused op.
+    """
     any_ = jnp.any(mask)
     n = jnp.where(mask, n_ops, jnp.int32(2**30))
     m1 = mask & (n_ops == jnp.min(n))
@@ -67,11 +72,15 @@ def _sjf_like(early_exit: bool = False):
         waiting0 = sim.pipe_status == int(PipeStatus.WAITING)
         reject = waiting0 & sim.pipe_fail_flag & (sim.pipe_last_ram >= cap_ram - EPS)
         dec = dec._replace(reject=reject)
+        # fused-selection keys, hoisted out of the decision loop (only
+        # the ``tried`` mask varies per slot)
+        sjf_keys = (wl.n_ops, -wl.prio, sim.pipe_entered)
+        base_mask = waiting0 & ~reject
 
         def step(k, carry):
             dec, free_cpu, free_ram, tried = carry
-            mask = waiting0 & ~reject & ~tried
-            pipe = _select_sjf(mask, wl.n_ops, wl.prio, sim.pipe_entered)
+            mask = base_mask & ~tried
+            pipe = masked_lex_argmin(mask, sjf_keys)
             valid = pipe >= 0
             pipe_c = jnp.maximum(pipe, 0)
             failed = sim.pipe_fail_flag[pipe_c]
@@ -170,18 +179,11 @@ def sjf_python(sch: Scheduler, failures: List[Failure], new: List[Pipeline]):
 
 # ---------------------------------------------------------------------------
 # Data-plane schedulers: the vector families are the generalised
-# priority machinery in scheduler.py (parameterised by the early_exit
-# knob in the unified registry); the Python twins reuse the mirrored
-# machinery in engine_python.py. Registered in BOTH worlds.
+# priority machinery in scheduler.py, where they are also REGISTERED
+# (so the public aliases resolve through the cached registry without a
+# circular import); the Python twins below reuse the mirrored
+# machinery in engine_python.py.
 # ---------------------------------------------------------------------------
-register_vector_scheduler_family("cache_aware")(
-    functools.partial(_priority_like, "cache")
-)
-register_vector_scheduler_family("locality_pool")(
-    functools.partial(_priority_like, "locality")
-)
-
-
 @register_scheduler_init(key="cache_aware")
 def _cache_aware_init(sch: Scheduler) -> None:
     pass

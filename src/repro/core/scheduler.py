@@ -27,6 +27,8 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.sched_select import masked_lex_argmin
+
 from .params import SimParams
 from .state import INF_TICK, SimState, Workload
 from .types import ContainerStatus, PipeStatus, Priority
@@ -58,6 +60,11 @@ def empty_decision(params: SimParams) -> SchedDecision:
 # ---------------------------------------------------------------------------
 # Masked selection helpers (queue semantics without materialised queues):
 # waiting order = priority desc, then (re-)entry tick asc, then pid asc.
+#
+# These three-pass forms are the *oracles*: the schedulers below run the
+# fused ``repro.kernels.sched_select.masked_lex_argmin`` instead (one
+# narrowing sweep, Pallas on TPU), which tests/test_sched_select.py
+# property-tests bitwise against these on the engine's domain.
 # ---------------------------------------------------------------------------
 def select_next_pipe(mask: jax.Array, prio: jax.Array, entered: jax.Array):
     any_ = jnp.any(mask)
@@ -134,7 +141,7 @@ def naive_scheduler(
     waiting = waiting & ~reject
 
     idle = ~jnp.any(sim.ctr_status == int(ContainerStatus.RUNNING))
-    pipe = select_next_pipe(waiting, wl.prio, sim.pipe_entered)
+    pipe = masked_lex_argmin(waiting, (-wl.prio, sim.pipe_entered))
     do = idle & (pipe >= 0)
     dec = dec._replace(
         reject=reject,
@@ -212,15 +219,19 @@ def _priority_like(pool_mode: str, early_exit: bool = False):
         # OOMed at the RAM cap already -> return failure to the user.
         reject = waiting0 & sim.pipe_fail_flag & (sim.pipe_last_ram >= cap_ram - EPS)
         dec = dec._replace(reject=reject)
+        # Fused-selection keys, hoisted out of the decision loop: the
+        # candidate masks are the only per-slot inputs (``tried`` grows,
+        # ``live`` shrinks); priorities and entry/start ticks are fixed
+        # for the whole decision, so each slot pays one narrowing sweep
+        # instead of re-deriving the three-pass reductions.
+        head_keys = (-wl.prio, sim.pipe_entered)
+        victim_keys = (sim.ctr_prio, -sim.ctr_start)
+        base_mask = waiting0 & ~reject
 
         def step(k, carry):
             dec, free_cpu, free_ram, live, tried = carry
-            mask = (
-                waiting0
-                & ~reject
-                & ~tried
-            )
-            pipe = select_next_pipe(mask, wl.prio, sim.pipe_entered)
+            mask = base_mask & ~tried
+            pipe = masked_lex_argmin(mask, head_keys)
             valid = pipe >= 0
             pipe_c = jnp.maximum(pipe, 0)
 
@@ -247,8 +258,8 @@ def _priority_like(pool_mode: str, early_exit: bool = False):
 
             # ---- preemption path: high-priority pipe, no room ------------
             can_preempt = valid & ~fits & (wl.prio[pipe_c] > int(Priority.BATCH))
-            victim = select_victim(
-                live, sim.ctr_prio, sim.ctr_start, wl.prio[pipe_c]
+            victim = masked_lex_argmin(
+                live & (sim.ctr_prio < wl.prio[pipe_c]), victim_keys
             )
             has_victim = can_preempt & (victim >= 0)
             victim_c = jnp.maximum(victim, 0)
@@ -455,14 +466,25 @@ register_vector_scheduler_family("priority")(
 register_vector_scheduler_family("priority_pool")(
     functools.partial(_priority_like, "free")
 )
-# cache_aware / locality_pool / sjf families are registered from
-# extra_schedulers.py alongside their Python twins.
+# The data-plane families are `_priority_like` too, so they register
+# here (their Python twins live in extra_schedulers.py); the sjf family
+# is registered from extra_schedulers.py.
+register_vector_scheduler_family("cache_aware")(
+    functools.partial(_priority_like, "cache")
+)
+register_vector_scheduler_family("locality_pool")(
+    functools.partial(_priority_like, "locality")
+)
 
-# stable aliases for the no-early-exit builds (public API compat)
+# stable aliases for the no-early-exit builds (public API compat) — all
+# four resolve through the registry so they ARE the `_BUILT`-cached
+# instances jit sees everywhere else (a bare `_priority_like(...)` call
+# here would build uncached duplicates and defeat the jit-identity
+# cache).
 priority_scheduler = get_vector_scheduler("priority")
 priority_pool_scheduler = get_vector_scheduler("priority_pool")
-cache_aware_scheduler = _priority_like("cache")
-locality_pool_scheduler = _priority_like("locality")
+cache_aware_scheduler = get_vector_scheduler("cache_aware")
+locality_pool_scheduler = get_vector_scheduler("locality_pool")
 
 
 __all__ = [

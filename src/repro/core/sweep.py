@@ -11,8 +11,13 @@ Because the whole simulator is one lane-major XLA program
   local device with ``shard_map``: each device runs the engine's shared
   while_loop on its own lanes and exits when *its* lanes drain, with no
   cross-device synchronisation at all (there are no collectives in the
-  engine). Lanes are padded to a device multiple inside this module and
-  the padding is stripped before returning.
+  engine). Before sharding, lanes are *binned by event density*
+  (``bin_lanes_by_density``): sorted by predicted event count so each
+  device gets a contiguous block of similar drain time — the slow lanes
+  share one device instead of dragging every device's max-over-lanes
+  loops. Lanes are padded to a device multiple inside this module, and
+  both the padding and the binning permutation are undone before
+  returning.
 
 ``fleet_run`` is also what the serving layer uses to pick an admission /
 preemption policy before it touches the real cluster (DESIGN.md §4).
@@ -29,7 +34,7 @@ import numpy as np
 
 from repro.parallel.compat import shard_map
 
-from .engine import _fleet_compiled
+from .engine import _fleet_compiled, _quiet_partial_donation
 from .params import SimParams
 from .state import INF_TICK, SimState, Workload
 from .workload import generate_workload
@@ -66,7 +71,9 @@ def pad_lanes(wls: Workload, n_lanes: int) -> Workload:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("params", "scheduler_key", "impl", "n_shards")
+    jax.jit,
+    static_argnames=("params", "scheduler_key", "impl", "n_shards"),
+    donate_argnames=("workloads",),
 )
 def _fleet_sharded(
     params: SimParams,
@@ -78,7 +85,8 @@ def _fleet_sharded(
     """shard_map the lane-major core over the fleet axis of a 1-D local
     device mesh. Each shard is an independent run of the same engine on
     F/n_shards lanes; per-lane results are bitwise those of the
-    unsharded call (tests/test_fleet.py asserts it lane-for-lane)."""
+    unsharded call (tests/test_fleet.py asserts it lane-for-lane).
+    ``workloads`` is donated, as in ``engine._fleet_compiled``."""
     mesh = jax.sharding.Mesh(
         np.asarray(jax.local_devices()[:n_shards]), ("fleet",)
     )
@@ -95,6 +103,51 @@ def _fleet_sharded(
         out_specs=spec,
         check_vma=False,
     )(workloads)
+
+
+def predicted_lane_events(wls: Workload, params: SimParams) -> np.ndarray:
+    """Per-lane predicted event count, the lane-binning sort key.
+
+    The engine's work per lane is proportional to its event count, and
+    (absent preemption storms) events are dominated by arrivals: each
+    arrival inside the horizon admits once and retires once. The count
+    of realised arrivals IS the lane's realised arrival density — the
+    per-lane draw of the ``waiting_ticks_mean``-controlled arrival
+    process — so it predicts drain time without running anything.
+    """
+    horizon = params.horizon_ticks
+    return np.asarray(jnp.sum(wls.arrival < horizon, axis=-1))
+
+
+def bin_lanes_by_density(
+    wls: Workload, params: SimParams
+) -> tuple[Workload, np.ndarray]:
+    """Sort the fleet axis by predicted event count, heaviest first.
+
+    Returns ``(sorted_wls, inverse_permutation)``. Device-sharding the
+    *sorted* fleet gives each device a contiguous block of
+    similar-drain-time lanes, so the per-device shared while_loop (and
+    every early-exit scheduler loop inside it, whose vmapped trip count
+    is the max over that device's lanes) stops as its own block drains
+    instead of every device paying the global tail. The sort is stable,
+    so equal-density lanes keep their order; padding lanes (appended
+    after binning) are the lightest and land on the last device.
+    """
+    score = predicted_lane_events(wls, params)
+    order = np.argsort(-score, kind="stable")
+    inv = np.argsort(order)
+    return jax.tree.map(lambda x: x[order], wls), inv
+
+
+@functools.partial(jax.jit, donate_argnames=("states",))
+def _unbin_states(states: SimState, inv):
+    """Undo the binning permutation (and drop padding lanes: ``inv``
+    only addresses real lanes, which binning sorted ahead of the
+    padding) in ONE compiled gather. Doing this eagerly — one host
+    gather per SimState field on device-sharded arrays — costs more
+    than the binning saves; compiled, it is a single fused reshard.
+    ``states`` is donated: the binned-order copy dies here."""
+    return jax.tree.map(lambda x: x[inv], states)
 
 
 def _resolve_shards(shard, fleet_size: int) -> int:
@@ -118,6 +171,7 @@ def fleet_run(
     *,
     shard: str | int | None = None,
     impl: str = "auto",
+    bin_lanes: bool = True,
     fleet_engine: str | None = None,
 ) -> SimState:
     """Run len(seeds) simulations in parallel on the lane-major core.
@@ -128,6 +182,14 @@ def fleet_run(
     device multiple is handled here and stripped from the result.
     Returns the batched final SimState (leading axis = fleet member),
     per-lane bitwise-identical whatever the sharding.
+
+    ``bin_lanes`` (sharded runs only) sorts the fleet axis by predicted
+    event count before sharding — each device gets lanes of similar
+    drain time, cutting the tail iterations every max-over-lanes loop
+    pays — and unpermutes the result, so lane ``i`` of the output is
+    lane ``i`` of ``seeds`` bitwise whatever the binning (lanes are
+    independent; tests/test_sched_select.py asserts on-vs-off
+    equality).
 
     ``fleet_engine`` is deprecated: the fused lane-major engine is the
     only simulation core (the legacy ``"vmap"`` path was deleted).
@@ -149,13 +211,22 @@ def fleet_run(
     F = wls.arrival.shape[0]
     n_shards = _resolve_shards(shard, F)
     if n_shards <= 1:
-        states, _ = _fleet_compiled(params, wls, scheduler_key, impl)
+        with _quiet_partial_donation():
+            states, _ = _fleet_compiled(params, wls, scheduler_key, impl)
         return states
+    inv = None
+    if bin_lanes:
+        wls, inv = bin_lanes_by_density(wls, params)
     F_pad = -(-F // n_shards) * n_shards
-    states = _fleet_sharded(
-        params, pad_lanes(wls, F_pad), scheduler_key, impl, n_shards
-    )
-    if F_pad != F:
+    with _quiet_partial_donation():
+        states = _fleet_sharded(
+            params, pad_lanes(wls, F_pad), scheduler_key, impl, n_shards
+        )
+    if inv is not None:
+        # one gather: unpermute AND strip padding (inv addresses only
+        # real lanes; binning put the padding last)
+        states = _unbin_states(states, jnp.asarray(inv))
+    elif F_pad != F:
         states = jax.tree.map(lambda x: x[:F], states)
     return states
 
@@ -201,5 +272,7 @@ __all__ = [
     "fleet_summary",
     "make_workload_batch",
     "pad_lanes",
+    "bin_lanes_by_density",
+    "predicted_lane_events",
     "_fleet_compiled",
 ]

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for the fused masked lexicographic selection.
+
+One grid step selects over a [FB, N] tile of the fleet x table batch
+entirely in VMEM: the candidate mask narrows once per key (masked
+row-min + compare, all VPU), and the final first-index tie-break is a
+masked row-min over a column iota — the whole selection is a single
+pass over the tile, where the seed's three-pass helpers re-read the
+table once per reduction. Keys arrive stacked as [FB, K, N] so the
+tile pair (mask + keys) is the unit of HBM traffic.
+
+Per-lane scalar outputs (the winning indices) are emitted as [FB, 8]
+tiles (sublane-aligned broadcast, the same convention as
+``kernels/sim_tick``); the dispatch wrapper takes column 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BIG
+
+
+def _select_kernel(mask_ref, keys_ref, idx_ref, *, num_keys: int):
+    m = mask_ref[...] != 0                       # [FB, N]
+    n = m.shape[1]
+    empty = None
+    for j in range(num_keys - 1):
+        km = jnp.where(m, keys_ref[:, j, :], BIG)
+        b = jnp.min(km, axis=1, keepdims=True)   # [FB, 1]
+        if empty is None:
+            empty = b == BIG
+        m = km == b
+    km = jnp.where(m, keys_ref[:, num_keys - 1, :], BIG)
+    if empty is None:
+        empty = jnp.min(km, axis=1, keepdims=True) == BIG
+    b = jnp.min(km, axis=1, keepdims=True)
+    # first index achieving the minimum == jnp.argmin's tie-break
+    col = jax.lax.broadcasted_iota(jnp.int32, m.shape, 1)
+    idx = jnp.min(
+        jnp.where(km == b, col, jnp.int32(n)), axis=1, keepdims=True
+    )
+    out = jnp.where(empty, jnp.int32(-1), idx)   # [FB, 1]
+    idx_ref[...] = jnp.broadcast_to(out, idx_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_fleet", "interpret")
+)
+def masked_lex_argmin_kernel(
+    mask, keys, *, block_fleet: int = 256, interpret: bool = False
+):
+    """``mask`` [F, N] bool/int, ``keys`` [F, K, N] int32 -> [F] int32
+    (lexicographic argmin with index tie-break, -1 on empty mask)."""
+    F, N = mask.shape
+    K = keys.shape[1]
+    FB = min(block_fleet, F)
+    # pad the fleet axis to a whole number of tiles; padding lanes carry
+    # all-false masks, so their output is -1 and is sliced off below
+    pad = (-F) % FB
+    if pad:
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((pad, N), mask.dtype)], axis=0
+        )
+        keys = jnp.concatenate(
+            [keys, jnp.zeros((pad, K, N), keys.dtype)], axis=0
+        )
+    FP = F + pad
+    out = pl.pallas_call(
+        functools.partial(_select_kernel, num_keys=K),
+        grid=(FP // FB,),
+        in_specs=[
+            pl.BlockSpec((FB, N), lambda i: (i, 0)),
+            pl.BlockSpec((FB, K, N), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((FB, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((FP, 8), jnp.int32),
+        interpret=interpret,
+    )(mask.astype(jnp.int32), keys)
+    return out[:F, 0]

@@ -1,0 +1,60 @@
+"""Dispatch wrapper for the fused masked-selection op (Pallas phase 2).
+
+``impl="auto"`` picks the Pallas kernel on TPU for explicit lane-major
+[F, N] batches and the bitwise-equivalent jnp reference everywhere
+else. The per-lane [N] form — what the schedulers trace under the
+engine's ``vmap`` — always lowers through the reference: under vmap
+its fused reductions batch into exactly the [F, N] shape the kernel
+tiles, so the hot path is identical maths either way and the vmapped
+while_loop stays free of pallas batching constraints.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import masked_lex_argmin_kernel
+from .ref import masked_lex_argmin_ref
+
+
+def masked_lex_argmin(mask, keys, *, impl: str = "auto", interpret: bool = False):
+    """Index of the lexicographically smallest ``(*keys[i], i)`` among
+    ``mask`` along the last axis, ``-1`` where the mask is empty.
+
+    See ``ref.masked_lex_argmin_ref`` for the bitwise contract vs the
+    seed three-pass helpers (``scheduler.select_next_pipe`` /
+    ``select_victim`` remain exported as the oracles).
+    """
+    keys = tuple(keys)
+    use_kernel = impl == "kernel" or (
+        impl == "auto" and jax.default_backend() == "tpu" and mask.ndim == 2
+    )
+    if use_kernel:
+        return masked_lex_argmin_kernel(
+            mask, jnp.stack(keys, axis=-2), interpret=interpret
+        )
+    return masked_lex_argmin_ref(mask, keys)
+
+
+def select_next_pipe(mask, prio, entered, *, impl: str = "auto"):
+    """Fused waiting-queue head (priority desc, entry asc, pid asc)."""
+    return masked_lex_argmin(mask, (-prio, entered), impl=impl)
+
+
+def select_victim(live, ctr_prio, ctr_start, below_prio, *, impl: str = "auto"):
+    """Fused preemption victim (priority asc, start desc, slot asc)."""
+    m = live & (ctr_prio < below_prio)
+    return masked_lex_argmin(m, (ctr_prio, -ctr_start), impl=impl)
+
+
+def select_sjf(mask, n_ops, prio, entered, *, impl: str = "auto"):
+    """Fused smallest-job-first head (ops asc, prio desc, entry asc)."""
+    return masked_lex_argmin(mask, (n_ops, -prio, entered), impl=impl)
+
+
+__all__ = [
+    "masked_lex_argmin",
+    "select_next_pipe",
+    "select_victim",
+    "select_sjf",
+]

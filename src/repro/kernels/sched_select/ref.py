@@ -1,0 +1,88 @@
+"""Pure-jnp reference for the fused masked-selection op (Pallas phase 2).
+
+Every decision slot of every scheduler event runs one or two *masked
+lexicographic selections* over the pipeline / container tables:
+
+* ``select_next_pipe`` — highest priority, then earliest (re-)entry
+  tick, then lowest pid (the waiting queue without a materialised
+  queue), and
+* ``select_victim``   — lowest priority, then latest start tick, then
+  lowest slot (the preemption victim).
+
+The seed implementation ran each as three full masked max/argmax
+reductions plus an ``any`` (§scheduler.py pre-PR-4) — 4 passes over the
+table per call, per decision slot, per event, per lane. Here the whole
+selection collapses into ONE fused primitive:
+
+    masked_lex_argmin(mask, keys) -> index of the lexicographically
+    smallest (keys[0][i], ..., keys[-1][i], i) among mask, or -1
+
+computed with a single narrowing sweep — ``len(keys)`` masked
+reductions total (min per key + one first-index argmin), no ``any``,
+no argmax repair passes. The index tie-break is free: ``argmin`` picks
+the first occurrence of the minimum, exactly the old ``argmax(m3)``.
+
+Bitwise contract (property-tested in tests/test_sched_select.py): the
+returned index is identical to the three-pass helpers for every input
+in the engine's domain —
+
+* masked entries have ``keys[0] < INT32_MAX`` (priorities are small),
+* when candidates survive to the last key, their minimum is
+  ``< INT32_MAX`` (entry/start ticks are real ticks, not INF_TICK).
+
+Both hold by construction in the simulator (WAITING pipes have
+``entered <= tick < INF_TICK``; live containers have ``start >= 0``);
+the sentinels below collide with neither.
+
+Shapes: the reference reduces the LAST axis, so it serves both the
+per-lane [N] form (vmapped by the engine into [F, N] batched
+reductions) and the explicit lane-major [F, N] form the Pallas kernel
+tiles (``kernel.py``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# sentinel: larger than any in-domain key (python int so the Pallas
+# kernel can close over it without capturing a traced constant)
+BIG = 2**31 - 1
+
+
+def masked_lex_argmin_ref(mask, keys):
+    """Index of the lexicographic minimum of ``zip(*keys, index)`` over
+    ``mask`` (reduced along the last axis), ``-1`` where the mask is
+    empty. ``keys`` is a sequence of int32 arrays shaped like ``mask``.
+    """
+    keys = tuple(keys)
+    m = mask
+    empty = None
+    for k in keys[:-1]:
+        km = jnp.where(m, k, BIG)
+        b = jnp.min(km, axis=-1, keepdims=True)
+        if empty is None:
+            empty = b[..., 0] == BIG
+        m = km == b
+    km = jnp.where(m, keys[-1], BIG)
+    if empty is None:  # single-key selection
+        empty = jnp.min(km, axis=-1) == BIG
+    idx = jnp.argmin(km, axis=-1).astype(jnp.int32)
+    return jnp.where(empty, jnp.int32(-1), idx)
+
+
+def select_next_pipe_ref(mask, prio, entered):
+    """Fused waiting-queue head: priority desc, entry asc, pid asc."""
+    return masked_lex_argmin_ref(mask, (-prio, entered))
+
+
+def select_victim_ref(live, ctr_prio, ctr_start, below_prio):
+    """Fused preemption victim: among live containers strictly below
+    ``below_prio``: priority asc, start desc (least progress lost),
+    slot asc."""
+    m = live & (ctr_prio < below_prio)
+    return masked_lex_argmin_ref(m, (ctr_prio, -ctr_start))
+
+
+def select_sjf_ref(mask, n_ops, prio, entered):
+    """Fused smallest-job-first head: op count asc, priority desc,
+    entry asc, pid asc (``extra_schedulers``)."""
+    return masked_lex_argmin_ref(mask, (n_ops, -prio, entered))

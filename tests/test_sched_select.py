@@ -1,0 +1,224 @@
+"""Fused masked-selection kernels (Pallas phase 2) and lane binning.
+
+The schedulers' hot path runs ``kernels.sched_select.masked_lex_argmin``
+— one narrowing sweep — where the seed ran three-pass max/argmax
+helpers. The helpers stay exported as the *oracles*; everything here
+pins the fused path to them bitwise on the engine's domain (priorities
+small and non-negative, entry/start ticks real, i.e. < INF_TICK), with
+the all-masked / single-candidate / tie-heavy corners called out by the
+issue exercised explicitly and by property sweep.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.extra_schedulers import _select_sjf
+from repro.core.scheduler import select_next_pipe, select_victim
+from repro.core.state import INF_TICK
+from repro.kernels.sched_select import (
+    masked_lex_argmin,
+    masked_lex_argmin_ref,
+)
+from repro.kernels.sched_select import (
+    select_next_pipe as fused_next_pipe,
+)
+from repro.kernels.sched_select import (
+    select_sjf as fused_sjf,
+)
+from repro.kernels.sched_select import (
+    select_victim as fused_victim,
+)
+from repro.kernels.sched_select.kernel import masked_lex_argmin_kernel
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+def _draw_tables(rng, n, tick_hi):
+    """A random slice of the engine domain; small ``tick_hi`` makes the
+    draw tie-heavy (many equal priorities/ticks -> the index tie-break
+    carries the selection)."""
+    mask = rng.random(n) < rng.random()
+    prio = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+    entered = jnp.asarray(rng.integers(0, tick_hi, n), jnp.int32)
+    return jnp.asarray(mask), prio, entered
+
+
+# ---------------------------------------------------------------------------
+# Property sweeps: fused == three-pass oracle, bitwise.
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.sampled_from([1, 2, 7, 32, 128]),
+    # 3 -> tie-heavy, INF_TICK - 1 -> full tick range
+    tick_hi=st.sampled_from([3, 1000, int(INF_TICK) - 1]),
+)
+def test_fused_next_pipe_matches_oracle(seed, n, tick_hi):
+    mask, prio, entered = _draw_tables(_rng(seed), n, tick_hi)
+    a = select_next_pipe(mask, prio, entered)
+    b = fused_next_pipe(mask, prio, entered)
+    assert int(a) == int(b), (mask, prio, entered)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.sampled_from([1, 2, 7, 32, 64]),
+    tick_hi=st.sampled_from([3, 1000, int(INF_TICK) - 1]),
+    below=st.integers(0, 3),
+)
+def test_fused_victim_matches_oracle(seed, n, tick_hi, below):
+    live, prio, start = _draw_tables(_rng(seed), n, tick_hi)
+    a = select_victim(live, prio, start, jnp.int32(below))
+    b = fused_victim(live, prio, start, jnp.int32(below))
+    assert int(a) == int(b), (live, prio, start, below)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.sampled_from([1, 8, 32]),
+    tick_hi=st.sampled_from([3, 1000]),
+)
+def test_fused_sjf_matches_oracle(seed, n, tick_hi):
+    rng = _rng(seed)
+    mask, prio, entered = _draw_tables(rng, n, tick_hi)
+    n_ops = jnp.asarray(rng.integers(1, 5, n), jnp.int32)
+    a = _select_sjf(mask, n_ops, prio, entered)
+    b = fused_sjf(mask, n_ops, prio, entered)
+    assert int(a) == int(b)
+
+
+# ---------------------------------------------------------------------------
+# Named corners (also covered by the sweeps, but pinned explicitly).
+# ---------------------------------------------------------------------------
+def test_all_masked_returns_minus_one():
+    n = 16
+    mask = jnp.zeros((n,), bool)
+    prio = jnp.zeros((n,), jnp.int32)
+    entered = jnp.zeros((n,), jnp.int32)
+    assert int(fused_next_pipe(mask, prio, entered)) == -1
+    assert int(fused_victim(mask, prio, entered, jnp.int32(3))) == -1
+    # victim mask can also empty via the priority bound alone
+    live = jnp.ones((n,), bool)
+    assert int(fused_victim(live, prio, entered, jnp.int32(0))) == -1
+
+
+def test_single_candidate_is_selected():
+    mask = jnp.zeros((8,), bool).at[5].set(True)
+    prio = jnp.asarray([2, 2, 2, 2, 2, 0, 2, 2], jnp.int32)
+    entered = jnp.arange(8, dtype=jnp.int32)
+    assert int(fused_next_pipe(mask, prio, entered)) == 5
+
+
+def test_full_tie_breaks_by_index():
+    n = 12
+    mask = jnp.ones((n,), bool)
+    prio = jnp.full((n,), 1, jnp.int32)
+    entered = jnp.full((n,), 77, jnp.int32)
+    assert int(fused_next_pipe(mask, prio, entered)) == 0
+    assert int(fused_victim(mask, prio, entered, jnp.int32(2))) == 0
+    mask2 = mask.at[0].set(False)
+    assert int(fused_next_pipe(mask2, prio, entered)) == 1
+
+
+def test_lexicographic_order_of_keys():
+    # higher prio wins over earlier entry; equal prio -> earlier entry
+    mask = jnp.ones((3,), bool)
+    prio = jnp.asarray([1, 2, 2], jnp.int32)
+    entered = jnp.asarray([0, 9, 5], jnp.int32)
+    assert int(fused_next_pipe(mask, prio, entered)) == 2
+    # victim: lowest prio, then LATEST start
+    live = jnp.ones((3,), bool)
+    vprio = jnp.asarray([0, 0, 1], jnp.int32)
+    start = jnp.asarray([4, 8, 100], jnp.int32)
+    assert int(fused_victim(live, vprio, start, jnp.int32(2))) == 1
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel (interpret mode) vs the jnp reference, batched.
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 1000),
+    # 6 exercises the fleet-axis padding path (6 % block_fleet=4 != 0)
+    F=st.sampled_from([1, 4, 6, 16]),
+    N=st.sampled_from([8, 37, 128]),
+    K=st.integers(1, 3),
+)
+def test_select_kernel_matches_ref(seed, F, N, K):
+    rng = _rng(seed)
+    mask = jnp.asarray(rng.random((F, N)) < 0.4)
+    keys = jnp.asarray(rng.integers(-50, 50, (F, K, N)), jnp.int32)
+    ref = masked_lex_argmin_ref(mask, tuple(keys[:, j] for j in range(K)))
+    out = masked_lex_argmin_kernel(mask, keys, block_fleet=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_dispatch_kernel_impl_matches_ref():
+    rng = _rng(7)
+    mask = jnp.asarray(rng.random((5, 33)) < 0.5)
+    k1 = jnp.asarray(rng.integers(0, 3, (5, 33)), jnp.int32)
+    k2 = jnp.asarray(rng.integers(0, 100, (5, 33)), jnp.int32)
+    a = masked_lex_argmin(mask, (k1, k2))
+    b = masked_lex_argmin(mask, (k1, k2), impl="kernel", interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Lane binning: fleet_run(shard="auto") is lane-for-lane bitwise
+# identical with event-density binning on vs off.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("algo", ["priority", "cache_aware"])
+def test_lane_binning_bitwise_identical(algo):
+    import jax
+
+    from repro.core import SimParams, fleet_run
+    from repro.core.sweep import bin_lanes_by_density, make_workload_batch
+
+    assert jax.local_device_count() >= 4, "conftest forces 4 host devices"
+    params = SimParams(
+        duration=0.04,
+        scheduling_algo=algo,
+        num_pools=2,
+        waiting_ticks_mean=300.0,
+        op_base_seconds_mean=0.005,
+        op_base_seconds_sigma=1.2,  # skewed lanes -> non-trivial sort
+        max_pipelines=32,
+        max_containers=32,
+        cache_gb_per_pool=4.0 if algo == "cache_aware" else 0.0,
+    )
+    seeds = list(range(10))  # 10 lanes on 4 devices -> padding too
+    a = fleet_run(params, seeds, shard="auto", bin_lanes=True)
+    b = fleet_run(params, seeds, shard="auto", bin_lanes=False)
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)),
+            np.asarray(getattr(b, f)),
+            err_msg=f"binning changed field {f}",
+        )
+    # the permutation is real: the sort actually reorders these lanes
+    wls = make_workload_batch(params, seeds)
+    _, inv = bin_lanes_by_density(wls, params)
+    assert not np.array_equal(inv, np.arange(len(seeds)))
+
+
+def test_binning_permutation_roundtrip():
+    from repro.core import SimParams
+    from repro.core.sweep import bin_lanes_by_density, make_workload_batch
+
+    params = SimParams(
+        duration=0.02, max_pipelines=16, max_containers=8,
+        waiting_ticks_mean=200.0,
+    )
+    wls = make_workload_batch(params, list(range(7)))
+    sorted_wls, inv = bin_lanes_by_density(wls, params)
+    for f in wls._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sorted_wls, f))[inv],
+            np.asarray(getattr(wls, f)),
+            err_msg=f"field {f}",
+        )
