@@ -165,6 +165,57 @@ def fleet_bench(smoke: bool = False) -> list[dict]:
     return rows
 
 
+def scenario_fleet_bench(smoke: bool = False) -> list[dict]:
+    """Scenario-family throughput rows (fused vs sharded) for
+    BENCH_fleet.json: each family of the scenario library is drawn as a
+    trace batch and replayed through ``fleet_run(workloads=...)``, so
+    the perf record tracks the engine on *realistic skew* (diurnal
+    ramps, bursts, heavy tails, priority storms) and not just seed
+    variance — the regime event-density lane binning targets. Like the
+    seed-fleet rows, every path pays workload construction (here: trace
+    ingestion) inside the clock; the batch is donated, so it is rebuilt
+    per call on both paths and the fused/sharded comparison stays fair.
+    """
+    from repro.core import workload_batch_from_traces
+    from repro.core.scenarios import list_scenarios, scenario_lane_batch
+
+    fleet_size = 8 if smoke else 32
+    base = _fleet_params(smoke).replace(
+        max_pipelines=0, max_ops_per_pipeline=0
+    )
+    n_dev = jax.local_device_count()
+    rows = []
+    for scen in list_scenarios():
+        lanes = scenario_lane_batch(scen, base, fleet_size, seed=0)
+        _, params = workload_batch_from_traces(lanes, base)
+        horizon = params.horizon_ticks
+
+        def replay(shard, params=params, lanes=lanes):
+            wls, _ = workload_batch_from_traces(lanes, params)
+            return jax.block_until_ready(
+                fleet_run(params, workloads=wls, shard=shard).done_count
+            )
+
+        for engine, shard in (("fused", None), ("sharded", "auto")):
+            t_min, t_mean = _time(lambda s=shard: replay(s), reps=3)
+            rows.append(
+                {
+                    "scenario": scen,
+                    "fleet_engine": engine,
+                    "fleet_size": fleet_size,
+                    "devices": n_dev if engine == "sharded" else 1,
+                    "max_pipelines": params.max_pipelines,
+                    "wall_s": round(t_mean, 4),
+                    "wall_s_min": round(t_min, 4),
+                    "ticks_per_s": round(fleet_size * horizon / t_min),
+                    "sim_s_per_wall_s": round(
+                        fleet_size * params.duration / t_min, 2
+                    ),
+                }
+            )
+    return rows
+
+
 def selection_bench(n_rounds: int = 24, reps: int = 7) -> dict:
     """Scheduler-selection microbench: the seed three-pass helpers vs
     the fused ``sched_select.masked_lex_argmin``, replicating the

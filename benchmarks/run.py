@@ -35,7 +35,10 @@ ENGINE_ROWS = ("vmap", "fused", "sharded")
 
 
 def write_fleet_json(
-    rows: list[dict], smoke: bool, phase_breakdown: dict | None = None
+    rows: list[dict],
+    smoke: bool,
+    phase_breakdown: dict | None = None,
+    scenario_rows: list[dict] | None = None,
 ) -> dict:
     """Persist the fleet-engine rows; returns the validated payload.
 
@@ -46,7 +49,10 @@ def write_fleet_json(
     lane binning on). The ``selection`` row is the scheduler-selection
     microbench (three-pass helpers vs the fused ``sched_select``
     kernel), and ``phase_breakdown`` the per-event phase shares —
-    both feed EXPERIMENTS.md §Scheduler-Perf.
+    both feed EXPERIMENTS.md §Scheduler-Perf. ``scenario_rows``
+    (``engine_throughput.scenario_fleet_bench``) track fused/sharded
+    throughput per scenario family — realistic-skew numbers for future
+    binning/engine PRs, not just seed-batch variance.
     """
     path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
     fleet_rows = [r for r in rows if "fleet_engine" in r]
@@ -68,6 +74,8 @@ def write_fleet_json(
     }
     if phase_breakdown is not None:
         payload["phase_breakdown"] = phase_breakdown
+    if scenario_rows is not None:
+        payload["scenario_rows"] = scenario_rows
     path.write_text(json.dumps(payload, indent=2) + "\n")
     # read-back validation: well-formed JSON with the tracked metrics
     loaded = json.loads(path.read_text())
@@ -83,6 +91,21 @@ def write_fleet_json(
         for key in ("fleet_engine", "fleet_size", "wall_s", "wall_s_min",
                     "ticks_per_s", "sim_s_per_wall_s"):
             assert key in r, f"missing {key} in {r}"
+    if scenario_rows is not None:
+        recorded_scen = {
+            (r["scenario"], r["fleet_engine"])
+            for r in loaded["scenario_rows"]
+        }
+        scens = {s for s, _ in recorded_scen}
+        assert len(scens) >= 4, f"expected >= 4 scenario families: {scens}"
+        for s in scens:
+            assert {(s, "fused"), (s, "sharded")} <= recorded_scen, (
+                f"scenario {s} missing a fused/sharded row"
+            )
+        for r in loaded["scenario_rows"]:
+            for key in ("scenario", "fleet_engine", "wall_s_min",
+                        "ticks_per_s"):
+                assert key in r, f"missing {key} in {r}"
     print(f"wrote {path} "
           f"(speedup vs vmap baseline: fused "
           f"{loaded['speedup_fused_vs_vmap']}, sharded "
@@ -237,6 +260,16 @@ def main() -> None:
                 f"_lat={r['mean_latency_s']}s_cold={r['cold_starts']}",
             )
 
+        print("== scenario_comparison (scenario library, docs/scenarios.md) ==")
+        rows = scheduler_comparison.scenario_comparison(print_rows=False)
+        for r in rows:
+            _csv(
+                f"scenario_{r['scenario']}_{r['scheduler']}",
+                r["wall_s"] * 1e6,
+                f"thr={r['throughput_per_s']}/s_lat={r['mean_latency_s']}s"
+                f"_pre={r['preempt_events']}_hit={r['cache_hit_rate']}",
+            )
+
     print("== interleaving (paper §2.2 / Table 1) ==")
     from benchmarks import interleaving
 
@@ -267,10 +300,18 @@ def main() -> None:
                 r["wall_s"] * 1e6,
                 f"ticks/s={r['ticks_per_s']}",
             )
+        scenario_rows = engine_throughput.scenario_fleet_bench()
+        for r in scenario_rows:
+            _csv(
+                f"engine_scenario_{r['scenario']}_{r['fleet_engine']}",
+                r["wall_s"] * 1e6,
+                f"ticks/s={r['ticks_per_s']}",
+            )
         breakdown = engine_throughput.phase_breakdown()
         print("phase breakdown (us/event):", breakdown["us_per_event"])
         print("phase shares:", breakdown["share"])
-        write_fleet_json(rows, smoke=False, phase_breakdown=breakdown)
+        write_fleet_json(rows, smoke=False, phase_breakdown=breakdown,
+                         scenario_rows=scenario_rows)
 
     print("== kernels ==")
     from benchmarks import kernels_bench

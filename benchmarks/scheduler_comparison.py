@@ -4,12 +4,29 @@ priority/preemption design.
 
 ``cache_sensitivity`` is the data-plane scenario (EXPERIMENTS.md):
 sweep zero-copy cache capacity × {naive, priority_pool, cache_aware}
-and watch cache-aware placement convert re-runs into cache hits."""
+and watch cache-aware placement convert re-runs into cache hits.
+
+``scenario_comparison`` widens the policy table beyond the paper's
+single open-loop arrival process: every scenario family of the library
+(docs/scenarios.md — diurnal, bursty, heavy-tail, priority-skew) is
+drawn once as an 8-lane trace batch and replayed under each policy
+with ``fleet_run(workloads=...)``, so the cells compare policies on
+the *same* recorded arrival tapes."""
 from __future__ import annotations
 
 import time
 
-from repro.core import SimParams, generate_workload, run
+import jax
+
+from repro.core import (
+    SimParams,
+    fleet_run,
+    fleet_summary,
+    generate_workload,
+    run,
+    workload_batch_from_traces,
+)
+from repro.core.scenarios import list_scenarios, scenario_lane_batch
 
 
 def main(print_rows: bool = True) -> list[dict]:
@@ -104,6 +121,66 @@ def cache_sensitivity(print_rows: bool = True) -> list[dict]:
     return rows
 
 
+SCENARIO_ALGOS = ("naive", "priority", "priority_pool", "sjf", "cache_aware")
+
+
+def scenario_comparison(print_rows: bool = True) -> list[dict]:
+    """Policy × scenario-family table on shared 8-lane trace batches.
+
+    Data-plane knobs are ON (cache + cold starts + scan costs) so the
+    cache-aware policy differentiates; capacity is derived from each
+    family's traces (``max_pipelines=0``). The same per-family record
+    lists are re-ingested for every policy — a policy cell differs from
+    its neighbours only by the scheduler.
+    """
+    rows = []
+    base = SimParams(
+        duration=1.0,
+        waiting_ticks_mean=2500,
+        op_base_seconds_mean=0.03,
+        op_ram_gb_mean=2.0,
+        op_out_gb_mean=1.0,
+        cache_gb_per_pool=8.0,
+        scan_ticks_per_gb=50.0,
+        cold_start_ticks=100,
+        max_pipelines=0,
+        max_ops_per_pipeline=0,
+        max_containers=64,
+        seed=11,
+    )
+    n_lanes = 8
+    for scen in list_scenarios():
+        lanes = scenario_lane_batch(scen, base, n_lanes, seed=11)
+        for algo in SCENARIO_ALGOS:
+            params = base.replace(
+                scheduling_algo=algo,
+                num_pools=1 if algo in ("naive", "sjf") else 2,
+            )
+            wls, params = workload_batch_from_traces(lanes, params)
+            t0 = time.time()
+            states = jax.block_until_ready(fleet_run(params, workloads=wls))
+            wall = time.time() - t0
+            s = fleet_summary(states, params)
+            row = {
+                "scenario": scen,
+                "scheduler": algo,
+                "lanes": n_lanes,
+                "throughput_per_s": round(s["throughput_per_s_mean"], 2),
+                "mean_latency_s": round(s["mean_latency_s_mean"], 4),
+                "cpu_utilization": round(s["cpu_utilization_mean"], 3),
+                "preempt_events": round(s["preempt_events_mean"], 1),
+                "oom_events": round(s["oom_events_mean"], 1),
+                "cache_hit_rate": round(s["cache_hit_rate_mean"], 3),
+                "cold_starts": round(s["cold_starts_mean"], 1),
+                "wall_s": round(wall, 3),
+            }
+            rows.append(row)
+            if print_rows:
+                print(row)
+    return rows
+
+
 if __name__ == "__main__":
     main()
     cache_sensitivity()
+    scenario_comparison()

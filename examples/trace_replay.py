@@ -2,8 +2,18 @@
 the simulator" path (§3.2.1), plus the §6 claim that "plugging real-world
 scaling functions estimated from traces is trivial".
 
-Builds a JSON trace (here: the TPC-H-like profile the validation bench
-uses), replays it under two schedulers, and prints the comparison.
+Two parts:
+
+1. **Single replay** — build a JSON trace (here: the TPC-H-like profile
+   the validation bench uses), replay it under three schedulers with
+   ``run()``, print the comparison.
+2. **Fleet replay** — one recorded "day" per fleet lane: four lanes
+   drawn from the scenario library (docs/scenarios.md), one per family,
+   ingested with ``workload_batch_from_traces`` (capacities derived
+   from the traces) and replayed policy-by-policy on the lane-major
+   core with ``fleet_run(..., shard="auto")`` — every local device gets
+   a slice of the fleet, lanes come back in input order, bitwise what a
+   per-lane ``run()`` would produce (tests/test_traces.py proves it).
 
     PYTHONPATH=src python examples/trace_replay.py
 """
@@ -14,10 +24,18 @@ import tempfile
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import SimParams, load_trace, run
+from repro.core import (
+    SimParams,
+    fleet_run,
+    fleet_summary,
+    load_trace,
+    run,
+    workload_batch_from_traces,
+)
+from repro.core.scenarios import list_scenarios, scenario_lane_batch
 
 
-def main():
+def single_replay():
     # a mixed analytics trace: 12 queries with measured scaling profiles
     records = []
     profiles = [
@@ -46,6 +64,7 @@ def main():
         duration=4.0, total_cpus=16.0, total_ram_gb=32.0,
         max_pipelines=32, trace_path=trace_path,
     )
+    print("== single trace replay (12-query analytics trace) ==")
     print(f"{'scheduler':12s} {'done':>5s} {'mean_lat':>9s} {'p99':>8s} "
           f"{'util':>6s}")
     for algo in ("naive", "priority", "sjf"):
@@ -57,6 +76,47 @@ def main():
             f"{s['p99_latency_s']:8.4f} {s['cpu_utilization']:6.3f}"
         )
     pathlib.Path(trace_path).unlink()
+
+
+def fleet_replay():
+    # one lane per scenario family — four recorded "days" in one batch.
+    # In production these lists would come from your own trace files
+    # (docs/trace-format.md): anything JSON-shaped like
+    # [{arrival_s, priority, ops: [...]}, ...] per lane works.
+    base = SimParams(
+        duration=1.0, waiting_ticks_mean=2000,
+        op_base_seconds_mean=0.02, op_ram_gb_mean=2.0,
+        num_pools=2, max_containers=64,
+        max_pipelines=0, max_ops_per_pipeline=0,  # derive from the traces
+    )
+    lanes = []
+    for i, family in enumerate(list_scenarios()):
+        lanes += scenario_lane_batch(family, base, 1, seed=100 + i)
+
+    print("\n== fleet trace replay (one lane per scenario family, "
+          "shard='auto') ==")
+    print(f"lanes: {len(lanes)}, pipelines/lane: "
+          f"{[len(recs) for recs in lanes]}")
+    print(f"{'scheduler':14s} {'thr/s':>7s} {'lat_s':>8s} {'util':>6s} "
+          f"{'preempt':>8s} {'per-lane done':>20s}")
+    for algo in ("naive", "priority", "priority_pool", "sjf"):
+        params = base.replace(scheduling_algo=algo)
+        # the batch is donated to the compiled core -> rebuild per policy
+        wls, params = workload_batch_from_traces(lanes, params)
+        states = fleet_run(params, workloads=wls, shard="auto")
+        s = fleet_summary(states, params)
+        done = [int(d) for d in states.done_count]
+        print(
+            f"{algo:14s} {s['throughput_per_s_mean']:7.2f} "
+            f"{s['mean_latency_s_mean']:8.4f} "
+            f"{s['cpu_utilization_mean']:6.3f} "
+            f"{s['preempt_events_mean']:8.1f} {str(done):>20s}"
+        )
+
+
+def main():
+    single_replay()
+    fleet_replay()
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ from .state import (
     container_schedule,
     init_state,
 )
-from .sweep import fleet_run, fleet_summary, make_workload_batch
+from .sweep import fleet_run, fleet_summary, make_workload_batch, pad_lanes
 from .types import (
     Assignment,
     Failure,
@@ -42,8 +42,10 @@ from . import extra_schedulers  # noqa: F401
 from .workload import (
     generate_workload,
     load_trace,
+    workload_batch_from_traces,
     workload_from_pipelines,
     workload_from_trace_records,
+    workload_to_trace_records,
 )
 
 
@@ -78,6 +80,8 @@ __all__ = [
     "generate_workload",
     "workload_from_pipelines",
     "workload_from_trace_records",
+    "workload_to_trace_records",
+    "workload_batch_from_traces",
     "load_trace",
     "container_schedule",
     "cache_insert",
@@ -88,4 +92,5 @@ __all__ = [
     "fleet_run",
     "fleet_summary",
     "make_workload_batch",
+    "pad_lanes",
 ]

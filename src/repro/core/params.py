@@ -27,20 +27,68 @@ except ModuleNotFoundError:  # pragma: no cover - depends on interpreter
         _toml = None
 
 
-def _toml_loads(text: str) -> dict:
-    """Parse TOML via stdlib/tomli, else a minimal ``key = value`` parser.
+def _toml_descend(out: dict, parts: list[str], *, array: bool):
+    """Walk a dotted table path, creating tables as needed; a list node
+    means an array-of-tables, where the path continues in its LAST
+    element (TOML semantics). With ``array`` the leaf appends a fresh
+    table; otherwise it is (created and) entered."""
+    node: Any = out
+    path = ".".join(parts)
+    for part in parts[:-1]:
+        node = node.setdefault(part, {})
+        if isinstance(node, list):
+            node = node[-1]
+        if not isinstance(node, dict):
+            raise ValueError(
+                f"TOML table path {path!r} collides with non-table "
+                f"key {part!r}"
+            )
+    leaf = parts[-1]
+    existing = node.get(leaf)
+    if array:
+        if existing is not None and not isinstance(existing, list):
+            raise ValueError(
+                f"TOML array-of-tables [[{path}]] collides with "
+                f"existing key {leaf!r}"
+            )
+        node.setdefault(leaf, []).append({})
+        return node[leaf][-1]
+    if existing is not None and not isinstance(existing, (dict, list)):
+        raise ValueError(
+            f"TOML table [{path}] collides with existing key {leaf!r}"
+        )
+    node = node.setdefault(leaf, {})
+    return node[-1] if isinstance(node, list) else node
 
-    The fallback covers exactly the flat parameter files the paper uses
-    (§4.1.1): scalars, strings, booleans and one-level arrays.
+
+def _toml_loads(text: str) -> dict:
+    """Parse TOML via stdlib/tomli, else a minimal fallback parser.
+
+    The fallback covers the flat parameter files the paper uses
+    (§4.1.1) — scalars, strings, booleans, one-level arrays — plus the
+    ``[table]`` / ``[[array-of-tables]]`` headers the trace format
+    needs (docs/trace-format.md: repeated ``[[pipeline]]`` +
+    ``[[pipeline.ops]]`` tables).
     """
     if _toml is not None:
         return _toml.loads(text)
     import ast
 
     out: dict[str, Any] = {}
+    current = out
     for line in text.splitlines():
         line = line.split("#", 1)[0].strip()
-        if not line or line.startswith("["):
+        if not line:
+            continue
+        if line.startswith("[[") and line.endswith("]]"):
+            current = _toml_descend(
+                out, line[2:-2].strip().split("."), array=True
+            )
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            current = _toml_descend(
+                out, line[1:-1].strip().split("."), array=False
+            )
             continue
         key, _, value = line.partition("=")
         if not _:
@@ -48,9 +96,9 @@ def _toml_loads(text: str) -> dict:
         value = value.strip()
         low = value.lower()
         if low in ("true", "false"):
-            out[key.strip()] = low == "true"
+            current[key.strip()] = low == "true"
         else:
-            out[key.strip()] = ast.literal_eval(value)
+            current[key.strip()] = ast.literal_eval(value)
     return out
 
 
@@ -72,7 +120,11 @@ class SimParams:
 
     # ---- workload generator (§3.2.1) ---------------------------------------
     seed: int = 0
-    max_pipelines: int = 256           # capacity of the arrival table
+    # capacity of the arrival table / ops tables. 0 = "derive from the
+    # traces" (only meaningful through workload_batch_from_traces /
+    # the scenario helpers, which return params carrying the derived
+    # capacities; the seed generator needs positive values).
+    max_pipelines: int = 256
     max_ops_per_pipeline: int = 8
     mean_ops_per_pipeline: float = 3.0
     chain_prob: float = 0.65           # P(op starts a new DAG level)

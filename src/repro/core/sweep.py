@@ -6,7 +6,10 @@ Because the whole simulator is one lane-major XLA program
 (``engine._fleet_compiled``), *cheap* becomes *massively parallel*:
 
 * a fleet of seeds is just more lanes in the batch axis — Monte-Carlo
-  policy evaluation in a single compiled program, and
+  policy evaluation in a single compiled program (and with
+  ``workloads=`` the lanes are recorded traces or scenario-library
+  batches instead: replay yesterday's production day under four
+  candidate policies in one call), and
 * ``fleet_run(..., shard="auto")`` splits the fleet axis across every
   local device with ``shard_map``: each device runs the engine's shared
   while_loop on its own lanes and exits when *its* lanes drain, with no
@@ -37,12 +40,22 @@ from repro.parallel.compat import shard_map
 from .engine import _fleet_compiled, _quiet_partial_donation
 from .params import SimParams
 from .state import INF_TICK, SimState, Workload
-from .workload import generate_workload
+from .workload import generate_workload, workload_batch_from_traces  # noqa: F401  (re-export: batch ingestion pairs with fleet_run)
 
 
 def make_workload_batch(params: SimParams, seeds: Sequence[int]) -> Workload:
-    # host-loop-free batch construction: vmap the key derivation too, so
-    # fleets in the thousands don't pay a per-seed Python round-trip
+    """One seed-generated workload per fleet lane, built in one vmap.
+
+    The key derivation is vmapped too (no per-seed Python round-trip),
+    so fleets in the thousands construct host-loop-free; lane ``i`` is
+    bitwise ``generate_workload(params, PRNGKey(seeds[i]))``.
+
+    >>> from repro.core import SimParams, make_workload_batch
+    >>> p = SimParams(max_pipelines=8, max_ops_per_pipeline=4)
+    >>> batch = make_workload_batch(p, seeds=[0, 1, 2])
+    >>> batch.arrival.shape, batch.op_ram.shape
+    ((3, 8), (3, 8, 4))
+    """
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds, jnp.uint32))
     return jax.vmap(lambda k: generate_workload(params, k))(keys)
 
@@ -54,6 +67,17 @@ def pad_lanes(wls: Workload, n_lanes: int) -> Workload:
     INF_TICK, so the engine retires them in a single event (no arrivals
     -> the first next-event jump lands on the horizon) — they cost one
     loop iteration, not a simulation.
+
+    >>> import numpy as np
+    >>> from repro.core import SimParams, make_workload_batch
+    >>> from repro.core.sweep import pad_lanes
+    >>> from repro.core.state import INF_TICK
+    >>> p = SimParams(max_pipelines=8, max_ops_per_pipeline=4)
+    >>> padded = pad_lanes(make_workload_batch(p, [0, 1]), 4)
+    >>> padded.arrival.shape
+    (4, 8)
+    >>> bool((np.asarray(padded.arrival)[2:] == INF_TICK).all())
+    True
     """
     F = wls.arrival.shape[0]
     pad = n_lanes - F
@@ -132,6 +156,14 @@ def bin_lanes_by_density(
     instead of every device paying the global tail. The sort is stable,
     so equal-density lanes keep their order; padding lanes (appended
     after binning) are the lightest and land on the last device.
+
+    >>> from repro.core import SimParams, make_workload_batch
+    >>> from repro.core.sweep import bin_lanes_by_density
+    >>> p = SimParams(max_pipelines=8, max_ops_per_pipeline=4)
+    >>> sorted_wls, inv = bin_lanes_by_density(
+    ...     make_workload_batch(p, [0, 1, 2]), p)
+    >>> sorted_wls.arrival.shape, inv.shape
+    ((3, 8), (3,))
     """
     score = predicted_lane_events(wls, params)
     order = np.argsort(-score, kind="stable")
@@ -166,15 +198,24 @@ def _resolve_shards(shard, fleet_size: int) -> int:
 
 def fleet_run(
     params: SimParams,
-    seeds: Sequence[int],
+    seeds: Sequence[int] | None = None,
     scheduler_key: str | None = None,
     *,
+    workloads: Workload | None = None,
     shard: str | int | None = None,
     impl: str = "auto",
     bin_lanes: bool = True,
     fleet_engine: str | None = None,
 ) -> SimState:
-    """Run len(seeds) simulations in parallel on the lane-major core.
+    """Run a fleet of simulations in parallel on the lane-major core.
+
+    The fleet is either ``len(seeds)`` seed-generated lanes (Monte-Carlo
+    policy evaluation) or, with ``workloads=``, a caller-built batch —
+    e.g. one recorded trace per lane via ``workload_batch_from_traces``
+    or the scenario library (``repro.core.scenarios``). Exactly one of
+    ``seeds`` / ``workloads`` must be given; a ``workloads`` batch is
+    treated as CONSUMED (it is donated to the compiled core — rebuild
+    it if you need the arrays afterwards).
 
     ``shard=None`` (default) keeps the whole fleet on one device;
     ``shard="auto"`` splits the fleet axis across all local devices with
@@ -187,13 +228,28 @@ def fleet_run(
     event count before sharding — each device gets lanes of similar
     drain time, cutting the tail iterations every max-over-lanes loop
     pays — and unpermutes the result, so lane ``i`` of the output is
-    lane ``i`` of ``seeds`` bitwise whatever the binning (lanes are
+    lane ``i`` of the input bitwise whatever the binning (lanes are
     independent; tests/test_sched_select.py asserts on-vs-off
     equality).
 
     ``fleet_engine`` is deprecated: the fused lane-major engine is the
     only simulation core (the legacy ``"vmap"`` path was deleted).
+
+    >>> from repro.core import SimParams, fleet_run, fleet_summary
+    >>> p = SimParams(duration=0.01, max_pipelines=8, max_containers=8,
+    ...               max_ops_per_pipeline=4, waiting_ticks_mean=300.0,
+    ...               op_base_seconds_mean=0.002)
+    >>> states = fleet_run(p, seeds=[0, 1])
+    >>> int(states.done_count.shape[0])
+    2
+    >>> sorted(fleet_summary(states, p))[:2]
+    ['bytes_moved_gb_mean', 'cache_hit_gb_mean']
     """
+    if (seeds is None) == (workloads is None):
+        raise ValueError(
+            "fleet_run needs exactly one of seeds= (generated lanes) or "
+            "workloads= (a trace/scenario batch)"
+        )
     if fleet_engine is not None:
         warnings.warn(
             "fleet_engine is deprecated and ignored unless it names the "
@@ -207,7 +263,26 @@ def fleet_run(
                 "lane-major unification; the fused engine is the only path"
             )
     scheduler_key = scheduler_key or params.scheduling_algo
-    wls = make_workload_batch(params, seeds)
+    if workloads is not None:
+        # catch the returned-params footgun early: a batch built with
+        # derived capacities must run with the params that carry them,
+        # or the schedulers' [MP]-shaped masks break deep inside jit
+        if workloads.arrival.ndim != 2:
+            raise ValueError(
+                f"workloads must be a BATCH (arrival [F, MP]), got "
+                f"arrival shape {workloads.arrival.shape}; wrap a single "
+                "trace with workload_batch_from_traces([records], params)"
+            )
+        got = (workloads.arrival.shape[-1], workloads.op_valid.shape[-1])
+        want = (params.max_pipelines, params.max_ops_per_pipeline)
+        if got != want:
+            raise ValueError(
+                f"workloads batch is shaped {got} "
+                "(max_pipelines, max_ops_per_pipeline) but params say "
+                f"{want}; run with the params returned by "
+                "workload_batch_from_traces / scenario_fleet"
+            )
+    wls = workloads if seeds is None else make_workload_batch(params, seeds)
     F = wls.arrival.shape[0]
     n_shards = _resolve_shards(shard, F)
     if n_shards <= 1:
@@ -271,6 +346,7 @@ __all__ = [
     "fleet_run",
     "fleet_summary",
     "make_workload_batch",
+    "workload_batch_from_traces",
     "pad_lanes",
     "bin_lanes_by_density",
     "predicted_lane_events",

@@ -64,7 +64,9 @@ class Operator:
     """One function node of a pipeline DAG."""
 
     ram_gb: float          # max RAM required to avoid OOM
-    base_ticks: int        # runtime at exactly 1 CPU
+    base_ticks: float      # runtime at exactly 1 CPU (may be fractional:
+    #   generated runtimes are f32 ticks; trace records carry them
+    #   exactly via the ``base_ticks`` field — see docs/trace-format.md)
     alpha: float           # CPU-scaling exponent: t(c) = base / c**alpha
     level: int             # topological depth inside the pipeline DAG
     out_gb: float = 0.0    # intermediate output dataset size (data plane)

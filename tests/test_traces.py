@@ -1,0 +1,359 @@
+"""Trace + scenario subsystem: lossless round-trips and fleet replay.
+
+The contract under test (docs/trace-format.md):
+
+* ``workload_to_trace_records`` is the exact inverse of ingestion —
+  ``generate_workload -> records -> workload_batch_from_traces`` is
+  bitwise on every ``Workload`` field, and ingestion is idempotent
+  (batch -> records -> batch is a fixed point);
+* batched ingestion equals single-lane ingestion lane-for-lane;
+* ``fleet_run(workloads=...)`` over a trace batch is lane-for-lane
+  bitwise identical to per-lane ``run()`` on the same traces, across
+  every registered scheduler × data-plane on/off × ``shard="auto"`` ×
+  ``bin_lanes`` on/off (the PR's acceptance bar);
+* TOML and JSON spellings of a trace ingest identically.
+"""
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimParams,
+    fleet_run,
+    generate_workload,
+    load_trace,
+    run,
+    workload_batch_from_traces,
+    workload_from_trace_records,
+    workload_to_trace_records,
+)
+from repro.core.scenarios import (
+    SCENARIOS,
+    get_scenario,
+    list_scenarios,
+    scenario_fleet,
+)
+
+ALL_SCHEDULERS = [
+    "naive", "priority", "priority_pool", "sjf", "cache_aware",
+    "locality_pool",
+]
+
+DATA_PLANE = dict(
+    cache_gb_per_pool=4.0,
+    scan_ticks_per_gb=50.0,
+    cold_start_ticks=40,
+    container_warm_ticks=2_000,
+)
+
+# f32 accumulator chains XLA codegens differently at different batch
+# widths (~1 ULP); comparisons across DIFFERENT fleet sizes exempt it
+# (same convention as tests/test_fleet.py).
+BITWISE_EXEMPT = {"cost_dollars"}
+
+
+def _params(algo="priority", dp=False, **extra):
+    kw = dict(DATA_PLANE) if dp else {}
+    kw.update(extra)
+    return SimParams(
+        duration=0.03,
+        scheduling_algo=algo,
+        num_pools=1 if algo == "naive" else 2,
+        waiting_ticks_mean=300.0,
+        op_base_seconds_mean=0.005,
+        op_base_seconds_sigma=1.0,
+        max_pipelines=32,
+        max_containers=32,
+        **kw,
+    )
+
+
+def _assert_workloads_equal(a, b, ctx=""):
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)),
+            np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: field {f}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Round trips.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 7])
+def test_generated_roundtrip_bitwise(seed):
+    """generate -> records -> batch ingestion is bitwise on every field,
+    including fractional-tick runtimes and MiB-grid out_gb sizes."""
+    params = _params().replace(seed=seed)
+    wl = generate_workload(params)
+    recs = workload_to_trace_records(wl)
+    batch, p2 = workload_batch_from_traces([recs], params)
+    assert p2 == params  # capacity untouched when it already fits
+    lane0 = jax.tree.map(lambda x: x[0], batch)
+    _assert_workloads_equal(wl, lane0, ctx=f"seed {seed}")
+
+
+def test_records_are_json_safe_and_survive_serialisation():
+    """The emitted records are plain JSON types, and a JSON round trip
+    loses nothing (exactness rides on int ticks + f64-exact floats)."""
+    params = _params()
+    wl = generate_workload(params)
+    recs = json.loads(json.dumps(workload_to_trace_records(wl)))
+    batch, _ = workload_batch_from_traces([recs], params)
+    _assert_workloads_equal(wl, jax.tree.map(lambda x: x[0], batch))
+
+
+@pytest.mark.parametrize("dp", [False, True], ids=["plain", "data_plane"])
+@pytest.mark.parametrize("family", sorted(SCENARIOS))
+def test_scenario_roundtrip_fixed_point(family, dp):
+    """Ingestion is a fixed point for every scenario family: batch ->
+    records -> batch reproduces the arrays bitwise. ``dp=False`` strips
+    the out_gb sizes first (a data-plane-free trace stays inert)."""
+    base = _params(dp=dp).replace(max_pipelines=0, max_ops_per_pipeline=0)
+    recs = get_scenario(family)(base, seed=3)
+    assert recs, f"{family} produced an empty trace"
+    if not dp:
+        recs = [
+            {**r, "ops": [
+                {k: v for k, v in o.items() if k != "out_gb"}
+                for o in r["ops"]
+            ]}
+            for r in recs
+        ]
+    batch, p = workload_batch_from_traces([recs], base)
+    if not dp:
+        assert not np.asarray(batch.op_out).any()
+    back = workload_to_trace_records(jax.tree.map(lambda x: x[0], batch))
+    batch2, p2 = workload_batch_from_traces([back], p)
+    assert (p2.max_pipelines, p2.max_ops_per_pipeline) == (
+        p.max_pipelines, p.max_ops_per_pipeline
+    )
+    _assert_workloads_equal(batch, batch2, ctx=family)
+
+
+def test_batch_lane_equals_single_ingestion():
+    """Vectorised batch ingestion == the Pipeline-object path, per lane."""
+    base = _params().replace(max_pipelines=0, max_ops_per_pipeline=0)
+    lanes = [get_scenario(f)(base, seed=i)
+             for i, f in enumerate(list_scenarios())]
+    batch, p = workload_batch_from_traces(lanes, base)
+    for i, recs in enumerate(lanes):
+        single = workload_from_trace_records(recs, p)
+        _assert_workloads_equal(
+            single, jax.tree.map(lambda x: x[i], batch), ctx=f"lane {i}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Capacity derivation / validation.
+# ---------------------------------------------------------------------------
+def test_capacity_derivation_and_validation():
+    recs = [
+        {"arrival_s": 0.0, "ops": [{"ram_gb": 1.0, "base_s": 0.01}] * 3},
+        {"arrival_s": 0.1, "ops": [{"ram_gb": 1.0, "base_s": 0.01}]},
+    ]
+    wls, p = workload_batch_from_traces(
+        [recs], SimParams(max_pipelines=0, max_ops_per_pipeline=0)
+    )
+    assert (p.max_pipelines, p.max_ops_per_pipeline) == (2, 3)
+    assert wls.arrival.shape == (1, 2) and wls.op_ram.shape == (1, 2, 3)
+
+    with pytest.raises(ValueError, match="max_pipelines=0"):
+        workload_batch_from_traces([recs], SimParams(max_pipelines=1))
+    with pytest.raises(ValueError, match="max_ops_per_pipeline=0"):
+        workload_batch_from_traces(
+            [recs], SimParams(max_ops_per_pipeline=2)
+        )
+    with pytest.raises(ValueError, match="empty"):
+        workload_batch_from_traces([], SimParams())
+
+
+def test_scenarios_respect_table_capacity():
+    """A positive max_pipelines truncates the scenario like the seed
+    generator's fixed arrival table."""
+    p = _params().replace(max_pipelines=5, waiting_ticks_mean=50.0)
+    for family in list_scenarios():
+        assert len(get_scenario(family)(p, seed=0)) <= 5, family
+
+
+def test_fleet_run_input_validation():
+    p = _params()
+    with pytest.raises(ValueError, match="exactly one"):
+        fleet_run(p)
+    with pytest.raises(ValueError, match="exactly one"):
+        wls, p2 = scenario_fleet("diurnal", p, 2)
+        fleet_run(p2, [0, 1], workloads=wls)
+    # the returned-params footgun: a derived-capacity batch must run
+    # with the params that carry the derived capacities
+    derived = p.replace(max_pipelines=0, max_ops_per_pipeline=0)
+    wls, p2 = scenario_fleet("diurnal", derived, 2)
+    with pytest.raises(ValueError, match="returned"):
+        fleet_run(p, workloads=wls)
+    # a single unbatched workload must be rejected, not silently
+    # reinterpreted as a fleet of max_pipelines lanes
+    single = generate_workload(p)
+    with pytest.raises(ValueError, match="BATCH"):
+        fleet_run(p, workloads=single)
+    with pytest.raises(ValueError, match="at least one family"):
+        scenario_fleet([], p, 2)
+
+
+# ---------------------------------------------------------------------------
+# TOML.
+# ---------------------------------------------------------------------------
+def test_toml_trace_equals_json_trace(tmp_path: pathlib.Path):
+    records = [
+        {
+            "arrival_s": 0.0,
+            "priority": "QUERY",
+            "ops": [
+                {"ram_gb": 2.0, "base_s": 0.01, "alpha": 1.0, "level": 0,
+                 "out_gb": 0.5},
+            ],
+        },
+        {
+            "arrival_s": 0.05,
+            "priority": "BATCH",
+            "ops": [
+                {"ram_gb": 1.0, "base_s": 0.02, "alpha": 0.5, "level": 0},
+                {"ram_gb": 1.5, "base_s": 0.03, "alpha": 0.0, "level": 1},
+            ],
+        },
+    ]
+    json_path = tmp_path / "trace.json"
+    json_path.write_text(json.dumps(records))
+    lines = []
+    for rec in records:
+        lines += ["[[pipeline]]", f"arrival_s = {rec['arrival_s']}",
+                  f'priority = "{rec["priority"]}"']
+        for op in rec["ops"]:
+            lines.append("[[pipeline.ops]]")
+            lines += [f"{k} = {v}" for k, v in op.items()]
+    toml_path = tmp_path / "trace.toml"
+    toml_path.write_text("\n".join(lines) + "\n")
+
+    params = _params()
+    _assert_workloads_equal(
+        load_trace(json_path, params), load_trace(toml_path, params),
+        ctx="toml-vs-json",
+    )
+
+
+def test_toml_fallback_parser_matches_real_toml(tmp_path: pathlib.Path,
+                                                monkeypatch):
+    """The minimal fallback parser (used when tomllib/tomli are both
+    absent) ingests the trace spelling identically to the real parser,
+    and reports header/key collisions as ValueError, not a crash."""
+    from repro.core import params as params_mod
+
+    text = (
+        "[[pipeline]]\narrival_s = 0.0\npriority = \"QUERY\"\n"
+        "[[pipeline.ops]]\nram_gb = 2.0\nbase_s = 0.01\n"
+        "[[pipeline.ops]]\nram_gb = 3.0\nbase_s = 0.02\n"
+        "[[pipeline]]\narrival_s = 0.5\n"
+        "[[pipeline.ops]]\nram_gb = 1.0\nbase_s = 0.03\n"
+    )
+    parsed_real = (
+        params_mod._toml_loads(text) if params_mod._toml is not None else None
+    )
+    monkeypatch.setattr(params_mod, "_toml", None)
+    parsed_fallback = params_mod._toml_loads(text)
+    if parsed_real is not None:
+        assert parsed_fallback == parsed_real
+    trace = tmp_path / "t.toml"
+    trace.write_text(text)
+    wl = load_trace(trace, _params())
+    assert [int(n) for n in np.asarray(wl.n_ops)[:2]] == [2, 1]
+    with pytest.raises(ValueError, match="collides"):
+        params_mod._toml_loads("pipeline = 1\n[[pipeline]]\n")
+
+
+def test_toml_trace_without_pipelines_errors(tmp_path: pathlib.Path):
+    bad = tmp_path / "bad.toml"
+    bad.write_text("duration = 1.0\n")
+    with pytest.raises(ValueError, match="pipeline"):
+        load_trace(bad, _params())
+
+
+def test_json_dict_form_and_missing_key(tmp_path: pathlib.Path):
+    """JSON object traces accept the same pipeline/pipelines keys as
+    TOML, and a keyless object raises a descriptive error."""
+    recs = [{"arrival_s": 0.0,
+             "ops": [{"ram_gb": 1.0, "base_s": 0.01}]}]
+    for key in ("pipeline", "pipelines"):
+        f = tmp_path / f"{key}.json"
+        f.write_text(json.dumps({key: recs}))
+        assert int(np.asarray(load_trace(f, _params()).n_ops)[0]) == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"duration": 1.0}))
+    with pytest.raises(ValueError, match="pipeline"):
+        load_trace(bad, _params())
+
+
+def test_arrival_beyond_int32_clamps_to_never():
+    """A recorded day in real seconds can exceed the int32 tick range:
+    both spellings clamp to INF_TICK ('never arrives') instead of
+    overflowing the arrival table."""
+    from repro.core.state import INF_TICK
+
+    for rec in ({"arrival_s": 1e6, "ops": []},
+                {"arrival_tick": 2**40, "ops": []}):
+        wl = workload_from_trace_records([rec], _params())
+        assert int(np.asarray(wl.arrival)[0]) == int(INF_TICK)
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance bar: fleet trace replay is bitwise per-lane run().
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dp", [False, True], ids=["plain", "data_plane"])
+@pytest.mark.parametrize("algo", ALL_SCHEDULERS)
+def test_fleet_trace_replay_bitwise(algo, dp):
+    """fleet_run over a trace batch (scenario-family lanes, round-robin)
+    == per-lane run() on the same traces, and sharded (bin_lanes on AND
+    off) == unsharded, strictly bitwise. Six lanes over four devices so
+    the sharded run exercises lane padding AND keeps >= 2 lanes per
+    device — at per-device width 1 the f32 cost_dollars chain codegens
+    differently (~1 ULP), the same cross-width caveat test_fleet.py
+    documents."""
+    base = _params(algo, dp).replace(
+        max_pipelines=0, max_ops_per_pipeline=0
+    )
+    families = list_scenarios()
+    lanes = [get_scenario(families[i % len(families)])(base, seed=11 + i)
+             for i in range(6)]
+    wls, params = workload_batch_from_traces(lanes, base)
+
+    states = fleet_run(params, workloads=wls)
+    for variant, kw in (
+        ("bin", dict(shard="auto", bin_lanes=True)),
+        ("nobin", dict(shard="auto", bin_lanes=False)),
+    ):
+        wls_i, _ = workload_batch_from_traces(lanes, base)
+        sharded = fleet_run(params, workloads=wls_i, **kw)
+        for f in states._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(states, f)),
+                np.asarray(getattr(sharded, f)),
+                err_msg=f"{algo}/dp={dp}/{variant}: field {f}",
+            )
+
+    for i, recs in enumerate(lanes):
+        ref = run(params, workload=workload_from_trace_records(recs, params),
+                  engine="event")
+        for f in states._fields:
+            a = np.asarray(getattr(states, f))[i]
+            b = np.asarray(getattr(ref.state, f))
+            if f in BITWISE_EXEMPT:  # cross-batch-width comparison
+                np.testing.assert_allclose(
+                    a, b, rtol=1e-6, atol=1e-9,
+                    err_msg=f"{algo}/dp={dp}/lane{i}: field {f}",
+                )
+            else:
+                np.testing.assert_array_equal(
+                    a, b, err_msg=f"{algo}/dp={dp}/lane{i}: field {f}"
+                )
+    # the lanes actually simulate something
+    assert int(np.asarray(states.done_count).sum()) > 0

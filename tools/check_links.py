@@ -1,0 +1,72 @@
+"""Markdown link checker for the docs suite (CI `docs` job).
+
+Checks every relative markdown link target in README.md,
+EXPERIMENTS.md and docs/*.md resolves to an existing file (anchors are
+stripped; http(s)/mailto links are not fetched). Zero dependencies, so
+the CI job needs no install step and tests/test_docs.py can assert the
+same invariant inside the tier-1 suite.
+
+    python tools/check_links.py          # repo root inferred
+    python tools/check_links.py <root>
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — excluding images' leading ! is unnecessary: image
+# targets must exist too.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+DEFAULT_SOURCES = ("README.md", "EXPERIMENTS.md", "ROADMAP.md", "docs")
+
+
+def iter_markdown_files(root: pathlib.Path):
+    for src in DEFAULT_SOURCES:
+        p = root / src
+        if p.is_dir():
+            yield from sorted(p.glob("**/*.md"))
+        elif p.exists():
+            yield p
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path) -> list[str]:
+    """Return 'file: broken-target' strings for dangling relative links.
+
+    Leading-``/`` targets are repo-root-relative (GitHub's rendering
+    rule), everything else resolves against the linking file.
+    """
+    broken = []
+    for target in _LINK.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        base = root if rel.startswith("/") else path.parent
+        if not (base / rel.lstrip("/")).exists():
+            broken.append(f"{path}: {target}")
+    return broken
+
+
+def main(root: str | pathlib.Path | None = None) -> list[str]:
+    root = pathlib.Path(
+        root
+        if root is not None
+        else pathlib.Path(__file__).resolve().parents[1]
+    )
+    broken = []
+    n_files = 0
+    for md in iter_markdown_files(root):
+        n_files += 1
+        broken.extend(check_file(md, root))
+    print(f"checked {n_files} markdown files: "
+          f"{len(broken)} broken link(s)")
+    for b in broken:
+        print(f"  BROKEN {b}")
+    return broken
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main(*sys.argv[1:2]) else 0)
