@@ -165,6 +165,60 @@ def fleet_bench(smoke: bool = False) -> list[dict]:
     return rows
 
 
+def trace_overhead_bench(smoke: bool = False, reps: int = 7) -> list[dict]:
+    """Telemetry cost on the fused fleet path: the same bench as the
+    ``fused`` row with ``trace=True`` at the default ring capacity,
+    including the host-side decode. Off-path throughput is re-measured
+    in the same call so ``trace_overhead_pct`` is a same-run ratio
+    (machine speed and load normalise out, as in the CI smoke gate).
+    Feeds the ``fused_traced`` row of BENCH_fleet.json; the <10%
+    acceptance bar lives in EXPERIMENTS.md §Telemetry. This row gets
+    min-of-7 (vs min-of-3 for the throughput rows): the overhead is a
+    ratio of two ~0.1-0.5 s walls, so scheduler jitter that the
+    absolute rows shrug off would dominate it at 3 reps.
+    """
+    from repro.core.telemetry.schema import DEFAULT_TRACE_CAPACITY
+
+    fleet_size = 32 if smoke else 64
+    params = _fleet_params(smoke)
+    seeds = list(range(fleet_size))
+    horizon = params.horizon_ticks
+
+    def fused_off():
+        return jax.block_until_ready(
+            fleet_run(params, seeds, shard=None).done_count
+        )
+
+    def fused_on():
+        states, traces = fleet_run(params, seeds, shard=None, trace=True)
+        jax.block_until_ready(states.done_count)
+        return traces
+
+    t_off_min, _ = _time(fused_off, reps=reps)
+    t_on_min, t_on_mean = _time(fused_on, reps=reps)
+    traces = fused_on()
+    overhead_pct = round((t_on_min / t_off_min - 1.0) * 100, 1)
+    return [
+        {
+            "engine": f"fleet fused+trace x{fleet_size}",
+            "fleet_engine": "fused_traced",
+            "fleet_size": fleet_size,
+            "devices": 1,
+            "wall_s": round(t_on_mean, 4),
+            "wall_s_min": round(t_on_min, 4),
+            "ticks_per_s": round(fleet_size * horizon / t_on_min),
+            "sim_s_per_wall_s": round(
+                fleet_size * params.duration / t_on_min, 2
+            ),
+            "trace_capacity": DEFAULT_TRACE_CAPACITY,
+            "events_recorded": int(sum(t.n for t in traces)),
+            "events_dropped": int(sum(t.events_dropped for t in traces)),
+            "untraced_wall_s_min": round(t_off_min, 4),
+            "trace_overhead_pct": overhead_pct,
+        }
+    ]
+
+
 def scenario_fleet_bench(smoke: bool = False) -> list[dict]:
     """Scenario-family throughput rows (fused vs sharded) for
     BENCH_fleet.json: each family of the scenario library is drawn as a
@@ -437,6 +491,7 @@ def main(print_rows: bool = True, smoke: bool = False) -> list[dict]:
     )
 
     rows.extend(fleet_bench(smoke=smoke))
+    rows.extend(trace_overhead_bench(smoke=smoke))
     if not smoke:
         # scheduler-selection microbench -> the `selection` row of
         # BENCH_fleet.json (three-pass helpers vs fused kernel)

@@ -13,6 +13,7 @@ is tracked across PRs.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import pathlib
 import time
@@ -32,6 +33,9 @@ def _csv(name: str, us: float, derived: str = "") -> None:
 
 
 ENGINE_ROWS = ("vmap", "fused", "sharded")
+# small Perfetto trace written by --smoke runs; uploaded as a CI
+# artifact next to BENCH_fleet.smoke.json (docs/observability.md)
+SMOKE_PERFETTO = pathlib.Path("BENCH_trace.perfetto.json")
 
 
 def write_fleet_json(
@@ -72,6 +76,12 @@ def write_fleet_json(
             "speedup_vs_vmap"
         ),
     }
+    traced = by_engine.get("fused_traced")
+    if traced is not None:
+        # telemetry cost on the fused path (engine_throughput.
+        # trace_overhead_bench): tracked across PRs with a <10% bar
+        # (EXPERIMENTS.md §Telemetry)
+        payload["trace_overhead_pct"] = traced.get("trace_overhead_pct")
     if phase_breakdown is not None:
         payload["phase_breakdown"] = phase_breakdown
     if scenario_rows is not None:
@@ -152,6 +162,43 @@ def check_smoke_regression(loaded: dict, baseline: dict | None) -> bool | None:
     return rel >= 0.8
 
 
+def _maybe_profile(trace_dir: str | None):
+    """Opt-in ``jax.profiler.trace`` around the benchmark body; the
+    engine's ``jax.named_scope`` phase annotations (phase1 / scheduler /
+    apply / advance / telemetry) label the resulting timeline. View the
+    output in TensorBoard or https://ui.perfetto.dev."""
+    if not trace_dir:
+        return contextlib.nullcontext()
+    import jax
+
+    print(f"profiling to {trace_dir} (open in Perfetto or TensorBoard)")
+    return jax.profiler.trace(trace_dir)
+
+
+def _write_smoke_perfetto() -> None:
+    """A small real Perfetto trace for the CI artifact: one traced
+    single-sim run, exported with ``telemetry.to_perfetto_json``."""
+    from repro.core import SimParams, run, to_perfetto_json
+
+    params = SimParams(
+        duration=0.05,
+        scheduling_algo="priority_pool",
+        num_pools=2,
+        max_pipelines=32,
+        max_containers=32,
+        waiting_ticks_mean=400.0,
+        op_base_seconds_mean=0.004,
+        cache_gb_per_pool=4.0,
+        scan_ticks_per_gb=50.0,
+        cold_start_ticks=40,
+        container_warm_ticks=2_000,
+    )
+    res = run(params, trace=True)
+    SMOKE_PERFETTO.write_text(to_perfetto_json(res.trace, res.params))
+    print(f"wrote {SMOKE_PERFETTO} ({res.trace.n} events, "
+          f"{res.trace.events_dropped} dropped)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -163,6 +210,10 @@ def main() -> None:
                          "baseline (CI)")
     ap.add_argument("--no-regression-gate", action="store_true",
                     help="skip the --smoke fused-throughput regression gate")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="wrap the benchmark body in jax.profiler.trace(DIR); "
+                         "the engine's named_scope phase annotations label "
+                         "the timeline (view in Perfetto / TensorBoard)")
     ap.add_argument("--record-smoke-baseline", action="store_true",
                     help="with --smoke: run the smoke bench three times and "
                          "record the LOWEST fused/vmap ratio as the committed "
@@ -199,10 +250,13 @@ def main() -> None:
             print(f"recorded smoke baseline (floor of 3) -> {SMOKE_BASELINE}")
             print("benchmarks smoke OK")
             return
-        rows = engine_throughput.fleet_bench(smoke=True)
+        with _maybe_profile(args.profile):
+            rows = engine_throughput.fleet_bench(smoke=True)
+            rows += engine_throughput.trace_overhead_bench(smoke=True)
         for r in rows:
             print(r)
         loaded = write_fleet_json(rows, smoke=True)
+        _write_smoke_perfetto()
         if not args.no_regression_gate:
             ok = check_smoke_regression(loaded, baseline)
             attempts = 1
@@ -287,7 +341,8 @@ def main() -> None:
     from benchmarks import engine_throughput
 
     if not args.fast:
-        rows = engine_throughput.main(print_rows=False)
+        with _maybe_profile(args.profile):
+            rows = engine_throughput.main(print_rows=False)
         for r in rows:
             if r.get("fleet_engine") == "selection":
                 _csv("engine_selection_microbench", r["fused_us"],

@@ -1,0 +1,77 @@
+"""Telemetry walkthrough: utilisation timeline, trace-driven Gantt,
+Perfetto export.
+
+    PYTHONPATH=src python examples/trace_viz.py            # timelines only
+    PYTHONPATH=src python examples/trace_viz.py --trace    # + gantt, perfetto
+
+With ``--trace`` the run records an on-device event trace
+(``run(..., trace=True)``), renders the per-pipeline Gantt from its
+spans, prints the windowed timeline summary, and writes
+``trace_viz.perfetto.json`` — open it at https://ui.perfetto.dev.
+See docs/observability.md for the trace schema.
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import SimParams, run, summarize_timeline, to_perfetto_json
+from repro.core.viz import pipeline_gantt, utilization_timeline
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", action="store_true",
+                    help="record an event trace; adds the Gantt chart, "
+                         "windowed metrics, and a Perfetto JSON export")
+    ap.add_argument("--trace-capacity", type=int, default=4096,
+                    help="trace ring size in records (default 4096)")
+    ap.add_argument("--out", default="trace_viz.perfetto.json",
+                    help="Perfetto export path (with --trace)")
+    args = ap.parse_args(argv)
+
+    params = SimParams(
+        duration=0.05,
+        scheduling_algo="priority_pool",
+        num_pools=2,
+        max_pipelines=32,
+        max_containers=32,
+        waiting_ticks_mean=400.0,
+        op_base_seconds_mean=0.004,
+        cache_gb_per_pool=4.0,
+        scan_ticks_per_gb=50.0,
+        cold_start_ticks=40,
+        container_warm_ticks=2_000,
+    )
+    res = run(params, trace=args.trace, trace_capacity=args.trace_capacity)
+
+    print("== utilisation timeline ==")
+    print(utilization_timeline(res))
+    summary = res.summary()
+    print(f"\ndone {summary['done']}/{summary['submitted']}, "
+          f"p99 latency {summary['p99_latency_s']:.4f}s")
+
+    if not args.trace:
+        print("\n(re-run with --trace for the event-trace views)")
+        return
+
+    print(f"\n== pipeline gantt ({res.trace.n} events, "
+          f"{res.trace.events_dropped} dropped) ==")
+    print(pipeline_gantt(res))
+
+    print("\n== windowed timeline ==")
+    tl = summarize_timeline(res.trace, res.params, n_windows=4)
+    for w in tl["windows"]:
+        print(f"  [{w['t0_s']:.3f}s..{w['t1_s']:.3f}s) "
+              f"completed {w['completed']:3d}  "
+              f"p99 {w['p99_latency_s']:.4f}s  "
+              f"backlog p99 {w['backlog_p99']:.0f}")
+
+    out = pathlib.Path(args.out)
+    out.write_text(to_perfetto_json(res.trace, res.params))
+    print(f"\nwrote {out} — open in https://ui.perfetto.dev")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,14 @@ from .state import (
     init_state,
 )
 from .sweep import fleet_run, fleet_summary, make_workload_batch, pad_lanes
+from . import telemetry
+from .telemetry import (
+    EventKind,
+    Span,
+    TraceEvents,
+    summarize_timeline,
+    to_perfetto_json,
+)
 from .types import (
     Assignment,
     Failure,
@@ -93,4 +101,10 @@ __all__ = [
     "fleet_summary",
     "make_workload_batch",
     "pad_lanes",
+    "telemetry",
+    "TraceEvents",
+    "Span",
+    "EventKind",
+    "to_perfetto_json",
+    "summarize_timeline",
 ]

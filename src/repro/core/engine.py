@@ -45,6 +45,8 @@ from .scheduler import (
     get_vector_scheduler_init,
 )
 from .state import INF_TICK, SimState, Workload, broadcast_lanes, init_state
+from .telemetry.record import TraceBuffer, record_step, step_block_rows
+from .telemetry.schema import DEFAULT_TRACE_CAPACITY, RECORD_WIDTH
 from .types import ContainerStatus, PipeStatus
 from .workload import get_workload
 
@@ -55,11 +57,14 @@ class SimResult:
     workload: Workload
     params: SimParams
     sched_state: Any = None
+    trace: Any = None  # telemetry.TraceEvents when run(trace=True)
 
     def summary(self) -> dict:
         from .metrics import summarize
 
-        return summarize(self.state, self.workload, self.params)
+        return summarize(
+            self.state, self.workload, self.params, trace=self.trace
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +188,52 @@ def _quiet_partial_donation():
 # ---------------------------------------------------------------------------
 # The lane-major engine.
 # ---------------------------------------------------------------------------
+def _lane_step_core(
+    params: SimParams,
+    horizon: jax.Array,
+    scheduler_fn: Callable,
+    state: SimState,
+    sched_state: Any,
+    wl: Workload,
+    arr_sorted: jax.Array,
+    tick: jax.Array,
+    ph,
+    with_aux: bool,
+):
+    """One lane, one event. Returns the advanced ``(state, sched_state)``
+    plus — for the telemetry recorder — the post-phase-1 state the
+    scheduler saw, its decision, and (``with_aux=True`` only) the
+    per-slot assignment aux from ``apply_decision``. The named scopes
+    label the engine phases in XLA/profiler output; they change HLO
+    metadata only, never the computation."""
+    with jax.named_scope("phase1"):
+        state = executor.apply_fused_phase1(state, wl, tick, params, ph)
+    st1 = state
+    with jax.named_scope("scheduler"):
+        sched_state, dec = scheduler_fn(sched_state, state, wl, params)
+    with jax.named_scope("apply"):
+        if with_aux:
+            state, aux = executor.apply_decision(
+                state, wl, dec, tick, params, early_exit=True, with_aux=True
+            )
+        else:
+            state = executor.apply_decision(
+                state, wl, dec, tick, params, early_exit=True
+            )
+            aux = None
+    acted = (
+        jnp.any(dec.suspend)
+        | jnp.any(dec.reject)
+        | jnp.any(dec.assign_pipe >= 0)
+    )
+    with jax.named_scope("advance"):
+        nxt, cursor = _next_event_registers(state, arr_sorted, tick, acted)
+        nxt = jnp.minimum(nxt, horizon)
+        state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
+    state = state._replace(tick=nxt, nxt_arrival_cursor=cursor)
+    return state, sched_state, st1, dec, aux
+
+
 def lane_event_step(
     params: SimParams,
     horizon: jax.Array,
@@ -201,22 +252,63 @@ def lane_event_step(
     (``_next_event`` vs ``_next_event_registers`` at every event); the
     engine vmaps it over the fleet axis.
     """
-    state = executor.apply_fused_phase1(state, wl, tick, params, ph)
-    sched_state, dec = scheduler_fn(sched_state, state, wl, params)
-    state = executor.apply_decision(state, wl, dec, tick, params, early_exit=True)
-    acted = (
-        jnp.any(dec.suspend)
-        | jnp.any(dec.reject)
-        | jnp.any(dec.assign_pipe >= 0)
+    state, sched_state, _, _, _ = _lane_step_core(
+        params, horizon, scheduler_fn, state, sched_state, wl,
+        arr_sorted, tick, ph, with_aux=False,
     )
-    nxt, cursor = _next_event_registers(state, arr_sorted, tick, acted)
-    nxt = jnp.minimum(nxt, horizon)
-    state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
-    return state._replace(tick=nxt, nxt_arrival_cursor=cursor), sched_state
+    return state, sched_state
 
 
-def _run_lane_major_engine(params, wls, scheduler_fn, sched_state0, impl="auto"):
-    """Shared masked while_loop over the whole batch ``wls`` [F, ...]."""
+def lane_event_step_traced(
+    params: SimParams,
+    trace_capacity: int,
+    horizon: jax.Array,
+    scheduler_fn: Callable,
+    state: SimState,
+    sched_state: Any,
+    tbuf: TraceBuffer,
+    wl: Workload,
+    arr_sorted: jax.Array,
+    tick: jax.Array,
+    ph,
+    active: jax.Array,
+):
+    """:func:`lane_event_step` plus the telemetry recorder: identical
+    state/scheduler updates (the recorder only reads), with every event
+    of the step appended to the lane's trace buffer. ``active`` gates
+    all buffer writes so finished lanes record nothing while the fleet
+    loop drains stragglers."""
+    pre = state
+    state, sched_state, st1, dec, aux = _lane_step_core(
+        params, horizon, scheduler_fn, state, sched_state, wl,
+        arr_sorted, tick, ph, with_aux=True,
+    )
+    with jax.named_scope("telemetry"):
+        tbuf = record_step(
+            tbuf, trace_capacity, active, pre, st1, state, wl, params,
+            tick, ph, dec, aux,
+        )
+    return state, sched_state, tbuf
+
+
+def _run_lane_major_engine(
+    params, wls, scheduler_fn, sched_state0, impl="auto", trace_capacity=0
+):
+    """Shared masked while_loop over the whole batch ``wls`` [F, ...].
+
+    ``trace_capacity`` is static: 0 (the default) compiles exactly the
+    untraced loop below — telemetry off costs nothing and perturbs
+    nothing — while a positive capacity swaps in the traced lane step
+    and threads per-lane :class:`TraceBuffer`\\ s through the carry,
+    returning ``(states, scheds, tbufs)``. Trace buffers deliberately
+    skip the finished-lane ``keep`` masking (that jnp.where would copy
+    the whole [F, cap, W] table every event); the recorder itself gates
+    writes on ``active``, so an inactive lane's cursor never advances
+    and its valid prefix stays untouched. In the carry the tables hold
+    ``step_block_rows`` scratch rows past ``capacity`` (the recorder's
+    contiguous writer spills there on overflow); the scratch is sliced
+    off before returning, so callers see exactly ``[F, cap, W]``.
+    """
     from repro.kernels.sim_tick import fleet_tick
 
     horizon = jnp.int32(params.horizon_ticks)
@@ -226,16 +318,69 @@ def _run_lane_major_engine(params, wls, scheduler_fn, sched_state0, impl="auto")
     states0 = broadcast_lanes(init_state(params), F)
     scheds0 = broadcast_lanes(sched_state0, F)
 
-    lane = functools.partial(lane_event_step, params, horizon, scheduler_fn)
+    # finished lanes pass through untouched
+    def keep_fn(active):
+        def keep(n, o):
+            mask = jnp.reshape(active, (F,) + (1,) * (n.ndim - 1))
+            return jnp.where(mask, n, o)
 
-    def cond(carry):
-        states, _ = carry
+        return keep
+
+    if trace_capacity == 0:
+        lane = functools.partial(
+            lane_event_step, params, horizon, scheduler_fn
+        )
+
+        def cond(carry):
+            states, _ = carry
+            return jnp.any(states.tick < horizon)
+
+        def body(carry):
+            states, scheds = carry
+            tick = states.tick                     # [F]
+            active = tick < horizon                # [F]
+
+            ph = fleet_tick(
+                states.ctr_status, states.ctr_end, states.ctr_oom,
+                states.ctr_cpus, states.ctr_ram, states.ctr_pool,
+                states.pipe_status, wls.arrival, states.pipe_release,
+                tick, num_pools=params.num_pools, impl=impl,
+            )
+
+            new_states, new_scheds = jax.vmap(lane)(
+                states, scheds, wls, arr_sorted, tick, ph
+            )
+
+            keep = keep_fn(active)
+            states = jax.tree.map(keep, new_states, states)
+            scheds = jax.tree.map(keep, new_scheds, scheds)
+            return states, scheds
+
+        return jax.lax.while_loop(cond, body, (states0, scheds0))
+
+    scratch = step_block_rows(
+        params.max_pipelines, params.max_containers,
+        params.max_assignments_per_tick,
+    )
+    tbufs0 = TraceBuffer(
+        records=jnp.zeros(
+            (F, trace_capacity + scratch, RECORD_WIDTH), jnp.int32
+        ),
+        count=jnp.zeros((F,), jnp.int32),
+        dropped=jnp.zeros((F,), jnp.int32),
+    )
+    lane_t = functools.partial(
+        lane_event_step_traced, params, trace_capacity, horizon, scheduler_fn
+    )
+
+    def cond_t(carry):
+        states, _, _ = carry
         return jnp.any(states.tick < horizon)
 
-    def body(carry):
-        states, scheds = carry
-        tick = states.tick                     # [F]
-        active = tick < horizon                # [F]
+    def body_t(carry):
+        states, scheds, tbufs = carry
+        tick = states.tick
+        active = tick < horizon
 
         ph = fleet_tick(
             states.ctr_status, states.ctr_end, states.ctr_oom,
@@ -244,25 +389,25 @@ def _run_lane_major_engine(params, wls, scheduler_fn, sched_state0, impl="auto")
             tick, num_pools=params.num_pools, impl=impl,
         )
 
-        new_states, new_scheds = jax.vmap(lane)(
-            states, scheds, wls, arr_sorted, tick, ph
+        new_states, new_scheds, tbufs = jax.vmap(lane_t)(
+            states, scheds, tbufs, wls, arr_sorted, tick, ph, active
         )
 
-        # finished lanes pass through untouched
-        def keep(n, o):
-            mask = jnp.reshape(active, (F,) + (1,) * (n.ndim - 1))
-            return jnp.where(mask, n, o)
-
+        keep = keep_fn(active)
         states = jax.tree.map(keep, new_states, states)
         scheds = jax.tree.map(keep, new_scheds, scheds)
-        return states, scheds
+        return states, scheds, tbufs
 
-    return jax.lax.while_loop(cond, body, (states0, scheds0))
+    states, scheds, tbufs = jax.lax.while_loop(
+        cond_t, body_t, (states0, scheds0, tbufs0)
+    )
+    tbufs = tbufs._replace(records=tbufs.records[:, :trace_capacity])
+    return states, scheds, tbufs
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("params", "scheduler_key", "impl"),
+    static_argnames=("params", "scheduler_key", "impl", "trace_capacity"),
     donate_argnames=("workloads",),
 )
 def _fleet_compiled(
@@ -270,12 +415,14 @@ def _fleet_compiled(
     workloads: Workload,  # batched: leading axis = fleet
     scheduler_key: str,
     impl: str = "auto",
+    trace_capacity: int = 0,
 ):
     """THE compiled simulation core: every entry point lands here.
 
     ``run()`` passes a batch of one lane, ``fleet_run`` a batch of N
     (possibly one shard of a device-sharded fleet). Returns the batched
-    final ``(SimState, sched_state)``.
+    final ``(SimState, sched_state)`` — plus batched ``TraceBuffer``\\ s
+    when the static ``trace_capacity`` is positive (telemetry on).
 
     The workload batch is DONATED: XLA may reuse the ops tables' buffers
     for outputs, so a large fleet never holds two copies of them across
@@ -285,7 +432,7 @@ def _fleet_compiled(
     scheduler_fn = get_vector_scheduler(scheduler_key, early_exit=True)
     sched_state0 = get_vector_scheduler_init(scheduler_key)(params)
     return _run_lane_major_engine(
-        params, workloads, scheduler_fn, sched_state0, impl
+        params, workloads, scheduler_fn, sched_state0, impl, trace_capacity
     )
 
 
@@ -293,6 +440,9 @@ def run(
     paramfile: str | dict | SimParams,
     workload: Workload | None = None,
     engine: str | None = None,
+    *,
+    trace: bool = False,
+    trace_capacity: int = DEFAULT_TRACE_CAPACITY,
 ) -> SimResult:
     """Run one simulation; this is what ``eudoxia.run_simulator`` wraps.
 
@@ -302,11 +452,23 @@ def run(
     replaced (checked against a frozen capture during the unification
     refactor; continuously guarded by the Python-reference equivalence
     suite and the run-vs-fleet-lane tests in tests/test_fleet.py).
+
+    ``trace=True`` records an on-device event trace of up to
+    ``trace_capacity`` records (compiled engine only) and decodes it
+    into ``result.trace`` (:class:`repro.core.telemetry.TraceEvents`);
+    the simulated state is bitwise-identical either way (guarded by
+    tests/test_telemetry.py). On overflow the earliest records win and
+    ``result.trace.events_dropped`` counts the rest.
     """
     params = load_params(paramfile)
     engine = engine or params.engine
     wl = workload if workload is not None else get_workload(params)
     if engine == "python":
+        if trace:
+            raise ValueError(
+                "trace=True requires the compiled event engine; the "
+                "Python reference engine records no telemetry"
+            )
         from .engine_python import run_python_engine
 
         return run_python_engine(params, wl)
@@ -317,18 +479,35 @@ def run(
             "bitwise-identical and strictly faster); use engine='event' "
             "(default) or the reference engine='python'"
         )
+    capacity = int(trace_capacity) if trace else 0
+    if trace and capacity <= 0:
+        raise ValueError(f"trace_capacity must be positive, got {trace_capacity}")
     wls = jax.tree.map(lambda x: x[None], wl)
     with _quiet_partial_donation():
-        states, scheds = _fleet_compiled(params, wls, params.scheduling_algo)
+        out = _fleet_compiled(
+            params, wls, params.scheduling_algo, trace_capacity=capacity
+        )
+    events = None
+    if capacity:
+        states, scheds, tbufs = out
+        from .telemetry.decode import decode_lane
+
+        events = decode_lane(tbufs, 0)
+    else:
+        states, scheds = out
     state = jax.tree.map(lambda x: x[0], states)
     sched_state = jax.tree.map(lambda x: x[0], scheds)
-    return SimResult(state=state, workload=wl, params=params, sched_state=sched_state)
+    return SimResult(
+        state=state, workload=wl, params=params, sched_state=sched_state,
+        trace=events,
+    )
 
 
 __all__ = [
     "SimResult",
     "run",
     "lane_event_step",
+    "lane_event_step_traced",
     "_fleet_compiled",
     "_tick_body",
     "_next_event",

@@ -195,6 +195,7 @@ def apply_decision(
     tick: jax.Array,
     params: SimParams,
     early_exit: bool = False,
+    with_aux: bool = False,
 ) -> SimState:
     """Apply one scheduler decision.
 
@@ -204,6 +205,15 @@ def apply_decision(
     no-ops: ``assign_one`` ignores slots with ``assign_pipe < 0``), but
     events with empty decisions no longer pay K sequential iterations.
     The fleet engine uses it; the legacy paths keep the static loop.
+
+    ``with_aux=True`` (early-exit path only) additionally returns the
+    per-slot assignment provenance the telemetry recorder needs:
+    ``aux_i [K, 4]`` int32 columns ``(pipe, pool, cold_ticks, is_warm)``
+    and ``aux_f [K, 5]`` float32 columns ``(cpus, ram, hit_gb, miss_gb,
+    total_out)``, with ``pipe = -1`` marking slots that assigned
+    nothing. The aux values are the exact intermediates of the commit,
+    read out of the same computation — collecting them does not change
+    the state update.
     """
     # ---- 1. suspensions (preemptions) --------------------------------------
     susp = dec.suspend & (state.ctr_status == int(ContainerStatus.RUNNING))
@@ -264,7 +274,7 @@ def apply_decision(
     )
 
     # ---- 3. assignments ------------------------------------------------------
-    def assign_one(k, st: SimState) -> SimState:
+    def assign_one(k, st: SimState, collect_aux: bool = False):
         pipe = dec.assign_pipe[k]
         valid = pipe >= 0
         pipe_c = jnp.maximum(pipe, 0)
@@ -359,9 +369,43 @@ def apply_decision(
                 )
             return st
 
-        return jax.lax.cond(valid, commit, lambda s: s, st)
+        new_st = jax.lax.cond(valid, commit, lambda s: s, st)
+        if not collect_aux:
+            return new_st
+        aux_i = jnp.where(
+            valid,
+            jnp.stack([pipe_c, pool, cold_ticks, is_warm.astype(jnp.int32)]),
+            jnp.array([-1, -1, 0, 0], jnp.int32),
+        )
+        aux_f = jnp.where(
+            valid,
+            jnp.stack([cpus, ram, hit_gb, miss_gb, total_out]),
+            jnp.float32(0.0),
+        )
+        return new_st, aux_i, aux_f
 
     K = params.max_assignments_per_tick
+    if with_aux:
+        if not early_exit:
+            raise ValueError("with_aux requires early_exit=True")
+        ks = jnp.arange(K, dtype=jnp.int32)
+        n_slots = jnp.max(jnp.where(dec.assign_pipe >= 0, ks + 1, 0))
+        aux_i0 = jnp.full((K, 4), -1, jnp.int32).at[:, 2:].set(0)
+        aux_f0 = jnp.zeros((K, 5), jnp.float32)
+
+        def wa_cond(carry):
+            k, _, _, _ = carry
+            return k < n_slots
+
+        def wa_body(carry):
+            k, st, ai, af = carry
+            st, row_i, row_f = assign_one(k, st, collect_aux=True)
+            return k + 1, st, ai.at[k].set(row_i), af.at[k].set(row_f)
+
+        _, state, aux_i, aux_f = jax.lax.while_loop(
+            wa_cond, wa_body, (jnp.int32(0), state, aux_i0, aux_f0)
+        )
+        return state, (aux_i, aux_f)
     if early_exit:
         # process only up to the last populated slot; most events carry
         # zero or one assignment, so this usually runs 0-1 iterations

@@ -9,7 +9,19 @@ from .state import INF_TICK, SimState, Workload
 from .types import PipeStatus, Priority, TICKS_PER_SECOND
 
 
-def summarize(state: SimState, wl: Workload, params: SimParams) -> dict:
+def summarize(
+    state: SimState,
+    wl: Workload,
+    params: SimParams,
+    trace=None,
+) -> dict:
+    """Execution statistics of one finished simulation.
+
+    ``trace`` (a :class:`repro.core.telemetry.TraceEvents`, as produced
+    by ``run(..., trace=True)``) is optional; when given, the summary
+    also reports ``trace_enabled`` and the recorder's overflow counter
+    ``events_dropped``.
+    """
     status = np.asarray(state.pipe_status)
     arrival = np.asarray(wl.arrival)
     completion = np.asarray(state.pipe_completion)
@@ -24,12 +36,14 @@ def summarize(state: SimState, wl: Workload, params: SimParams) -> dict:
     per_prio = {}
     for p in Priority:
         sel = done & (prio == int(p))
+        sel_lat_s = (completion - arrival)[sel] / TICKS_PER_SECOND
         per_prio[p.name.lower()] = {
             "done": int(np.sum(sel)),
             "submitted": int(np.sum((arrival < INF_TICK) & (prio == int(p)))),
-            "mean_latency_s": float(
-                np.mean((completion - arrival)[sel] / TICKS_PER_SECOND)
-            )
+            "mean_latency_s": float(np.mean(sel_lat_s))
+            if np.any(sel)
+            else float("nan"),
+            "p99_latency_s": float(np.percentile(sel_lat_s, 99))
             if np.any(sel)
             else float("nan"),
         }
@@ -40,7 +54,7 @@ def summarize(state: SimState, wl: Workload, params: SimParams) -> dict:
     util_cpu = float(np.sum(np.asarray(state.util_cpu_s)))
     util_ram = float(np.sum(np.asarray(state.util_ram_s)))
 
-    return {
+    out = {
         "submitted": submitted,
         "done": int(np.sum(done)),
         "failed": int(np.sum(failed)),
@@ -74,6 +88,10 @@ def summarize(state: SimState, wl: Workload, params: SimParams) -> dict:
         "cold_start_ticks": int(state.cold_start_tick_total),
         "cold_start_s": float(state.cold_start_tick_total) / TICKS_PER_SECOND,
     }
+    if trace is not None:
+        out["trace_enabled"] = True
+        out["events_dropped"] = int(trace.events_dropped)
+    return out
 
 
 def _cache_hit_rate(state: SimState) -> float:

@@ -153,6 +153,22 @@ def naive_scheduler(
     return sched_state, dec
 
 
+def decision_provenance(sim: SimState, wl: Workload, dec: SchedDecision):
+    """``(chosen, runner_up)`` pipeline ids behind a decision's first
+    assignment slot — the runner-up is the pipeline the head-of-queue
+    rule (priority desc, arrival asc) would have picked had the chosen
+    one not been waiting. Both are -1 when not applicable. Used by the
+    telemetry recorder for SCHED_DECISION provenance records; reads
+    only, never part of the simulation step."""
+    chosen = dec.assign_pipe[0]
+    waiting = sim.pipe_status == int(PipeStatus.WAITING)
+    others = waiting & (
+        jnp.arange(wl.max_pipelines, dtype=jnp.int32) != chosen
+    )
+    runner = masked_lex_argmin(others, (-wl.prio, sim.pipe_entered))
+    return chosen, jnp.where(chosen >= 0, runner, -1)
+
+
 # ---------------------------------------------------------------------------
 # PRIORITY / PRIORITY-POOL (paper §4.1.2) and the data-plane variants
 # (cache_aware / locality_pool, registered from extra_schedulers.py).

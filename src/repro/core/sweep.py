@@ -96,7 +96,9 @@ def pad_lanes(wls: Workload, n_lanes: int) -> Workload:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("params", "scheduler_key", "impl", "n_shards"),
+    static_argnames=(
+        "params", "scheduler_key", "impl", "n_shards", "trace_capacity"
+    ),
     donate_argnames=("workloads",),
 )
 def _fleet_sharded(
@@ -105,19 +107,29 @@ def _fleet_sharded(
     scheduler_key: str,
     impl: str,
     n_shards: int,
+    trace_capacity: int = 0,
 ):
     """shard_map the lane-major core over the fleet axis of a 1-D local
     device mesh. Each shard is an independent run of the same engine on
     F/n_shards lanes; per-lane results are bitwise those of the
     unsharded call (tests/test_fleet.py asserts it lane-for-lane).
-    ``workloads`` is donated, as in ``engine._fleet_compiled``."""
+    ``workloads`` is donated, as in ``engine._fleet_compiled``. With a
+    positive (static) ``trace_capacity``, each shard also records its
+    lanes' trace buffers and the return is ``(states, tbufs)``, both
+    fleet-sharded."""
     mesh = jax.sharding.Mesh(
         np.asarray(jax.local_devices()[:n_shards]), ("fleet",)
     )
     spec = jax.sharding.PartitionSpec("fleet")
 
     def shard_fn(wls):
-        states, _ = _fleet_compiled(params, wls, scheduler_key, impl)
+        out = _fleet_compiled(
+            params, wls, scheduler_key, impl, trace_capacity=trace_capacity
+        )
+        if trace_capacity:
+            states, _, tbufs = out
+            return states, tbufs
+        states, _ = out
         return states
 
     return shard_map(
@@ -206,6 +218,8 @@ def fleet_run(
     impl: str = "auto",
     bin_lanes: bool = True,
     fleet_engine: str | None = None,
+    trace: bool = False,
+    trace_capacity: int | None = None,
 ) -> SimState:
     """Run a fleet of simulations in parallel on the lane-major core.
 
@@ -234,6 +248,14 @@ def fleet_run(
 
     ``fleet_engine`` is deprecated: the fused lane-major engine is the
     only simulation core (the legacy ``"vmap"`` path was deleted).
+
+    ``trace=True`` records an on-device event trace per lane (capacity
+    ``trace_capacity`` records each, default
+    ``telemetry.DEFAULT_TRACE_CAPACITY``) and returns
+    ``(states, traces)`` with ``traces[i]`` the lane-``i``
+    :class:`repro.core.telemetry.TraceEvents`; per-lane states stay
+    bitwise-identical to an untraced run, whatever the sharding or
+    binning (traces ride the same unbinning permutation as the states).
 
     >>> from repro.core import SimParams, fleet_run, fleet_summary
     >>> p = SimParams(duration=0.01, max_pipelines=8, max_containers=8,
@@ -282,28 +304,74 @@ def fleet_run(
                 f"{want}; run with the params returned by "
                 "workload_batch_from_traces / scenario_fleet"
             )
+    capacity = 0
+    if trace:
+        from .telemetry.schema import DEFAULT_TRACE_CAPACITY
+
+        capacity = int(
+            DEFAULT_TRACE_CAPACITY if trace_capacity is None else trace_capacity
+        )
+        if capacity <= 0:
+            raise ValueError(
+                f"trace_capacity must be positive, got {trace_capacity}"
+            )
     wls = workloads if seeds is None else make_workload_batch(params, seeds)
     F = wls.arrival.shape[0]
     n_shards = _resolve_shards(shard, F)
+    tbufs = None
     if n_shards <= 1:
         with _quiet_partial_donation():
-            states, _ = _fleet_compiled(params, wls, scheduler_key, impl)
+            out = _fleet_compiled(
+                params, wls, scheduler_key, impl, trace_capacity=capacity
+            )
+        if capacity:
+            states, _, tbufs = out
+            return states, _decode_traces(tbufs)
+        states, _ = out
         return states
     inv = None
     if bin_lanes:
         wls, inv = bin_lanes_by_density(wls, params)
     F_pad = -(-F // n_shards) * n_shards
     with _quiet_partial_donation():
-        states = _fleet_sharded(
-            params, pad_lanes(wls, F_pad), scheduler_key, impl, n_shards
+        out = _fleet_sharded(
+            params, pad_lanes(wls, F_pad), scheduler_key, impl, n_shards,
+            trace_capacity=capacity,
         )
+    states, tbufs = out if capacity else (out, None)
     if inv is not None:
         # one gather: unpermute AND strip padding (inv addresses only
-        # real lanes; binning put the padding last)
-        states = _unbin_states(states, jnp.asarray(inv))
+        # real lanes; binning put the padding last). Trace buffers join
+        # the states in one pytree so they ride the same permutation.
+        inv = jnp.asarray(inv)
+        if tbufs is not None:
+            states, tbufs = _unbin_states((states, tbufs), inv)
+        else:
+            states = _unbin_states(states, inv)
     elif F_pad != F:
         states = jax.tree.map(lambda x: x[:F], states)
+        if tbufs is not None:
+            tbufs = jax.tree.map(lambda x: x[:F], tbufs)
+    if capacity:
+        return states, _decode_traces(tbufs)
     return states
+
+
+def _decode_traces(tbufs):
+    import numpy as np
+
+    from .telemetry.decode import decode_fleet
+
+    # only ship the populated prefix to the host: slice the device-side
+    # tables to the fleet's max count, rounded up to a power of two so
+    # the slice shapes (and their compiled executables) stay cached
+    counts = np.asarray(tbufs.count)
+    cap = int(tbufs.records.shape[1])
+    hi = int(counts.max(initial=0))
+    keep = min(cap, 1 << max(hi - 1, 0).bit_length()) if hi else 0
+    if keep < cap:
+        tbufs = tbufs._replace(records=tbufs.records[:, :keep])
+    return decode_fleet(tbufs, capacity=cap)
 
 
 def fleet_summary(states: SimState, params: SimParams) -> dict:

@@ -1,0 +1,30 @@
+"""In-engine telemetry: on-device event tracing and host-side export.
+
+The recorder (:mod:`.record`) rides the lane-major engine's
+``while_loop`` carry and appends one int32 row per simulation event
+(:mod:`.schema`). The host side (:mod:`.decode`, :mod:`.export`) turns
+captured buffers into :class:`TraceEvents`, Perfetto/Chrome trace JSON,
+CSV, and windowed timeline metrics. Enable with ``run(p, trace=True)``
+or ``fleet_run(..., trace=True)``; the default-off path is bitwise
+identical to an untraced build. See ``docs/observability.md``.
+"""
+from .decode import Span, TraceEvents, decode_fleet, decode_lane
+from .export import summarize_timeline, to_perfetto_json
+from .record import TraceBuffer, init_trace_buffer, record_step
+from .schema import DEFAULT_TRACE_CAPACITY, KIND_NAMES, RECORD_WIDTH, EventKind
+
+__all__ = [
+    "EventKind",
+    "KIND_NAMES",
+    "RECORD_WIDTH",
+    "DEFAULT_TRACE_CAPACITY",
+    "TraceBuffer",
+    "init_trace_buffer",
+    "record_step",
+    "TraceEvents",
+    "Span",
+    "decode_lane",
+    "decode_fleet",
+    "to_perfetto_json",
+    "summarize_timeline",
+]

@@ -1,0 +1,237 @@
+"""On-device event recorder for the lane-major engine.
+
+One :class:`TraceBuffer` per lane rides the engine's ``while_loop``
+carry: a fixed-capacity record table plus a write cursor and an
+overflow counter. Each engine step appends every event it caused —
+arrivals, retirements, preemptions, rejections, the scheduler's
+chosen-vs-runner-up decision, container starts and their data-plane
+cost components.
+
+The append is built for while-loop throughput. Candidate events are
+assembled **column-wise**: one concatenate per varying schema column
+over the candidate axis (every pipeline, container and assignment slot
+— ``step_record_count`` entries), with the tick/gauge columns held as
+step scalars and the kind column a compile-time constant. Compaction
+then never touches full candidate *rows*: a cumulative sum over the
+emit masks scatters each selected candidate's **index** into a small
+``[TRACE_STEP_EVENTS]`` slot vector (scalar scatter, unique indices),
+the block's columns are gathered through that vector, and the
+resulting ``[TRACE_STEP_EVENTS, RECORD_WIDTH]`` block lands with one
+contiguous ``dynamic_update_slice`` at the cursor.
+
+The record table carries ``TRACE_STEP_EVENTS`` rows of tail scratch so
+a full buffer's writes land past ``capacity`` and fall off instead of
+wrapping: earlier records are never overwritten, an overflowing trace
+is a truncated prefix, and ``dropped`` counts what fell off (as well
+as any burst past ``TRACE_STEP_EVENTS`` records in one step — never
+seen in practice; see schema.py). Rows between ``count`` and
+``capacity`` are compaction padding, not events — hosts must decode
+``records[:count]`` only (:mod:`repro.core.telemetry.decode` does).
+
+The recorder only *reads* simulation state; the engine states it is
+handed flow through untouched, which is what keeps trace-on runs
+bitwise-identical to trace-off runs (tests/test_telemetry.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..params import SimParams
+from ..scheduler import SchedDecision, decision_provenance
+from ..state import SimState, Workload
+from ..types import ContainerStatus, PipeStatus
+from .schema import RECORD_WIDTH, TRACE_STEP_EVENTS, EventKind
+
+
+class TraceBuffer(NamedTuple):
+    """Per-lane on-device event table (a pytree leaf group in the
+    engine carry). ``records[:count]`` are valid, time-ordered rows;
+    in the carry the table holds step-block scratch past ``capacity``
+    for the contiguous writer (see module docstring)."""
+
+    records: jax.Array  # [capacity + scratch, RECORD_WIDTH] int32
+    count: jax.Array    # [] int32 rows written (<= capacity)
+    dropped: jax.Array  # [] int32 rows lost to overflow
+
+
+def step_record_count(max_pipelines: int, max_containers: int,
+                      max_assignments: int) -> int:
+    """Candidate records one engine step can emit: arrivals + rejects
+    over pipelines, oom/complete/preempt over containers, one scheduler
+    decision, and start/cold/hit/miss per assignment slot."""
+    return (
+        2 * max_pipelines + 3 * max_containers + 1 + 4 * max_assignments
+    )
+
+
+def step_block_rows(max_pipelines: int, max_containers: int,
+                    max_assignments: int) -> int:
+    """Rows in the per-step write block (the buffer's tail scratch)."""
+    return min(
+        step_record_count(max_pipelines, max_containers, max_assignments),
+        TRACE_STEP_EVENTS,
+    )
+
+
+def init_trace_buffer(capacity: int, scratch: int = 0) -> TraceBuffer:
+    return TraceBuffer(
+        records=jnp.zeros((capacity + scratch, RECORD_WIDTH), jnp.int32),
+        count=jnp.asarray(0, jnp.int32),
+        dropped=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _find_slots(pos: jax.Array, G: int) -> jax.Array:
+    """Block slot ``j`` holds the j-th selected candidate: the first
+    index whose running count ``pos`` (a sorted cumsum) reaches j+1.
+    A branch-free binary search, unrolled at trace time, finds all G
+    of them with log2(n) tiny gathers — no scatter (XLA:CPU scatters
+    are per-element and dominated the recorder) and no inner scan
+    (``jnp.searchsorted``'s loop carries while-loop machinery through
+    every engine step). Slots past the step's selection count land at
+    ``n`` and clamp into the block's padding tail."""
+    n = pos.shape[0]
+    i32 = jnp.int32
+    targets = jnp.arange(1, G + 1, dtype=i32)
+    lo = jnp.zeros((G,), i32)
+    hi = jnp.full((G,), n, i32)
+    for _ in range((n - 1).bit_length()):
+        mid = (lo + hi) // 2
+        go_right = pos[jnp.minimum(mid, n - 1)] < targets
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, mid)
+    return lo
+
+
+def _f32_bits(x) -> jax.Array:
+    """IEEE-754 bits of a float32 value, as int32 (exact round-trip)."""
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(x, jnp.float32), jnp.int32
+    )
+
+
+def record_step(
+    tbuf: TraceBuffer,
+    capacity: int,
+    active: jax.Array,   # [] bool — lane still running (gates all writes)
+    pre: SimState,       # state at step entry (container identities)
+    st1: SimState,       # state after fused phase 1 (queue the scheduler saw)
+    post: SimState,      # state after the full step (gauges)
+    wl: Workload,
+    params: SimParams,
+    tick: jax.Array,
+    ph,                  # fused phase-1 masks (repro.kernels.sim_tick)
+    dec: SchedDecision,
+    aux,                 # (aux_i [K,4], aux_f [K,5]) from apply_decision
+) -> TraceBuffer:
+    """Append one engine step's events to the lane's trace buffer."""
+    (oomed, done, _st, _fc, _fr, fresh, _rel, _nr, _nl) = ph
+    aux_i, aux_f = aux
+    MP = wl.max_pipelines
+    MC = pre.max_containers
+    K = aux_i.shape[0]
+    n = step_record_count(MP, MC, K)
+    G = step_block_rows(MP, MC, K)
+    i32 = jnp.int32
+
+    # step-wide gauges, sampled once on the post-step state and attached
+    # to every record of the step
+    qdepth = jnp.sum(post.pipe_status == int(PipeStatus.WAITING)).astype(i32)
+    free_cpu = _f32_bits(jnp.sum(post.pool_cpu_free))
+    free_ram = _f32_bits(jnp.sum(post.pool_ram_free))
+    cache_gb = _f32_bits(jnp.sum(post.pool_cache_used))
+
+    pipes = jnp.arange(MP, dtype=i32)
+    slots = jnp.arange(MC, dtype=i32)
+    susp = dec.suspend & (st1.ctr_status == int(ContainerStatus.RUNNING))
+    rej = dec.reject & (st1.pipe_status == int(PipeStatus.WAITING))
+    chosen, runner = decision_provenance(st1, wl, dec)
+    chosen_c = jnp.maximum(chosen, 0)
+    runner_c = jnp.maximum(runner, 0)
+    a_pipe, a_pool, a_cold, a_warm = (aux_i[:, j] for j in range(4))
+    a_cpus, a_ram, a_hit, a_miss, a_out = (aux_f[:, j] for j in range(5))
+    started = a_pipe >= 0
+
+    # candidate columns, one concatenate per varying column; group order
+    # (the fixed within-step record order, schema.py) is:
+    #   arrival[MP] oom[MC] complete[MC] preempt[MC] reject[MP]
+    #   sched_decision[1] start[K] cold_start[K] cache_hit[K] cache_miss[K]
+    mask = jnp.concatenate([
+        fresh, oomed, done, susp, rej, (chosen >= 0)[None],
+        started, started & (a_warm == 0), started & (a_hit > 0),
+        started & (a_out > 0) & (a_miss > 0),
+    ]) & active
+    kind_col = jnp.asarray(np.concatenate([
+        np.full(MP, int(EventKind.ARRIVAL)),
+        np.full(MC, int(EventKind.OOM)),
+        np.full(MC, int(EventKind.COMPLETE)),
+        np.full(MC, int(EventKind.PREEMPT)),
+        np.full(MP, int(EventKind.REJECT)),
+        [int(EventKind.SCHED_DECISION)],
+        np.full(K, int(EventKind.START)),
+        np.full(K, int(EventKind.COLD_START)),
+        np.full(K, int(EventKind.CACHE_HIT)),
+        np.full(K, int(EventKind.CACHE_MISS)),
+    ]).astype(np.int32))
+    pipe_col = jnp.concatenate([
+        pipes, pre.ctr_pipe, pre.ctr_pipe, st1.ctr_pipe, pipes,
+        chosen[None], a_pipe, a_pipe, a_pipe, a_pipe,
+    ]).astype(i32)
+    # op is -1 everywhere except the decision record's runner-up priority
+    op_dec = jnp.where(runner >= 0, wl.prio[runner_c], -1).astype(i32)
+    op_col = jnp.full((n,), -1, i32).at[2 * MP + 3 * MC].set(op_dec)
+    neg1_mp = jnp.full((MP,), -1, i32)
+    pool_col = jnp.concatenate([
+        neg1_mp, pre.ctr_pool, pre.ctr_pool, st1.ctr_pool, neg1_mp,
+        dec.assign_pool[:1], a_pool, a_pool, a_pool, a_pool,
+    ]).astype(i32)
+    a_col = jnp.concatenate([
+        wl.prio, slots, slots, slots, wl.prio, runner[None],
+        _f32_bits(a_cpus), a_cold, _f32_bits(a_hit), _f32_bits(a_miss),
+    ]).astype(i32)
+    zeros_k = jnp.zeros((K,), i32)
+    b_col = jnp.concatenate([
+        wl.arrival, pre.ctr_prio, pre.ctr_prio, st1.ctr_prio,
+        jnp.zeros((MP,), i32), wl.prio[chosen_c][None],
+        _f32_bits(a_ram), zeros_k, zeros_k, zeros_k,
+    ]).astype(i32)
+
+    # in-step compaction without touching candidate rows: scatter each
+    # selected candidate's INDEX into its ordered block slot (a scalar
+    # scatter; slots past G drop), gather the block's columns through
+    # it, and land the block with ONE contiguous write at the cursor.
+    # The block's padding tail overwrites only not-yet-valid rows (the
+    # next step's writes start where this one's valid rows end), and a
+    # full buffer's writes land in the tail scratch and fall off.
+    pos = jnp.cumsum(mask.astype(i32))
+    n_step = pos[-1]
+    sel = _find_slots(pos, G)
+
+    def const(v):
+        return jnp.broadcast_to(jnp.asarray(v, i32), (G,))
+
+    block = jnp.stack([
+        const(tick), kind_col[sel], pipe_col[sel], op_col[sel],
+        pool_col[sel], const(qdepth), const(free_cpu), const(free_ram),
+        const(cache_gb), a_col[sel], b_col[sel],
+    ], axis=1)
+    assert block.shape == (G, RECORD_WIDTH)
+    records = jax.lax.dynamic_update_slice(
+        tbuf.records, block, (tbuf.count, jnp.int32(0))
+    )
+    count = jnp.minimum(tbuf.count + jnp.minimum(n_step, G), capacity)
+    return TraceBuffer(
+        records=records,
+        count=count,
+        dropped=tbuf.dropped + (tbuf.count + n_step - count),
+    )
+
+
+__all__ = [
+    "TraceBuffer", "init_trace_buffer", "record_step",
+    "step_record_count", "step_block_rows",
+]

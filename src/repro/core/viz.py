@@ -23,7 +23,11 @@ def utilization_timeline(res: SimResult, *, width: int = 64) -> str:
     caps_r = np.asarray(res.state.pool_ram_cap)
     bucket_s = res.params.duration / B
     lines = []
-    # resample to `width` buckets
+    # resample to `width` buckets; never upsample: with width > B the
+    # linspace edges repeat and a bucket lands in several columns,
+    # over-weighting it in the printed mean (regression in
+    # tests/test_viz.py)
+    width = min(width, B)
     ix = np.linspace(0, B, width + 1).astype(int)
     for pool in range(NP):
         for ri, (name, cap) in enumerate(
@@ -37,6 +41,56 @@ def utilization_timeline(res: SimResult, *, width: int = 64) -> str:
             bars = "".join(BLOCKS[int(f * (len(BLOCKS) - 1))] for f in frac)
             lines.append(f"pool{pool} {name} |{bars}| "
                          f"mean {np.mean(frac) * 100:5.1f}%")
+    return "\n".join(lines)
+
+
+_GANTT_END = {"complete": "C", "preempt": "P", "oom": "O", "open": ">"}
+
+
+def pipeline_gantt(res: SimResult, *, width: int = 64) -> str:
+    """Trace-driven text Gantt: one row per pipeline, its container
+    executions drawn on a shared time axis.
+
+    Needs a telemetry trace (``run(..., trace=True)``); each span is a
+    run of ``=`` from its START to its end event, terminated by ``C``
+    (complete), ``P`` (preempt), ``O`` (oom) or ``>`` (still running at
+    the end of the trace). Priorities are taken from the spans' end
+    records.
+    """
+    trace = getattr(res, "trace", None)
+    if trace is None:
+        return "(no trace: run with trace=True to record spans)"
+    spans = trace.spans()
+    if not spans:
+        return "(trace holds no container executions)"
+    horizon = max(int(res.params.horizon_ticks), 1)
+
+    def col(tick: int) -> int:
+        return min(int(tick * width / horizon), width - 1)
+
+    by_pipe: dict[int, list] = {}
+    for s in spans:
+        by_pipe.setdefault(s.pipe, []).append(s)
+    prio_names = {int(p): p.name for p in Priority}
+    lines = [
+        f"{'pipeline':>8s} {'prio':11s} |{'time -> ' + ' ' * (width - 8)}| spans"
+    ]
+    for pipe in sorted(by_pipe):
+        row = [" "] * width
+        prio = -1
+        for s in by_pipe[pipe]:
+            lo, hi = col(s.start_tick), col(max(s.end_tick, s.start_tick))
+            for c in range(lo, hi):
+                row[c] = "="
+            row[hi] = _GANTT_END.get(s.end_kind, "?")
+            if s.priority >= 0:
+                prio = s.priority
+        lines.append(
+            f"{pipe:8d} {prio_names.get(prio, '?'):11s} |{''.join(row)}| "
+            f"{len(by_pipe[pipe])}"
+        )
+    if trace.events_dropped:
+        lines.append(f"(trace overflow: {trace.events_dropped} events dropped)")
     return "\n".join(lines)
 
 
@@ -86,6 +140,7 @@ def timeline_csv(res: SimResult) -> str:
 
 __all__ = [
     "utilization_timeline",
+    "pipeline_gantt",
     "latency_histogram",
     "per_priority_table",
     "timeline_csv",

@@ -22,7 +22,8 @@ def test_markdown_links_resolve():
 def test_docs_directory_complete():
     """The documented docs map: every page README links into exists."""
     for page in ("architecture.md", "trace-format.md",
-                 "scheduler-authoring.md", "scenarios.md"):
+                 "scheduler-authoring.md", "scenarios.md",
+                 "observability.md"):
         assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
 
 
@@ -55,3 +56,12 @@ def test_sweep_doctests():
     from repro.core import sweep
 
     _run_doctests(sweep)
+
+
+def test_telemetry_doctests():
+    """The trace decode/export examples in docs/observability.md's
+    backing modules stay runnable."""
+    from repro.core.telemetry import decode, export
+
+    _run_doctests(decode)
+    _run_doctests(export)

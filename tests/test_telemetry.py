@@ -1,0 +1,256 @@
+"""Telemetry guarantees: tracing never changes the simulation.
+
+Three properties the observability layer stands on:
+
+* **Off is free**: with ``trace`` off (the default), every engine entry
+  point produces final states SHA-256-identical to the pre-telemetry
+  capture (``tests/captures/trace_off_digests.json``, recorded by
+  ``tools/record_telemetry_capture.py`` before the recorder existed).
+* **On is invisible**: with ``trace=True`` the *simulated* states hash
+  to the same digests — the recorder only reads.
+* **Overflow is truncation**: a full buffer drops new records, counts
+  them in ``events_dropped``, and never corrupts what it already holds.
+
+Plus the exporter round-trip: per-kind event counts survive the
+Perfetto JSON and reconcile with ``summarize()``.
+"""
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import SimParams, fleet_run, run, to_perfetto_json
+from repro.core.telemetry import EventKind
+
+CAPTURE = pathlib.Path(__file__).parent / "captures" / "trace_off_digests.json"
+
+ALL_SCHEDULERS = [
+    "naive", "priority", "priority_pool", "sjf", "cache_aware",
+    "locality_pool",
+]
+DATA_PLANE = dict(
+    cache_gb_per_pool=4.0,
+    scan_ticks_per_gb=50.0,
+    cold_start_ticks=40,
+    container_warm_ticks=2_000,
+)
+FLEET_SEEDS = [0, 1, 2, 3, 4, 5]
+
+
+def _params(algo, dp, **extra):
+    # mirrors tools/record_telemetry_capture.py:capture_params exactly —
+    # the digests are only meaningful on the same simulation
+    kw = dict(DATA_PLANE) if dp else {}
+    kw.update(extra)
+    return SimParams(
+        duration=0.03,
+        scheduling_algo=algo,
+        num_pools=1 if algo == "naive" else 2,
+        waiting_ticks_mean=300.0,
+        op_base_seconds_mean=0.005,
+        op_base_seconds_sigma=1.0,
+        max_pipelines=32,
+        max_containers=32,
+        **kw,
+    )
+
+
+def _digest(state) -> str:
+    h = hashlib.sha256()
+    for f in state._fields:
+        a = np.ascontiguousarray(np.asarray(getattr(state, f)))
+        h.update(f.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _capture():
+    import platform
+
+    import jax
+
+    if not CAPTURE.exists():
+        pytest.skip("no trace-off capture recorded on this machine")
+    payload = json.loads(CAPTURE.read_text())
+    same_machine = (
+        payload["backend"] == jax.default_backend()
+        and payload["machine"] == platform.machine()
+        and payload["n_devices"] == jax.local_device_count()
+    )
+    if not same_machine:
+        pytest.skip(
+            "capture was recorded on a different backend/machine "
+            f"({payload['backend']}/{payload['machine']}); digests are "
+            "only comparable on the recording machine class"
+        )
+    return payload["digests"]
+
+
+def _run_config(algo, dp, path, trace):
+    params = _params(algo, dp).replace(seed=7)
+    kw = dict(trace=True, trace_capacity=2048) if trace else {}
+    if path == "run":
+        return run(params, **kw).state
+    shard, bins = {
+        "fleet": (None, True),
+        "shard": ("auto", True),
+        "shard_nobin": ("auto", False),
+    }[path]
+    out = fleet_run(params, FLEET_SEEDS, shard=shard, bin_lanes=bins, **kw)
+    return out[0] if trace else out
+
+
+@pytest.mark.parametrize("dp", [False, True], ids=["plain", "dataplane"])
+@pytest.mark.parametrize("algo", ALL_SCHEDULERS)
+@pytest.mark.parametrize(
+    "path", ["run", "fleet", "shard", "shard_nobin"]
+)
+def test_states_match_pretelemetry_capture(algo, dp, path):
+    """Trace OFF and trace ON both reproduce the pre-telemetry digests:
+    the off path compiles to the same program as before this subsystem
+    existed, and the on path's recorder is read-only."""
+    digests = _capture()
+    want = digests[f"{algo}/dp={int(dp)}/{path}"]
+    assert _digest(_run_config(algo, dp, path, trace=False)) == want, (
+        f"{algo}/dp={dp}/{path}: trace-off state diverged from the "
+        "pre-telemetry capture"
+    )
+    assert _digest(_run_config(algo, dp, path, trace=True)) == want, (
+        f"{algo}/dp={dp}/{path}: enabling the trace changed the simulation"
+    )
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer overflow
+# ---------------------------------------------------------------------------
+def _overflow_params():
+    return _params("priority_pool", dp=True).replace(seed=11)
+
+
+def test_overflow_truncates_never_corrupts():
+    full = run(_overflow_params(), trace=True, trace_capacity=8192).trace
+    assert full.events_dropped == 0, "reference trace must not overflow"
+    assert full.n > 16, "config too quiet to exercise overflow"
+
+    cap = 16
+    small = run(_overflow_params(), trace=True, trace_capacity=cap).trace
+    assert small.n == cap
+    assert small.capacity == cap
+    assert small.events_dropped == full.n - cap
+    # earlier records are untouched: the truncated trace is exactly the
+    # prefix of the full one
+    np.testing.assert_array_equal(small.records, full.records[:cap])
+
+
+def test_overflow_reported_in_summary():
+    params = _overflow_params()
+    res = run(params, trace=True, trace_capacity=16)
+    s = res.summary()
+    assert s["trace_enabled"] is True
+    assert s["events_dropped"] == res.trace.events_dropped > 0
+    # trace off -> no telemetry keys at all
+    assert "trace_enabled" not in run(params).summary()
+
+
+def test_records_are_time_ordered():
+    trace = run(_overflow_params(), trace=True, trace_capacity=8192).trace
+    assert (np.diff(trace.tick) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export round-trip
+# ---------------------------------------------------------------------------
+def test_perfetto_json_reconciles_with_summarize():
+    res = run(_overflow_params(), trace=True, trace_capacity=8192)
+    assert res.trace.events_dropped == 0
+    s = res.summary()
+
+    doc = json.loads(to_perfetto_json(res.trace, res.params))
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    by_cat: dict[str, int] = {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") in ("X", "i"):
+            by_cat[ev.get("cat")] = by_cat.get(ev.get("cat"), 0) + 1
+
+    # every countable kind survives the JSON and matches the simulation's
+    # own counters
+    assert by_cat.get("complete", 0) == s["done"]
+    assert by_cat.get("preempt", 0) == s["preempt_events"]
+    assert by_cat.get("cold_start", 0) == s["cold_starts"]
+    assert by_cat.get("cache_hit", 0) == s["cache_hits"]
+    assert by_cat.get("oom", 0) == s["oom_events"]
+    # ...and agree with the decoded trace itself
+    counts = res.trace.counts_by_kind()
+    for kind in ("complete", "preempt", "cold_start", "cache_hit", "oom"):
+        assert by_cat.get(kind, 0) == counts[kind]
+
+
+def test_trace_counts_match_state_counters_across_schedulers():
+    for algo in ("naive", "sjf", "cache_aware"):
+        params = _params(algo, dp=True).replace(seed=3)
+        res = run(params, trace=True, trace_capacity=8192)
+        assert res.trace.events_dropped == 0
+        s = res.summary()
+        counts = res.trace.counts_by_kind()
+        ctx = f"algo={algo}"
+        assert counts["complete"] == s["done"], ctx
+        assert counts["preempt"] == s["preempt_events"], ctx
+        assert counts["oom"] == s["oom_events"], ctx
+        assert counts["cold_start"] == s["cold_starts"], ctx
+        assert counts["cache_hit"] == s["cache_hits"], ctx
+        assert counts["reject"] == s["failed"], ctx
+
+
+# ---------------------------------------------------------------------------
+# decoded structure
+# ---------------------------------------------------------------------------
+def test_spans_and_series_wellformed():
+    res = run(_overflow_params(), trace=True, trace_capacity=8192)
+    trace = res.trace
+    spans = trace.spans()
+    assert spans, "expected at least one execution span"
+    n_starts = trace.counts_by_kind()["start"]
+    assert len(spans) == n_starts
+    horizon = res.params.horizon_ticks
+    for sp in spans:
+        assert 0 <= sp.start_tick <= sp.end_tick <= horizon
+        assert sp.end_kind in ("complete", "preempt", "oom", "open")
+        assert sp.cpus > 0 and sp.ram_gb > 0
+
+    ticks, qdepth, free_cpu, free_ram, cache_gb = trace.series()
+    assert (qdepth >= 0).all()
+    assert (free_cpu >= 0).all() and (free_ram >= 0).all()
+    assert (cache_gb >= -1e-6).all()
+
+    csv = trace.to_csv()
+    lines = csv.splitlines()
+    assert lines[0].startswith("tick,kind,")
+    assert len(lines) == trace.n + 1
+
+
+def test_sched_decision_provenance_recorded():
+    trace = run(_overflow_params(), trace=True, trace_capacity=8192).trace
+    decisions = trace.of_kind(EventKind.SCHED_DECISION)
+    assert len(decisions) > 0
+    from repro.core.telemetry.schema import COL_A, COL_PIPE
+
+    chosen = decisions[:, COL_PIPE]
+    runner = decisions[:, COL_A]
+    assert (chosen >= 0).all()  # a decision record implies an assignment
+    # the runner-up, when present, is never the chosen pipeline
+    has_runner = runner >= 0
+    assert (runner[has_runner] != chosen[has_runner]).all()
+
+
+def test_python_engine_rejects_trace():
+    with pytest.raises(ValueError, match="Python reference engine"):
+        run(_params("priority", dp=False), engine="python", trace=True)
+
+
+def test_bad_capacity_rejected():
+    with pytest.raises(ValueError, match="positive"):
+        run(_params("priority", dp=False), trace=True, trace_capacity=0)

@@ -1,0 +1,119 @@
+"""Visualisation: resampling correctness and the trace-driven Gantt."""
+import pytest
+
+from repro.core import SimParams, run
+from repro.core.viz import (
+    latency_histogram,
+    pipeline_gantt,
+    timeline_csv,
+    utilization_timeline,
+)
+
+
+def _params(**extra):
+    kw = dict(
+        duration=0.03,
+        scheduling_algo="priority_pool",
+        num_pools=2,
+        waiting_ticks_mean=300.0,
+        op_base_seconds_mean=0.005,
+        op_base_seconds_sigma=1.0,
+        max_pipelines=32,
+        max_containers=32,
+        cache_gb_per_pool=4.0,
+        scan_ticks_per_gb=50.0,
+        cold_start_ticks=40,
+        container_warm_ticks=2_000,
+    )
+    kw.update(extra)
+    return SimParams(**kw)
+
+
+def _bars(text):
+    return [line.split("|")[1] for line in text.splitlines()]
+
+
+def test_utilization_timeline_clamps_width_to_buckets():
+    """Regression: asking for more columns than util_log buckets used to
+    repeat linspace edges, rendering the same bucket in several columns
+    (and over-weighting it in the printed mean). The width now clamps to
+    the bucket count, so every column is a distinct bucket."""
+    res = run(_params(util_log_buckets=8))
+    wide = utilization_timeline(res, width=64)
+    for bar in _bars(wide):
+        assert len(bar) == 8  # clamped to B, not 64
+    # clamped output is exactly the width=B rendering
+    assert wide == utilization_timeline(res, width=8)
+
+
+def test_utilization_timeline_means_unaffected_by_width():
+    """The printed mean is the mean over distinct buckets; any width
+    must report the same value it does at width=B (double-counted
+    buckets used to skew it)."""
+    res = run(_params(util_log_buckets=8))
+
+    def means(text):
+        return [line.rsplit("mean", 1)[1] for line in text.splitlines()]
+
+    ref = means(utilization_timeline(res, width=8))
+    for width in (9, 64, 1000):
+        assert means(utilization_timeline(res, width=width)) == ref
+
+
+def test_utilization_timeline_downsamples():
+    res = run(_params(util_log_buckets=64))
+    for bar in _bars(utilization_timeline(res, width=16)):
+        assert len(bar) == 16
+
+
+def test_timeline_csv_one_row_per_bucket_pool():
+    res = run(_params(util_log_buckets=8))
+    lines = timeline_csv(res).splitlines()
+    assert lines[0] == "t_s,pool,cpu_util,ram_util"
+    assert len(lines) == 1 + 8 * res.params.num_pools
+
+
+def test_pipeline_gantt_needs_trace():
+    res = run(_params())
+    assert "trace=True" in pipeline_gantt(res)
+
+
+def test_pipeline_gantt_renders_spans():
+    res = run(_params(), trace=True)
+    text = pipeline_gantt(res, width=40)
+    lines = text.splitlines()
+    spans = res.trace.spans()
+    assert spans
+    # one row per pipeline that ever ran, plus the header
+    assert len(lines) == 1 + len({s.pipe for s in spans})
+    for line in lines[1:]:
+        bar = line.split("|")[1]
+        assert len(bar) == 40
+        assert set(bar) <= set(" =CPO>?")
+        assert any(ch in "CPO>" for ch in bar)  # every span has an end mark
+
+
+def test_latency_histogram_smoke():
+    res = run(_params())
+    assert "|" in latency_histogram(res)
+
+
+@pytest.mark.parametrize("width", [1, 3, 7])
+def test_gantt_tiny_widths(width):
+    res = run(_params(), trace=True)
+    for line in pipeline_gantt(res, width=width).splitlines()[1:]:
+        assert len(line.split("|")[1]) == width
+
+
+def test_gantt_reports_overflow():
+    res = run(_params(), trace=True, trace_capacity=16)
+    assert res.trace.events_dropped > 0
+    assert "dropped" in pipeline_gantt(res)
+
+
+def test_util_timeline_fleet_lane_smoke():
+    # sanity: default-bucket rendering still works end to end
+    res = run(_params())
+    text = utilization_timeline(res)
+    assert text.count("\n") + 1 == 2 * res.params.num_pools
+    assert "mean" in text

@@ -1,0 +1,110 @@
+"""Record the trace-off engine capture used by tests/test_telemetry.py.
+
+Runs every scheduler x data-plane x engine-path combination with
+telemetry disabled (the default) and stores a per-config SHA-256 digest
+of the final SimState bytes in ``tests/captures/trace_off_digests.json``.
+The telemetry suite recomputes the digests on the same grid and asserts
+bitwise identity, proving the trace machinery's off path never perturbs
+the simulation.
+
+Digests are only comparable on the machine class that recorded them
+(same backend, same arch): the capture file records both and the test
+skips on mismatch rather than chasing cross-platform ULPs.
+
+    PYTHONPATH=src python tools/record_telemetry_capture.py
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import pathlib
+import platform
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+CAPTURE = REPO / "tests" / "captures" / "trace_off_digests.json"
+
+ALL_SCHEDULERS = [
+    "naive", "priority", "priority_pool", "sjf", "cache_aware",
+    "locality_pool",
+]
+DATA_PLANE = dict(
+    cache_gb_per_pool=4.0,
+    scan_ticks_per_gb=50.0,
+    cold_start_ticks=40,
+    container_warm_ticks=2_000,
+)
+FLEET_SEEDS = [0, 1, 2, 3, 4, 5]  # 6 lanes on 4 devices -> padding too
+
+
+def capture_params(algo: str, dp: bool):
+    from repro.core import SimParams
+
+    kw = dict(DATA_PLANE) if dp else {}
+    return SimParams(
+        duration=0.03,
+        scheduling_algo=algo,
+        num_pools=1 if algo == "naive" else 2,
+        waiting_ticks_mean=300.0,
+        op_base_seconds_mean=0.005,
+        op_base_seconds_sigma=1.0,
+        max_pipelines=32,
+        max_containers=32,
+        **kw,
+    )
+
+
+def state_digest(state) -> str:
+    import numpy as np
+
+    h = hashlib.sha256()
+    for f in state._fields:
+        a = np.ascontiguousarray(np.asarray(getattr(state, f)))
+        h.update(f.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def run_grid() -> dict[str, str]:
+    from repro.core import fleet_run, run
+
+    digests: dict[str, str] = {}
+    for algo in ALL_SCHEDULERS:
+        for dp in (False, True):
+            params = capture_params(algo, dp).replace(seed=7)
+            tag = f"{algo}/dp={int(dp)}"
+            digests[f"{tag}/run"] = state_digest(run(params).state)
+            digests[f"{tag}/fleet"] = state_digest(
+                fleet_run(params, FLEET_SEEDS, shard=None)
+            )
+            digests[f"{tag}/shard"] = state_digest(
+                fleet_run(params, FLEET_SEEDS, shard="auto", bin_lanes=True)
+            )
+            digests[f"{tag}/shard_nobin"] = state_digest(
+                fleet_run(params, FLEET_SEEDS, shard="auto", bin_lanes=False)
+            )
+            print(f"captured {tag}", flush=True)
+    return digests
+
+
+def main() -> None:
+    import jax
+
+    payload = {
+        "backend": jax.default_backend(),
+        "machine": platform.machine(),
+        "n_devices": jax.local_device_count(),
+        "fleet_seeds": FLEET_SEEDS,
+        "digests": run_grid(),
+    }
+    CAPTURE.parent.mkdir(parents=True, exist_ok=True)
+    CAPTURE.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {CAPTURE} ({len(payload['digests'])} configs)")
+
+
+if __name__ == "__main__":
+    main()
