@@ -219,6 +219,69 @@ def trace_overhead_bench(smoke: bool = False, reps: int = 7) -> list[dict]:
     ]
 
 
+def faults_overhead_bench(smoke: bool = False, reps: int = 7) -> list[dict]:
+    """Chaos-layer cost on the fused fleet path (docs/faults.md): the
+    ``fused`` bench re-measured with crash/outage/timeout injection and
+    a retry budget on, against a faults-off run timed in the same call
+    — ``faults_overhead_pct`` is a same-run ratio like the trace and CI
+    smoke gates, so machine speed normalises out. The faults-ON run
+    pays fault-trace generation inside the clock (it rides workload
+    construction, which every fleet row pays). Feeds the
+    ``fused_faults`` row of BENCH_fleet.json. Min-of-7 for the same
+    reason as ``trace_overhead_bench``: a ratio of two short walls
+    needs more reps than an absolute row."""
+    fleet_size = 32 if smoke else 64
+    params_off = _fleet_params(smoke)
+    # moderate churn (~5 crashes + ~2 outages per lane-horizon): enough
+    # to keep every chaos path hot without the extra *simulated* events
+    # dwarfing the layer's fixed per-event cost in the ratio
+    params_on = params_off.replace(
+        crash_mtbf_ticks=20_000.0,
+        outage_mtbf_ticks=50_000.0,
+        outage_duration_ticks=2_000.0,
+        straggler_prob=0.05,
+        timeout_ticks=200_000,
+        max_retries=3,
+        base_backoff_ticks=100,
+    )
+    seeds = list(range(fleet_size))
+    horizon = params_off.horizon_ticks
+
+    def fused_off():
+        return jax.block_until_ready(
+            fleet_run(params_off, seeds, shard=None).done_count
+        )
+
+    def fused_on():
+        return jax.block_until_ready(
+            fleet_run(params_on, seeds, shard=None).done_count
+        )
+
+    t_off_min, _ = _time(fused_off, reps=reps)
+    t_on_min, t_on_mean = _time(fused_on, reps=reps)
+    states = fleet_run(params_on, seeds, shard=None)
+    overhead_pct = round((t_on_min / t_off_min - 1.0) * 100, 1)
+    return [
+        {
+            "engine": f"fleet fused+faults x{fleet_size}",
+            "fleet_engine": "fused_faults",
+            "fleet_size": fleet_size,
+            "devices": 1,
+            "wall_s": round(t_on_mean, 4),
+            "wall_s_min": round(t_on_min, 4),
+            "ticks_per_s": round(fleet_size * horizon / t_on_min),
+            "sim_s_per_wall_s": round(
+                fleet_size * params_on.duration / t_on_min, 2
+            ),
+            "fault_kills": int(jnp.sum(states.fault_kills)),
+            "retries": int(jnp.sum(states.retry_events)),
+            "timeouts": int(jnp.sum(states.timeout_events)),
+            "unfaulted_wall_s_min": round(t_off_min, 4),
+            "faults_overhead_pct": overhead_pct,
+        }
+    ]
+
+
 def scenario_fleet_bench(smoke: bool = False) -> list[dict]:
     """Scenario-family throughput rows (fused vs sharded) for
     BENCH_fleet.json: each family of the scenario library is drawn as a
@@ -492,6 +555,7 @@ def main(print_rows: bool = True, smoke: bool = False) -> list[dict]:
 
     rows.extend(fleet_bench(smoke=smoke))
     rows.extend(trace_overhead_bench(smoke=smoke))
+    rows.extend(faults_overhead_bench(smoke=smoke))
     if not smoke:
         # scheduler-selection microbench -> the `selection` row of
         # BENCH_fleet.json (three-pass helpers vs fused kernel)

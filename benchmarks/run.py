@@ -82,6 +82,11 @@ def write_fleet_json(
         # trace_overhead_bench): tracked across PRs with a <10% bar
         # (EXPERIMENTS.md §Telemetry)
         payload["trace_overhead_pct"] = traced.get("trace_overhead_pct")
+    faulted = by_engine.get("fused_faults")
+    if faulted is not None:
+        # chaos-layer cost on the fused path (engine_throughput.
+        # faults_overhead_bench, EXPERIMENTS.md §Scheduler-Resilience)
+        payload["faults_overhead_pct"] = faulted.get("faults_overhead_pct")
     if phase_breakdown is not None:
         payload["phase_breakdown"] = phase_breakdown
     if scenario_rows is not None:
@@ -175,6 +180,58 @@ def _maybe_profile(trace_dir: str | None):
     return jax.profiler.trace(trace_dir)
 
 
+def _chaos_smoke() -> None:
+    """CI chaos smoke (docs/faults.md): the spot_churn scenario under
+    two schedulers must finish with ZERO user-visible failures when the
+    retry budget is on, and with nonzero FAILED pipelines when
+    ``max_retries=0`` — both sides of the retry contract, asserted on
+    the real fused engine every CI run."""
+    import numpy as np
+
+    from repro.core import SimParams, fleet_run
+    from repro.core.scenarios import scenario_fleet, spot_churn_params
+
+    base = SimParams(
+        duration=0.05,
+        max_pipelines=0,
+        max_ops_per_pipeline=0,
+        max_containers=32,
+        waiting_ticks_mean=400.0,
+        op_base_seconds_mean=0.004,
+        num_pools=2,
+    )
+    for algo in ("priority", "priority_pool"):
+        wls, params = scenario_fleet(
+            "spot_churn", base.replace(scheduling_algo=algo), 4
+        )
+        chaos = spot_churn_params(params)
+        lenient = fleet_run(chaos, workloads=wls)
+        kills = int(np.asarray(lenient.fault_kills).sum())
+        failed = int(np.asarray(lenient.failed_count).sum())
+        retries = int(np.asarray(lenient.retry_events).sum())
+        assert kills > 0, f"{algo}: chaos smoke injected no kills"
+        assert failed == 0, (
+            f"{algo}: {failed} pipelines FAILED despite a retry budget"
+        )
+        assert retries > 0, f"{algo}: kills absorbed without any retries"
+
+        wls, params = scenario_fleet(
+            "spot_churn", base.replace(scheduling_algo=algo), 4
+        )
+        strict = fleet_run(
+            spot_churn_params(params, max_retries=0), workloads=wls
+        )
+        failed0 = int(np.asarray(strict.failed_count).sum())
+        assert failed0 > 0, (
+            f"{algo}: max_retries=0 chaos run failed no pipelines"
+        )
+        print(
+            f"chaos smoke {algo}: kills={kills} retries={retries} "
+            f"failed(budget)=0 failed(no-budget)={failed0}"
+        )
+    print("chaos smoke OK")
+
+
 def _write_smoke_perfetto() -> None:
     """A small real Perfetto trace for the CI artifact: one traced
     single-sim run, exported with ``telemetry.to_perfetto_json``."""
@@ -253,10 +310,12 @@ def main() -> None:
         with _maybe_profile(args.profile):
             rows = engine_throughput.fleet_bench(smoke=True)
             rows += engine_throughput.trace_overhead_bench(smoke=True)
+            rows += engine_throughput.faults_overhead_bench(smoke=True)
         for r in rows:
             print(r)
         loaded = write_fleet_json(rows, smoke=True)
         _write_smoke_perfetto()
+        _chaos_smoke()
         if not args.no_regression_gate:
             ok = check_smoke_regression(loaded, baseline)
             attempts = 1
@@ -322,6 +381,18 @@ def main() -> None:
                 r["wall_s"] * 1e6,
                 f"thr={r['throughput_per_s']}/s_lat={r['mean_latency_s']}s"
                 f"_pre={r['preempt_events']}_hit={r['cache_hit_rate']}",
+            )
+
+        print("== resilience_comparison (chaos layer, docs/faults.md) ==")
+        rows = scheduler_comparison.resilience_comparison(print_rows=False)
+        for r in rows:
+            _csv(
+                f"resilience_{r['scheduler']}",
+                r["wall_s"] * 1e6,
+                f"goodput={r['goodput_per_s']}/s"
+                f"_degr={r['goodput_degradation_pct']}%"
+                f"_retries={r['retries']}_failed={r['failed']}"
+                f"_wasted={r['wasted_work_s']}s",
             )
 
     print("== interleaving (paper §2.2 / Table 1) ==")

@@ -8,10 +8,16 @@ and watch cache-aware placement convert re-runs into cache hits.
 
 ``scenario_comparison`` widens the policy table beyond the paper's
 single open-loop arrival process: every scenario family of the library
-(docs/scenarios.md — diurnal, bursty, heavy-tail, priority-skew) is
-drawn once as an 8-lane trace batch and replayed under each policy
-with ``fleet_run(workloads=...)``, so the cells compare policies on
-the *same* recorded arrival tapes."""
+(docs/scenarios.md — diurnal, bursty, heavy-tail, priority-skew,
+spot-churn) is drawn once as an 8-lane trace batch and replayed under
+each policy with ``fleet_run(workloads=...)``, so the cells compare
+policies on the *same* recorded arrival tapes.
+
+``resilience_comparison`` is the chaos table (docs/faults.md): the
+spot_churn scenario replayed per policy with fault injection OFF and
+ON, reporting goodput degradation, retries, wasted work and SLO
+attainment under churn — the measured numbers behind EXPERIMENTS.md
+§Scheduler-Resilience."""
 from __future__ import annotations
 
 import time
@@ -180,7 +186,76 @@ def scenario_comparison(print_rows: bool = True) -> list[dict]:
     return rows
 
 
+RESILIENCE_ALGOS = ("naive", "priority", "priority_pool", "sjf")
+
+
+def resilience_comparison(print_rows: bool = True) -> list[dict]:
+    """Policy × chaos table on shared spot_churn trace batches.
+
+    Each policy replays the SAME 8-lane spot_churn tapes twice — fault
+    injection off, then on via ``spot_churn_params`` (crash + outage
+    MTBFs, retry budget, per-priority SLO targets) — so the goodput
+    delta in a row is attributable to how the policy behaves under
+    churn, not to workload variance. ``goodput_degradation_pct`` is the
+    faults-on goodput drop vs the same policy's faults-off run.
+    """
+    from repro.core.scenarios import spot_churn_params
+
+    rows = []
+    base = SimParams(
+        duration=1.0,
+        waiting_ticks_mean=2500,
+        op_base_seconds_mean=0.03,
+        op_ram_gb_mean=2.0,
+        max_pipelines=0,
+        max_ops_per_pipeline=0,
+        max_containers=64,
+        seed=11,
+        slo_latency_s=(30.0, 10.0, 5.0),
+    )
+    n_lanes = 8
+    lanes = scenario_lane_batch("spot_churn", base, n_lanes, seed=11)
+    for algo in RESILIENCE_ALGOS:
+        params = base.replace(
+            scheduling_algo=algo,
+            num_pools=1 if algo in ("naive", "sjf") else 2,
+        )
+        wls, params = workload_batch_from_traces(lanes, params)
+        calm = fleet_summary(
+            jax.block_until_ready(fleet_run(params, workloads=wls)), params
+        )
+        chaos = spot_churn_params(params)
+        wls, _ = workload_batch_from_traces(lanes, params)
+        t0 = time.time()
+        states = jax.block_until_ready(fleet_run(chaos, workloads=wls))
+        wall = time.time() - t0
+        s = fleet_summary(states, chaos)
+        calm_thr = max(calm["throughput_per_s_mean"], 1e-9)
+        row = {
+            "scenario": "spot_churn",
+            "scheduler": algo,
+            "lanes": n_lanes,
+            "goodput_per_s": round(s["throughput_per_s_mean"], 2),
+            "goodput_calm_per_s": round(calm["throughput_per_s_mean"], 2),
+            "goodput_degradation_pct": round(
+                (1.0 - s["throughput_per_s_mean"] / calm_thr) * 100, 1
+            ),
+            "fault_kills": round(s["fault_kills_mean"], 1),
+            "retries": round(s["retries_mean"], 1),
+            "failed": round(s["failed_mean"], 1),
+            "wasted_work_s": round(s["wasted_work_s_mean"], 3),
+            "pool_down_s": round(s["pool_down_s_mean"], 3),
+            "mean_latency_s": round(s["mean_latency_s_mean"], 4),
+            "wall_s": round(wall, 3),
+        }
+        rows.append(row)
+        if print_rows:
+            print(row)
+    return rows
+
+
 if __name__ == "__main__":
     main()
     cache_sensitivity()
     scenario_comparison()
+    resilience_comparison()

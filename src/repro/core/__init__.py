@@ -10,10 +10,19 @@ from .algorithm import (
 )
 from .engine import SimResult, run
 from .engine_python import Scheduler
+from .faults import (
+    FaultTrace,
+    attach_fault_trace,
+    attach_fault_traces,
+    fault_trace_from_records,
+    fault_trace_to_records,
+    generate_fault_trace,
+)
 from .metrics import completion_table, summarize
 from .params import SimParams, load_params
 from .scheduler import (
     SchedDecision,
+    mask_down_pools,
     register_vector_scheduler,
     register_vector_scheduler_family,
     register_vector_scheduler_init,
@@ -97,6 +106,13 @@ __all__ = [
     "broadcast_lanes",
     "summarize",
     "completion_table",
+    "FaultTrace",
+    "generate_fault_trace",
+    "attach_fault_trace",
+    "attach_fault_traces",
+    "fault_trace_to_records",
+    "fault_trace_from_records",
+    "mask_down_pools",
     "fleet_run",
     "fleet_summary",
     "make_workload_batch",

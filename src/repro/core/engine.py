@@ -43,6 +43,7 @@ from .params import SimParams, load_params
 from .scheduler import (
     get_vector_scheduler,
     get_vector_scheduler_init,
+    mask_down_pools,
 )
 from .state import INF_TICK, SimState, Workload, broadcast_lanes, init_state
 from .telemetry.record import TraceBuffer, record_step, step_block_rows
@@ -85,7 +86,16 @@ def _tick_body(
     state = executor.process_arrivals(state, wl, tick)
     state = executor.process_releases(state, tick)
     state = executor.process_completions(state, wl, tick, params)
-    sched_state, dec = scheduler_fn(sched_state, state, wl, params)
+    if params.fault_events_active:
+        state, _ = executor.apply_faults(state, wl, tick, params)
+    view = (
+        mask_down_pools(state, tick)
+        if params.outage_mtbf_ticks > 0
+        else state
+    )
+    sched_state, dec = scheduler_fn(sched_state, view, wl, params)
+    if params.outage_mtbf_ticks > 0:
+        dec = _filter_down_pool_assignments(dec, state, tick, params)
     state = executor.apply_decision(state, wl, dec, tick, params)
     acted = (
         jnp.any(dec.suspend)
@@ -93,6 +103,24 @@ def _tick_body(
         | jnp.any(dec.assign_pipe >= 0)
     )
     return state, sched_state, acted
+
+
+def _filter_down_pool_assignments(
+    dec, state: SimState, tick: jax.Array, params: SimParams
+):
+    """Drop scheduler assignments that target a down pool.
+
+    Free-resource-driven schedulers already avoid down pools through the
+    masked view (:func:`mask_down_pools`); this filter is the safety net
+    for schedulers that size allocations off pool *caps* (``naive``),
+    which would otherwise commit onto dead capacity — and, because the
+    filtered decision feeds ``acted``, it also keeps an un-placeable
+    head-of-queue from spinning the event loop tick-by-tick for the
+    whole outage."""
+    down = tick < state.pool_down_until
+    NP = params.num_pools
+    bad = (dec.assign_pipe >= 0) & down[jnp.clip(dec.assign_pool, 0, NP - 1)]
+    return dec._replace(assign_pipe=jnp.where(bad, -1, dec.assign_pipe))
 
 
 def _sorted_arrivals(arrival: jax.Array) -> jax.Array:
@@ -130,6 +158,10 @@ def _next_event_registers(
     nxt = jnp.minimum(
         jnp.minimum(next_arrival, state.nxt_retire), state.nxt_release
     )
+    # chaos layer: ``apply_faults`` keeps nxt_fault at the next crash /
+    # outage start / pool recovery tick; faults-off it is pinned at
+    # INF_TICK, so the min is the identity there
+    nxt = jnp.minimum(nxt, state.nxt_fault)
     nxt = jnp.where(acted, jnp.minimum(nxt, tick + 1), nxt)
     return jnp.maximum(nxt, tick + 1), cursor
 
@@ -161,6 +193,29 @@ def _next_event(state: SimState, wl: Workload, tick: jax.Array, acted) -> jax.Ar
     next_release = jnp.min(rel)
 
     nxt = jnp.minimum(jnp.minimum(next_arrival, next_retire), next_release)
+
+    if wl.faults is not None:
+        # chaos layer event sources, recomputed from scratch: the fault
+        # trace is sorted, so "next crash/outage" is the earliest entry
+        # strictly beyond ``tick`` (= what the ``crash_cursor`` /
+        # ``outage_cursor`` registers index to), plus the earliest pool
+        # recovery still pending.
+        ft = wl.faults
+        nxt_crash = jnp.min(
+            jnp.where(ft.crash_time > tick, ft.crash_time, INF_TICK)
+        )
+        nxt_outage = jnp.min(
+            jnp.where(ft.outage_start > tick, ft.outage_start, INF_TICK)
+        )
+        nxt_recover = jnp.min(
+            jnp.where(
+                state.pool_down_until > tick, state.pool_down_until, INF_TICK
+            )
+        )
+        nxt = jnp.minimum(
+            nxt, jnp.minimum(nxt_crash, jnp.minimum(nxt_outage, nxt_recover))
+        )
+
     # if the scheduler acted, it may act again next tick (queue longer than
     # one decision's capacity, freshly freed resources, ...)
     nxt = jnp.where(acted, jnp.minimum(nxt, tick + 1), nxt)
@@ -208,9 +263,21 @@ def _lane_step_core(
     metadata only, never the computation."""
     with jax.named_scope("phase1"):
         state = executor.apply_fused_phase1(state, wl, tick, params, ph)
+    if params.fault_events_active:
+        with jax.named_scope("faults"):
+            state, fault_aux = executor.apply_faults(state, wl, tick, params)
+    else:
+        fault_aux = None
     st1 = state
     with jax.named_scope("scheduler"):
-        sched_state, dec = scheduler_fn(sched_state, state, wl, params)
+        view = (
+            mask_down_pools(state, tick)
+            if params.outage_mtbf_ticks > 0
+            else state
+        )
+        sched_state, dec = scheduler_fn(sched_state, view, wl, params)
+        if params.outage_mtbf_ticks > 0:
+            dec = _filter_down_pool_assignments(dec, state, tick, params)
     with jax.named_scope("apply"):
         if with_aux:
             state, aux = executor.apply_decision(
@@ -231,7 +298,7 @@ def _lane_step_core(
         nxt = jnp.minimum(nxt, horizon)
         state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
     state = state._replace(tick=nxt, nxt_arrival_cursor=cursor)
-    return state, sched_state, st1, dec, aux
+    return state, sched_state, st1, dec, aux, fault_aux
 
 
 def lane_event_step(
@@ -252,7 +319,7 @@ def lane_event_step(
     (``_next_event`` vs ``_next_event_registers`` at every event); the
     engine vmaps it over the fleet axis.
     """
-    state, sched_state, _, _, _ = _lane_step_core(
+    state, sched_state, _, _, _, _ = _lane_step_core(
         params, horizon, scheduler_fn, state, sched_state, wl,
         arr_sorted, tick, ph, with_aux=False,
     )
@@ -279,14 +346,14 @@ def lane_event_step_traced(
     all buffer writes so finished lanes record nothing while the fleet
     loop drains stragglers."""
     pre = state
-    state, sched_state, st1, dec, aux = _lane_step_core(
+    state, sched_state, st1, dec, aux, fault_aux = _lane_step_core(
         params, horizon, scheduler_fn, state, sched_state, wl,
         arr_sorted, tick, ph, with_aux=True,
     )
     with jax.named_scope("telemetry"):
         tbuf = record_step(
             tbuf, trace_capacity, active, pre, st1, state, wl, params,
-            tick, ph, dec, aux,
+            tick, ph, dec, aux, fault_aux,
         )
     return state, sched_state, tbuf
 
@@ -360,7 +427,7 @@ def _run_lane_major_engine(
 
     scratch = step_block_rows(
         params.max_pipelines, params.max_containers,
-        params.max_assignments_per_tick,
+        params.max_assignments_per_tick, params,
     )
     tbufs0 = TraceBuffer(
         records=jnp.zeros(
@@ -463,6 +530,13 @@ def run(
     params = load_params(paramfile)
     engine = engine or params.engine
     wl = workload if workload is not None else get_workload(params)
+    if params.fault_trace_active and wl.faults is None:
+        # chaos layer on but the workload came in bare (trace replay /
+        # caller-built): materialise the fault trace from params.seed so
+        # both engines replay the identical fault sequence
+        from .faults import attach_fault_trace
+
+        wl = attach_fault_trace(wl, params)
     if engine == "python":
         if trace:
             raise ValueError(

@@ -38,10 +38,11 @@ EPS = 1e-5
 class Container:
     __slots__ = (
         "slot", "pipe", "pool", "cpus", "ram", "start", "end", "oom", "warm",
+        "timed",
     )
 
     def __init__(self, slot, pipe, pool, cpus, ram, start, end, oom,
-                 warm=False):
+                 warm=False, timed=False):
         self.slot = slot
         self.pipe = pipe
         self.pool = pool
@@ -51,6 +52,7 @@ class Container:
         self.end = end
         self.oom = oom
         self.warm = warm  # started on a warm slot (no cold-start charge)
+        self.timed = timed  # ``end`` is a timeout deadline, not completion
 
 
 class Scheduler:
@@ -346,6 +348,17 @@ def _cache_insert_py(sch: Scheduler, pool: int, pid: int, size, tick: int,
     sch.pool_cache_used[pool] = f32(f32(f32(used - freed) - cached) + size)
 
 
+def _backoff_release_py(attempt: int, tick: int, params: SimParams) -> int:
+    """Backoff re-queue tick — np.float32 mirror of the compiled
+    ``executor._requeue_faulted`` arithmetic (bitwise-equal releases)."""
+    backoff = np.minimum(
+        np.float32(params.base_backoff_ticks)
+        * np.exp2(np.float32(min(attempt, 30))),
+        np.float32(2**30),
+    ).astype(np.int32)
+    return tick + max(int(backoff), 1)
+
+
 def _pick_slot(free_slots, pool: int, tick: int, sch: Scheduler,
                prefer_warm: bool) -> int:
     """Lowest free slot, preferring warm-for-pool slots when the cold-start
@@ -433,6 +446,44 @@ def run_python_engine(params: SimParams, wl: Workload):
     cold_start_tick_total = 0
     prefer_warm = params.cold_start_ticks > 0
 
+    # ---- chaos layer: pre-materialised fault trace + retry policy ---------
+    # (docs/faults.md; mirrors executor.apply_faults / _requeue_faulted)
+    ft = wl.faults
+    crash_on = params.crash_mtbf_ticks > 0 and ft is not None
+    outage_on = params.outage_mtbf_ticks > 0 and ft is not None
+    straggler_on = params.straggler_prob > 0 and ft is not None
+    if ft is not None:
+        crash_time = np.asarray(ft.crash_time, np.int64)
+        outage_start_t = np.asarray(ft.outage_start, np.int64)
+        outage_end_t = np.asarray(ft.outage_end, np.int64)
+        outage_pool_t = np.asarray(ft.outage_pool, np.int64)
+        straggler = np.asarray(ft.straggler, np.float32)
+    pool_down_until = np.zeros((NP,), np.int64)
+    crash_cursor = outage_cursor = 0
+    nxt_fault = int(INF_TICK)
+    pipe_retries = np.zeros((MP,), np.int64)
+    crash_events = outage_events = timeout_events = retry_events = 0
+    fault_kills = 0
+    wasted_ticks = 0
+    pool_down_s = 0.0
+
+    def _requeue_faulted_py(pid: int, t: int) -> None:
+        """Retry policy for a fault-killed / timed-out pipeline: backoff
+        re-queue while budget lasts, FAILED once it is exhausted. Does
+        NOT set ``failed_before`` (the allocation was fine — the worker
+        died), exactly like the compiled engine."""
+        nonlocal failed_count, retry_events
+        attempt = int(pipe_retries[pid])
+        if attempt >= params.max_retries:
+            sch.status[pid] = PipeStatus.FAILED
+            completion[pid] = t
+            failed_count += 1
+        else:
+            sch.status[pid] = PipeStatus.SUSPENDED
+            release[pid] = _backoff_release_py(attempt, t, params)
+            pipe_retries[pid] += 1
+            retry_events += 1
+
     def _mark_warm(c: Container, t: int) -> None:
         sch.slot_warm_pool[c.slot] = c.pool
         sch.slot_warm_until[c.slot] = t + params.container_warm_ticks
@@ -476,6 +527,13 @@ def run_python_engine(params: SimParams, wl: Workload):
                 fails[pid] += 1
                 oom_events += 1
                 failures.append(Failure(p, tick, c.cpus, c.ram))
+            elif c.timed:
+                # wall-clock timeout: the slot retires normally (it ran
+                # fine until the deadline, so it stays warm) but the
+                # pipeline re-queues under the retry policy
+                timeout_events += 1
+                wasted_ticks += tick - c.start
+                _requeue_faulted_py(pid, tick)
             else:
                 sch.status[pid] = PipeStatus.DONE
                 completion[pid] = c.end
@@ -485,8 +543,99 @@ def run_python_engine(params: SimParams, wl: Workload):
                 sum_lat_prio[int(p.priority)] += lat
                 done_prio[int(p.priority)] += 1
 
-        # ---- scheduler ------------------------------------------------------
-        suspends, assignments = algo(sch, failures, new_pipes)
+        # ---- chaos layer: crashes + pool outages due at this tick -----------
+        if crash_on or outage_on:
+            kills: list[Container] = []
+            if crash_on:
+                new_ccur = int(np.searchsorted(crash_time, tick, side="right"))
+                k_due = new_ccur - crash_cursor
+                crash_cursor = new_ccur
+                crash_events += k_due
+                if k_due > 0:
+                    # each crash strikes the longest-running container
+                    # (start asc, slot asc); a crash with nothing left
+                    # running strikes an idle worker and kills nothing
+                    victims = sorted(
+                        sch.running.values(), key=lambda c: (c.start, c.slot)
+                    )
+                    kills.extend(victims[:k_due])
+            down_new = np.zeros((NP,), bool)
+            if outage_on:
+                new_ocur = int(
+                    np.searchsorted(outage_start_t, tick, side="right")
+                )
+                for i in range(outage_cursor, new_ocur):
+                    p_ix = int(outage_pool_t[i])
+                    down_new[p_ix] = True
+                    pool_down_until[p_ix] = max(
+                        pool_down_until[p_ix], int(outage_end_t[i])
+                    )
+                outage_events += new_ocur - outage_cursor
+                outage_cursor = new_ocur
+                if down_new.any():
+                    struck = {c.slot for c in kills}
+                    kills.extend(
+                        c for c in sch.running.values()
+                        if down_new[c.pool] and c.slot not in struck
+                    )
+            for c in kills:
+                pid = c.pipe
+                sch.pool_cpu_free[c.pool] += c.cpus
+                sch.pool_ram_free[c.pool] += c.ram
+                free_slots.add(c.slot)
+                # a struck slot hands off no warmth (the worker died)
+                sch.slot_warm_pool[c.slot] = -1
+                sch.slot_warm_until[c.slot] = 0
+                del sch.running[pid]
+                fault_kills += 1
+                wasted_ticks += tick - c.start
+                _requeue_faulted_py(pid, tick)
+            if outage_on and down_new.any():
+                # a newly-down pool loses its warm slots and its cache
+                for s in range(MC):
+                    wp = int(sch.slot_warm_pool[s])
+                    if wp >= 0 and down_new[wp]:
+                        sch.slot_warm_pool[s] = -1
+                        sch.slot_warm_until[s] = 0
+                if params.cache_gb_per_pool > 0:
+                    for p_ix in range(NP):
+                        if down_new[p_ix]:
+                            sch.cache_bytes[p_ix, :] = 0.0
+                            sch.cache_last[p_ix, :] = 0
+                            sch.pool_cache_used[p_ix] = 0.0
+            # next-fault register: next crash / outage start / recovery
+            nxt_fault = int(INF_TICK)
+            if crash_on and crash_cursor < crash_time.shape[0]:
+                nxt_fault = min(nxt_fault, int(crash_time[crash_cursor]))
+            if outage_on:
+                if outage_cursor < outage_start_t.shape[0]:
+                    nxt_fault = min(
+                        nxt_fault, int(outage_start_t[outage_cursor])
+                    )
+                for p_ix in range(NP):
+                    if pool_down_until[p_ix] > tick:
+                        nxt_fault = min(nxt_fault, int(pool_down_until[p_ix]))
+
+        # ---- scheduler (down pools masked to zero free capacity) ------------
+        down = pool_down_until > tick
+        if outage_on and down.any():
+            saved_free = (sch.pool_cpu_free, sch.pool_ram_free)
+            sch.pool_cpu_free = np.where(
+                down, np.float32(0.0), sch.pool_cpu_free
+            ).astype(np.float32)
+            sch.pool_ram_free = np.where(
+                down, np.float32(0.0), sch.pool_ram_free
+            ).astype(np.float32)
+            suspends, assignments = algo(sch, failures, new_pipes)
+            sch.pool_cpu_free, sch.pool_ram_free = saved_free
+            # decision filter: cap-driven schedulers (naive) can still
+            # target a dead pool — drop those before they commit
+            assignments = [
+                a for a in assignments
+                if not down[min(max(int(a.pool), 0), NP - 1)]
+            ]
+        else:
+            suspends, assignments = algo(sch, failures, new_pipes)
         acted = bool(suspends or assignments or sch.data.get("rejects"))
 
         # rejects (permanent failures back to the user)
@@ -535,6 +684,27 @@ def run_python_engine(params: SimParams, wl: Workload):
             startup = cold_ticks + scan_ticks
             cpus, ram_gb = np.float32(a.cpus), np.float32(a.ram_gb)
             dur, oom_off = container_schedule_py(a.pipeline, cpus, ram_gb)
+            if straggler_on:
+                # straggler stretch (f32, mirrors the compiled stretch;
+                # ceil is monotone so stretching the pre-clamped offset
+                # equals the compiled stretch-then-min)
+                f = np.float32(straggler[pid])
+
+                def _stretch(t: int) -> int:
+                    return int(np.minimum(
+                        np.ceil(np.float32(t) * f), np.float32(2**30)
+                    ).astype(np.int32))
+
+                dur = _stretch(dur)
+                if oom_off is not None:
+                    oom_off = _stretch(oom_off)
+            end = tick + startup + dur
+            timed = False
+            if params.timeout_ticks > 0:
+                # wall-clock deadline; a same-tick OOM wins at retirement
+                deadline = tick + params.timeout_ticks
+                timed = end > deadline
+                end = min(end, deadline)
             c = Container(
                 slot,
                 pid,
@@ -542,9 +712,10 @@ def run_python_engine(params: SimParams, wl: Workload):
                 cpus,
                 ram_gb,
                 tick,
-                tick + startup + dur,
+                end,
                 (tick + startup + oom_off) if oom_off is not None else None,
                 warm=is_warm,
+                timed=timed,
             )
             cache_hit_gb = np.float32(cache_hit_gb + hit_gb)
             bytes_moved_gb = np.float32(bytes_moved_gb + miss_gb)
@@ -574,6 +745,8 @@ def run_python_engine(params: SimParams, wl: Workload):
             nxt = min(nxt, c.end if c.oom is None else min(c.end, c.oom))
         for r in release.values():
             nxt = min(nxt, r)
+        if crash_on or outage_on:
+            nxt = min(nxt, nxt_fault)
         if acted:
             nxt = min(nxt, tick + 1)
         nxt = max(nxt, tick + 1)
@@ -603,6 +776,10 @@ def run_python_engine(params: SimParams, wl: Workload):
         util_log += overlap_s[:, None, None] * np.stack(
             [used_cpu, used_ram], axis=-1
         )[None, :, :]
+        if outage_on:
+            # a pool down at tick is down for all of [tick, nxt): the
+            # next-fault register includes every recovery tick
+            pool_down_s += float(dt_s) * int(np.sum(pool_down_until > tick))
 
         tick = nxt
 
@@ -683,6 +860,32 @@ def run_python_engine(params: SimParams, wl: Workload):
         util_ram_s=jnp.asarray(util_ram_s.astype(np.float32)),
         cost_dollars=jnp.asarray(cost, jnp.float32),
         util_log=jnp.asarray(util_log.astype(np.float32)),
+        # ---- chaos layer registers + counters -----------------------------
+        pipe_retries=jnp.asarray(pipe_retries.astype(np.int32)),
+        ctr_timed=jnp.asarray(
+            np.array(
+                [
+                    any(
+                        c.slot == s and c.timed
+                        for c in sch.running.values()
+                    )
+                    for s in range(MC)
+                ]
+            )
+        ),
+        pool_down_until=jnp.asarray(
+            np.minimum(pool_down_until, INF_TICK).astype(np.int32)
+        ),
+        crash_cursor=jnp.asarray(crash_cursor, jnp.int32),
+        outage_cursor=jnp.asarray(outage_cursor, jnp.int32),
+        nxt_fault=jnp.asarray(min(nxt_fault, int(INF_TICK)), jnp.int32),
+        crash_events=jnp.asarray(crash_events, jnp.int32),
+        outage_events=jnp.asarray(outage_events, jnp.int32),
+        timeout_events=jnp.asarray(timeout_events, jnp.int32),
+        retry_events=jnp.asarray(retry_events, jnp.int32),
+        fault_kills=jnp.asarray(fault_kills, jnp.int32),
+        wasted_ticks=jnp.asarray(wasted_ticks, jnp.int32),
+        pool_down_s=jnp.asarray(pool_down_s, jnp.float32),
     )
     return SimResult(state=st, workload=wl, params=params, sched_state=sch)
 

@@ -78,6 +78,231 @@ def process_releases(state: SimState, tick: jax.Array) -> SimState:
     )
 
 
+def _requeue_faulted(
+    state: SimState,
+    tick: jax.Array,
+    params: SimParams,
+    fault_hit: jax.Array,  # [MP] bool — pipelines whose container was killed
+) -> SimState:
+    """Re-queue fault-killed / timed-out pipelines under the retry policy.
+
+    A struck pipeline with retry budget left re-enters the queue at
+    ``tick + base_backoff_ticks * 2**attempt`` (through the existing
+    SUSPENDED/release machinery, so the event registers need no new
+    source); once ``max_retries`` attempts are spent it transitions to
+    FAILED. Unlike an OOM, a fault kill does not set ``pipe_fail_flag``
+    (the allocation was fine — the worker died), so the scheduler's
+    doubling/reject rules are untouched. The backoff arithmetic is f32
+    (exact for power-of-two scaling), mirrored op-for-op by
+    ``engine_python._requeue_faulted_py``.
+    """
+    i32 = jnp.int32
+    attempt = state.pipe_retries
+    exhausted = fault_hit & (attempt >= params.max_retries)
+    retry = fault_hit & ~exhausted
+    backoff = jnp.minimum(
+        jnp.float32(params.base_backoff_ticks)
+        * jnp.exp2(jnp.minimum(attempt, 30).astype(jnp.float32)),
+        jnp.float32(2**30),
+    ).astype(i32)
+    release = tick + jnp.maximum(backoff, 1)
+    nxt_release = jnp.minimum(
+        state.nxt_release,
+        jnp.min(jnp.where(retry, release, INF_TICK)),
+    )
+    return state._replace(
+        pipe_status=jnp.where(
+            exhausted,
+            int(PipeStatus.FAILED),
+            jnp.where(retry, int(PipeStatus.SUSPENDED), state.pipe_status),
+        ),
+        pipe_completion=jnp.where(exhausted, tick, state.pipe_completion),
+        pipe_release=jnp.where(retry, release, state.pipe_release),
+        pipe_retries=state.pipe_retries + retry.astype(i32),
+        failed_count=state.failed_count + jnp.sum(exhausted).astype(i32),
+        retry_events=state.retry_events + jnp.sum(retry).astype(i32),
+        nxt_release=nxt_release,
+    )
+
+
+def apply_faults(
+    state: SimState, wl: Workload, tick: jax.Array, params: SimParams
+):
+    """Apply the crash/outage events due at ``tick`` (chaos layer).
+
+    Runs between phase 1 and the scheduler when
+    ``params.fault_events_active`` — the faults-off engine never calls
+    it. Consumes the pre-materialised fault trace through the
+    ``crash_cursor``/``outage_cursor`` registers:
+
+    * each due **crash** kills the longest-running container (start tick
+      asc, slot asc) — a crash with nothing running strikes an idle
+      worker and kills nothing;
+    * each due **outage** marks its pool down until ``outage_end``
+      (scheduler capacity is masked while ``tick < pool_down_until``),
+      kills every container on it, flushes the pool's LRU cache and its
+      warm slots;
+
+    killed pipelines re-queue via :func:`_requeue_faulted`, and the
+    ``nxt_fault`` register is recomputed so the event-skip loop wakes at
+    the next crash, outage start, or pool recovery.
+
+    Returns ``(state, fault_aux)``; ``fault_aux = (kill, kill_pipe,
+    kill_pool, kill_cause, kill_wasted, down_new, up_now,
+    pool_down_until)`` feeds the telemetry recorder (reads only).
+    """
+    ft = wl.faults
+    i32 = jnp.int32
+    MC = state.ctr_status.shape[0]
+    NP = state.pool_cpu_cap.shape[0]
+    MP = state.pipe_status.shape[0]
+    MF = ft.crash_time.shape[0]
+    fidx = jnp.arange(MF, dtype=i32)
+    slots = jnp.arange(MC, dtype=i32)
+    running = state.ctr_status == int(ContainerStatus.RUNNING)
+
+    # pools recovering exactly now (telemetry marker; the capacity unmask
+    # is implicit — a pool is down iff tick < pool_down_until)
+    up_now = (state.pool_down_until > 0) & (state.pool_down_until == tick)
+
+    # ---- transient crashes -------------------------------------------------
+    if params.crash_mtbf_ticks > 0:
+        new_ccur = jnp.searchsorted(
+            ft.crash_time, tick, side="right"
+        ).astype(i32)
+        k_due = new_ccur - state.crash_cursor
+        # rank running containers by (start asc, slot asc); the k_due
+        # longest-running are struck
+        earlier = (state.ctr_start[None, :] < state.ctr_start[:, None]) | (
+            (state.ctr_start[None, :] == state.ctr_start[:, None])
+            & (slots[None, :] < slots[:, None])
+        )
+        rank = jnp.sum(running[None, :] & earlier, axis=1).astype(i32)
+        crash_kill = running & (rank < k_due)
+    else:
+        new_ccur = state.crash_cursor
+        k_due = jnp.int32(0)
+        crash_kill = jnp.zeros((MC,), bool)
+
+    # ---- pool outages ------------------------------------------------------
+    pool_down_until = state.pool_down_until
+    if params.outage_mtbf_ticks > 0:
+        new_ocur = jnp.searchsorted(
+            ft.outage_start, tick, side="right"
+        ).astype(i32)
+        due = (fidx >= state.outage_cursor) & (fidx < new_ocur)
+        n_due = new_ocur - state.outage_cursor
+        pool_t = jnp.where(due, ft.outage_pool, NP)  # out-of-range = dropped
+        down_new = (
+            jnp.zeros((NP,), i32)
+            .at[pool_t]
+            .add(due.astype(i32), mode="drop")
+        ) > 0
+        pool_down_until = pool_down_until.at[pool_t].max(
+            jnp.where(due, ft.outage_end, 0), mode="drop"
+        )
+        out_kill = running & ~crash_kill & down_new[state.ctr_pool]
+    else:
+        new_ocur = state.outage_cursor
+        n_due = jnp.int32(0)
+        down_new = jnp.zeros((NP,), bool)
+        out_kill = jnp.zeros((MC,), bool)
+
+    kill = crash_kill | out_kill
+    kill_pipe = jnp.where(kill, state.ctr_pipe, -1)
+    kill_pool = jnp.where(kill, state.ctr_pool, -1)
+    kill_cause = jnp.where(crash_kill, 0, 1).astype(i32)
+    kill_wasted = jnp.where(kill, tick - state.ctr_start, 0).astype(i32)
+
+    # ---- free struck resources, clear struck containers --------------------
+    pool_oh = (
+        state.ctr_pool[None, :] == jnp.arange(NP, dtype=i32)[:, None]
+    ) & kill[None, :]
+    freed_cpu = jnp.sum(
+        jnp.where(pool_oh, state.ctr_cpus[None, :], 0.0), axis=1
+    )
+    freed_ram = jnp.sum(
+        jnp.where(pool_oh, state.ctr_ram[None, :], 0.0), axis=1
+    )
+    still = running & ~kill
+    nxt_retire = jnp.min(
+        jnp.where(still, jnp.minimum(state.ctr_end, state.ctr_oom), INF_TICK)
+    )
+    pid = jnp.where(kill, state.ctr_pipe, MP)
+    fault_hit = (
+        jnp.zeros((MP,), i32).at[pid].add(kill.astype(i32), mode="drop")
+    ) > 0
+
+    # a struck slot is cold (no warm hand-off), and every slot kept warm
+    # for a newly-down pool loses its warmth with the pool
+    slot_warm_pool = jnp.where(kill, -1, state.slot_warm_pool)
+    slot_warm_until = jnp.where(kill, 0, state.slot_warm_until)
+    if params.outage_mtbf_ticks > 0:
+        warm_down = (slot_warm_pool >= 0) & down_new[
+            jnp.clip(slot_warm_pool, 0, NP - 1)
+        ]
+        slot_warm_pool = jnp.where(warm_down, -1, slot_warm_pool)
+        slot_warm_until = jnp.where(warm_down, 0, slot_warm_until)
+
+    # ---- next-fault register (next crash / outage start / recovery) --------
+    nxt_fault = jnp.asarray(INF_TICK, i32)
+    if params.crash_mtbf_ticks > 0:
+        nxt_fault = jnp.minimum(
+            nxt_fault,
+            jnp.min(jnp.where(fidx >= new_ccur, ft.crash_time, INF_TICK)),
+        )
+    if params.outage_mtbf_ticks > 0:
+        nxt_fault = jnp.minimum(
+            nxt_fault,
+            jnp.min(jnp.where(fidx >= new_ocur, ft.outage_start, INF_TICK)),
+        )
+        nxt_fault = jnp.minimum(
+            nxt_fault,
+            jnp.min(
+                jnp.where(pool_down_until > tick, pool_down_until, INF_TICK)
+            ),
+        )
+
+    state = state._replace(
+        ctr_status=jnp.where(
+            kill, int(ContainerStatus.EMPTY), state.ctr_status
+        ),
+        ctr_pipe=jnp.where(kill, -1, state.ctr_pipe),
+        ctr_end=jnp.where(kill, INF_TICK, state.ctr_end),
+        ctr_oom=jnp.where(kill, INF_TICK, state.ctr_oom),
+        ctr_start=jnp.where(kill, INF_TICK, state.ctr_start),
+        ctr_prio=jnp.where(kill, -1, state.ctr_prio),
+        ctr_warm=jnp.where(kill, False, state.ctr_warm),
+        ctr_timed=jnp.where(kill, False, state.ctr_timed),
+        slot_warm_pool=slot_warm_pool,
+        slot_warm_until=slot_warm_until,
+        pool_cpu_free=state.pool_cpu_free + freed_cpu,
+        pool_ram_free=state.pool_ram_free + freed_ram,
+        nxt_retire=nxt_retire,
+        pool_down_until=pool_down_until,
+        crash_cursor=new_ccur,
+        outage_cursor=new_ocur,
+        nxt_fault=nxt_fault,
+        crash_events=state.crash_events + k_due,
+        outage_events=state.outage_events + n_due,
+        fault_kills=state.fault_kills + jnp.sum(kill).astype(i32),
+        wasted_ticks=state.wasted_ticks + jnp.sum(kill_wasted),
+    )
+    if params.outage_mtbf_ticks > 0 and params.cache_gb_per_pool > 0:
+        # outage flushes the pool's zero-copy cache: recovery is cold
+        state = state._replace(
+            cache_bytes=jnp.where(down_new[:, None], 0.0, state.cache_bytes),
+            cache_last=jnp.where(down_new[:, None], 0, state.cache_last),
+            pool_cache_used=jnp.where(down_new, 0.0, state.pool_cache_used),
+        )
+    state = _requeue_faulted(state, tick, params, fault_hit)
+    fault_aux = (
+        kill, kill_pipe, kill_pool, kill_cause, kill_wasted,
+        down_new, up_now, pool_down_until,
+    )
+    return state, fault_aux
+
+
 def _apply_retirements(
     state: SimState,
     wl: Workload,
@@ -98,6 +323,18 @@ def _apply_retirements(
     """
     retired = oomed | done
 
+    # ---- timeout split (chaos layer, compiled out when the knob is 0) ------
+    # a container whose ``ctr_end`` is the timeout deadline (not a real
+    # completion) retires like a completion — the slot frees and stays
+    # warm — but its pipeline re-queues under the retry policy instead
+    # of completing.
+    if params.timeout_ticks > 0:
+        timed = done & state.ctr_timed
+        done_eff = done & ~timed
+    else:
+        timed = jnp.zeros_like(done)
+        done_eff = done
+
     # ---- per-pipeline effects (scatter via segment-sum over containers) ----
     MP = state.pipe_status.shape[0]
     pid = jnp.where(retired, state.ctr_pipe, MP)  # out-of-range = dropped
@@ -109,13 +346,24 @@ def _apply_retirements(
     done_hit = (
         jnp.zeros((MP,), jnp.int32)
         .at[pid]
-        .add(done.astype(jnp.int32), mode="drop")
+        .add(done_eff.astype(jnp.int32), mode="drop")
     ) > 0
     end_of = (
         jnp.full((MP,), 0, jnp.int32)
         .at[pid]
-        .max(jnp.where(done, state.ctr_end, 0), mode="drop")
+        .max(jnp.where(done_eff, state.ctr_end, 0), mode="drop")
     )
+    if params.timeout_ticks > 0:
+        # timed-out pipelines and wasted work, read before the container
+        # table is cleared below
+        timed_hit = (
+            jnp.zeros((MP,), jnp.int32)
+            .at[jnp.where(timed, state.ctr_pipe, MP)]
+            .add(timed.astype(jnp.int32), mode="drop")
+        ) > 0
+        timed_wasted = jnp.sum(
+            jnp.where(timed, tick - state.ctr_start, 0)
+        ).astype(jnp.int32)
 
     lat_s = (end_of - wl.arrival).astype(jnp.float32) / TICKS_PER_SECOND
     lat_s = jnp.where(done_hit, lat_s, 0.0)
@@ -123,7 +371,7 @@ def _apply_retirements(
         wl.prio[None, :] == jnp.arange(3, dtype=jnp.int32)[:, None]
     )  # [3, MP]
 
-    return state._replace(
+    state = state._replace(
         nxt_retire=nxt_retire,
         pipe_status=jnp.where(
             oom_hit,
@@ -158,6 +406,15 @@ def _apply_retirements(
         done_prio=state.done_prio
         + jnp.sum(prio_oh & done_hit[None, :], axis=1).astype(jnp.int32),
     )
+    if params.timeout_ticks > 0:
+        state = state._replace(
+            ctr_timed=jnp.where(retired, False, state.ctr_timed),
+            timeout_events=state.timeout_events
+            + jnp.sum(timed).astype(jnp.int32),
+            wasted_ticks=state.wasted_ticks + timed_wasted,
+        )
+        state = _requeue_faulted(state, tick, params, timed_hit)
+    return state
 
 
 def process_completions(
@@ -264,6 +521,10 @@ def apply_decision(
         pool_ram_free=state.pool_ram_free + freed_ram,
         preempt_events=state.preempt_events + jnp.sum(susp).astype(jnp.int32),
     )
+    if params.timeout_ticks > 0:
+        state = state._replace(
+            ctr_timed=jnp.where(susp, False, state.ctr_timed)
+        )
 
     # ---- 2. rejections (failures returned to the user) ---------------------
     rej = dec.reject & (state.pipe_status == int(PipeStatus.WAITING))
@@ -314,12 +575,34 @@ def apply_decision(
         ).astype(jnp.int32)
         startup = cold_ticks + scan_ticks
         dur, oom_off = container_schedule(wl, pipe_c, cpus, ram)
+        if params.straggler_prob > 0:
+            # straggler stretch: the sampled per-pipeline slowdown factor
+            # (>= 1) scales the compute duration and the OOM offset alike
+            # (both are "progress clocks"). f32 stretch mirrored by
+            # engine_python; min-then-stretch == stretch-then-min since
+            # ceil is monotone, so both engines may pick either order.
+            f = wl.faults.straggler[pipe_c]
+            stretch = lambda t: jnp.minimum(  # noqa: E731
+                jnp.ceil(t.astype(jnp.float32) * f), jnp.float32(2**30)
+            ).astype(jnp.int32)
+            dur = stretch(dur)
+            oom_off = jnp.where(oom_off == INF_TICK, INF_TICK, stretch(oom_off))
         end = tick + startup + dur
         oom = jnp.where(
             oom_off == INF_TICK,
             INF_TICK,
             tick + startup + jnp.minimum(oom_off, dur),
         )
+        if params.timeout_ticks > 0:
+            # wall-clock deadline: a container that would outlive it is
+            # killed there instead (ctr_timed marks the retirement as a
+            # TIMEOUT -> retry, not a completion). An OOM due at the same
+            # tick wins (``done`` excludes ``oomed`` at retirement).
+            deadline = tick + jnp.int32(params.timeout_ticks)
+            timed = end > deadline
+            end = jnp.minimum(end, deadline)
+        else:
+            timed = jnp.zeros((), bool)
 
         def commit(st: SimState) -> SimState:
             st = st._replace(
@@ -350,6 +633,8 @@ def apply_decision(
                 warm_starts=st.warm_starts + is_warm.astype(jnp.int32),
                 cold_start_tick_total=st.cold_start_tick_total + cold_ticks,
             )
+            if params.timeout_ticks > 0:
+                st = st._replace(ctr_timed=st.ctr_timed.at[slot].set(timed))
             if params.cache_gb_per_pool > 0:
                 # materialise the pipeline's intermediates in the pool's
                 # zero-copy cache (LRU-evicting under the capacity)
@@ -500,18 +785,27 @@ def integrate(
             dt_s * jnp.stack([used_cpu, used_ram], axis=-1)
         )
 
-    return state._replace(
+    state = state._replace(
         util_cpu_s=state.util_cpu_s + used_cpu * dt_s,
         util_ram_s=state.util_ram_s + used_ram * dt_s,
         cost_dollars=state.cost_dollars + cost,
         util_log=util_log,
     )
+    if params.outage_mtbf_ticks > 0:
+        # downtime integral (MTTR numerator). Exact: the event engine's
+        # ``nxt_fault`` register includes every recovery tick, so an
+        # integration interval never straddles a pool coming back up —
+        # a pool down at t0 is down for the whole of [t0, t1).
+        n_down = jnp.sum((t0 < state.pool_down_until).astype(jnp.float32))
+        state = state._replace(pool_down_s=state.pool_down_s + dt_s * n_down)
+    return state
 
 
 __all__ = [
     "process_arrivals",
     "process_releases",
     "process_completions",
+    "apply_faults",
     "apply_decision",
     "apply_fused_phase1",
     "integrate",

@@ -1,0 +1,206 @@
+"""Deterministic fault injection: the chaos layer's trace generator.
+
+Real FaaS infrastructure fails — workers crash, pools get preempted,
+functions hang (cf. Bauplan's worker-loss/re-execution model). The
+simulator injects three fault classes, all **pre-materialised from the
+seed** exactly like the arrival table (no on-device RNG), so every
+engine — fused lane-major, device-sharded fleets, the Python reference —
+replays the identical fault sequence bit-for-bit:
+
+* **transient crashes** (``crash_mtbf_ticks``): at each sampled tick the
+  longest-running container is killed and its pipeline re-queued;
+* **pool outages** (``outage_mtbf_ticks`` / ``outage_duration_ticks``):
+  a sampled pool goes down for an interval — every container on it is
+  killed, its LRU cache flushed (cold data plane on recovery), and its
+  capacity masked from the scheduler until the recovery tick;
+* **stragglers** (``straggler_prob`` / ``straggler_factor``): a sampled
+  per-pipeline slowdown multiplier stretches container durations.
+
+Recovery is governed by the retry policy in ``params``: fault-killed and
+timed-out pipelines re-queue at ``tick + base_backoff_ticks *
+2**attempt`` until ``max_retries`` is exhausted, then fail. See
+docs/faults.md for the full contract.
+
+The trace generator folds the workload key at indices 8..12 —
+``generate_workload`` consumes split indices 0..6 and fold-in 7, so a
+workload's arrival/ops draws are bitwise-unchanged whether faults are on
+or off.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import SimParams
+from .state import INF_TICK, FaultTrace, Workload
+
+# fold-in indices reserved by the fault generator (workload.py owns 0..7)
+_K_CRASH, _K_OUTAGE_START, _K_OUTAGE_DUR, _K_OUTAGE_POOL, _K_STRAGGLER = (
+    8, 9, 10, 11, 12,
+)
+
+
+def empty_fault_trace(params: SimParams) -> FaultTrace:
+    """An all-padding (inert) fault trace shaped by ``params``."""
+    MF = params.max_fault_events
+    MP = params.max_pipelines
+    i32 = jnp.int32
+    return FaultTrace(
+        crash_time=jnp.full((MF,), INF_TICK, i32),
+        outage_start=jnp.full((MF,), INF_TICK, i32),
+        outage_end=jnp.full((MF,), INF_TICK, i32),
+        outage_pool=jnp.zeros((MF,), i32),
+        straggler=jnp.ones((MP,), jnp.float32),
+    )
+
+
+def _event_times(key, mtbf_ticks: float, horizon: int, MF: int) -> jax.Array:
+    """Sorted Poisson-process event ticks, INF-padded past the horizon
+    (the same cumsum-of-exponential-gaps construction as arrivals)."""
+    gaps = jax.random.exponential(key, (MF,)) * mtbf_ticks
+    t = jnp.cumsum(gaps).astype(jnp.int32)
+    return jnp.where(t < horizon, t, INF_TICK)
+
+
+def generate_fault_trace(
+    params: SimParams, key: jax.Array | None = None
+) -> FaultTrace:
+    """Materialise the fault trace for one lane from ``key``.
+
+    Only the classes whose knobs are on draw anything; the rest stay
+    padding. ``key`` defaults to ``PRNGKey(params.seed)`` — the same key
+    the workload generator uses, so ``run()``'s workload and fault trace
+    derive from one seed.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(params.seed)
+    ft = empty_fault_trace(params)
+    MF = params.max_fault_events
+    MP = params.max_pipelines
+    horizon = params.horizon_ticks
+    if params.crash_mtbf_ticks > 0:
+        ft = ft._replace(crash_time=_event_times(
+            jax.random.fold_in(key, _K_CRASH),
+            params.crash_mtbf_ticks, horizon, MF,
+        ))
+    if params.outage_mtbf_ticks > 0:
+        start = _event_times(
+            jax.random.fold_in(key, _K_OUTAGE_START),
+            params.outage_mtbf_ticks, horizon, MF,
+        )
+        dur = jax.random.exponential(
+            jax.random.fold_in(key, _K_OUTAGE_DUR), (MF,)
+        ) * params.outage_duration_ticks
+        dur = jnp.maximum(
+            jnp.minimum(dur, jnp.float32(2**30)).astype(jnp.int32), 1
+        )
+        end = jnp.where(start < INF_TICK, start + dur, INF_TICK)
+        pool = jax.random.randint(
+            jax.random.fold_in(key, _K_OUTAGE_POOL),
+            (MF,), 0, params.num_pools, jnp.int32,
+        )
+        ft = ft._replace(outage_start=start, outage_end=end, outage_pool=pool)
+    if params.straggler_prob > 0:
+        slow = jax.random.bernoulli(
+            jax.random.fold_in(key, _K_STRAGGLER),
+            params.straggler_prob, (MP,),
+        )
+        ft = ft._replace(straggler=jnp.where(
+            slow, jnp.float32(params.straggler_factor), jnp.float32(1.0)
+        ))
+    return ft
+
+
+def attach_fault_trace(
+    wl: Workload, params: SimParams, key: jax.Array | None = None
+) -> Workload:
+    """Return ``wl`` with a generated fault trace attached (single lane)."""
+    return wl._replace(faults=generate_fault_trace(params, key))
+
+
+def attach_fault_traces(wls: Workload, params: SimParams) -> Workload:
+    """Attach per-lane fault traces to a workload *batch* (trace-replay /
+    scenario lanes, which carry no per-lane seed): lane ``i`` draws from
+    ``fold_in(PRNGKey(params.seed), i)``, so the batch is reproducible
+    from ``params.seed`` alone and every lane's faults differ."""
+    F = wls.arrival.shape[0]
+    base = jax.random.PRNGKey(params.seed)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(F, dtype=jnp.uint32)
+    )
+    faults = jax.vmap(lambda k: generate_fault_trace(params, k))(keys)
+    return wls._replace(faults=faults)
+
+
+# ---------------------------------------------------------------------------
+# Record round-trip (trace-format companion, docs/trace-format.md): a
+# fault trace serialises to one plain dict of lists and back bitwise.
+# ---------------------------------------------------------------------------
+def fault_trace_to_records(ft: FaultTrace) -> dict[str, list]:
+    """Serialise a fault trace to a JSON-able dict (exact round-trip:
+    ``fault_trace_from_records(fault_trace_to_records(ft), params)``
+    reproduces every array bitwise).
+
+    >>> from repro.core import SimParams
+    >>> p = SimParams(max_pipelines=4, max_fault_events=4,
+    ...               crash_mtbf_ticks=500.0, straggler_prob=0.5,
+    ...               duration=0.01)
+    >>> recs = fault_trace_to_records(generate_fault_trace(p))
+    >>> sorted(recs) == ['crash_time', 'outage_end', 'outage_pool',
+    ...                  'outage_start', 'straggler']
+    True
+    """
+    return {
+        "crash_time": [int(t) for t in np.asarray(ft.crash_time)],
+        "outage_start": [int(t) for t in np.asarray(ft.outage_start)],
+        "outage_end": [int(t) for t in np.asarray(ft.outage_end)],
+        "outage_pool": [int(p) for p in np.asarray(ft.outage_pool)],
+        "straggler": [float(f) for f in np.asarray(ft.straggler)],
+    }
+
+
+def fault_trace_from_records(
+    records: dict[str, Sequence[Any]], params: SimParams
+) -> FaultTrace:
+    """Rebuild a :class:`FaultTrace` from its record dict, padding short
+    lists to ``params``' capacities (missing keys stay inert padding)."""
+    MF = params.max_fault_events
+    MP = params.max_pipelines
+
+    def _pad_i32(name: str, fill: int, n: int) -> jax.Array:
+        vals = [int(v) for v in records.get(name, ())]
+        if len(vals) > n:
+            raise ValueError(
+                f"fault trace {name!r} has {len(vals)} entries > capacity {n}"
+            )
+        return jnp.asarray(
+            vals + [fill] * (n - len(vals)), jnp.int32
+        )
+
+    strag = [float(v) for v in records.get("straggler", ())]
+    if len(strag) > MP:
+        raise ValueError(
+            f"fault trace straggler has {len(strag)} entries > {MP} pipelines"
+        )
+    return FaultTrace(
+        crash_time=_pad_i32("crash_time", int(INF_TICK), MF),
+        outage_start=_pad_i32("outage_start", int(INF_TICK), MF),
+        outage_end=_pad_i32("outage_end", int(INF_TICK), MF),
+        outage_pool=_pad_i32("outage_pool", 0, MF),
+        straggler=jnp.asarray(
+            strag + [1.0] * (MP - len(strag)), jnp.float32
+        ),
+    )
+
+
+__all__ = [
+    "empty_fault_trace",
+    "generate_fault_trace",
+    "attach_fault_trace",
+    "attach_fault_traces",
+    "fault_trace_to_records",
+    "fault_trace_from_records",
+]

@@ -87,10 +87,54 @@ def summarize(
         "warm_starts": int(state.warm_starts),
         "cold_start_ticks": int(state.cold_start_tick_total),
         "cold_start_s": float(state.cold_start_tick_total) / TICKS_PER_SECOND,
+        # ---- chaos layer (fault injection + retry, docs/faults.md) --------
+        "faults_injected": int(state.crash_events) + int(state.outage_events),
+        "crash_events": int(state.crash_events),
+        "outage_events": int(state.outage_events),
+        "fault_kills": int(state.fault_kills),
+        "timeouts": int(state.timeout_events),
+        "retries": int(state.retry_events),
+        "wasted_work_s": float(state.wasted_ticks) / TICKS_PER_SECOND,
+        "pool_down_s": float(state.pool_down_s),
+        "mttr_s": float(state.pool_down_s) / int(state.outage_events)
+        if int(state.outage_events) > 0
+        else float("nan"),
+        # goodput: completions that survived to DONE per simulated second
+        # (same as throughput, named for resilience comparisons where the
+        # interesting delta is vs. the faults-off run)
+        "goodput_per_s": float(np.sum(done)) / dur_s,
+        "slo_attainment": _slo_attainment(
+            params, prio, arrival, completion, done
+        ),
     }
     if trace is not None:
         out["trace_enabled"] = True
         out["events_dropped"] = int(trace.events_dropped)
+    return out
+
+
+def _slo_attainment(params, prio, arrival, completion, done) -> dict:
+    """Per-priority SLO attainment: the fraction of *submitted* pipelines
+    of each class that completed within ``params.slo_latency_s`` —
+    pipelines that failed, timed out of their retry budget, or never
+    finished count against the SLO. NaN for classes without a target
+    (``slo_latency_s[p] == 0``) or with no submissions."""
+    out = {}
+    lat_s = (completion - arrival) / TICKS_PER_SECOND
+    for p in Priority:
+        name = p.name.lower()
+        target = (
+            params.slo_latency_s[int(p)]
+            if int(p) < len(params.slo_latency_s)
+            else 0.0
+        )
+        sel = (arrival < INF_TICK) & (prio == int(p))
+        n = int(np.sum(sel))
+        if target <= 0 or n == 0:
+            out[name] = float("nan")
+            continue
+        ok = sel & done & (lat_s <= target)
+        out[name] = float(np.sum(ok)) / n
     return out
 
 

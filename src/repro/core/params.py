@@ -158,6 +158,36 @@ class SimParams:
     # How long a retired container keeps its slot warm on its pool.
     container_warm_ticks: int = 20_000
 
+    # ---- fault injection + retry policy (all zero-default = off) -----------
+    # Transient function crashes: mean ticks between crash events (each
+    # kills the longest-running container; its pipeline re-queues).
+    crash_mtbf_ticks: float = 0.0
+    # Pool outages: mean ticks between outage events and the mean outage
+    # length. An outage kills every container on the struck pool, flushes
+    # that pool's cache, and masks its capacity from the scheduler until
+    # it recovers.
+    outage_mtbf_ticks: float = 0.0
+    outage_duration_ticks: float = 0.0
+    # Stragglers: probability a pipeline's containers run slowed down by
+    # ``straggler_factor`` (sampled per pipeline in the fault trace).
+    straggler_prob: float = 0.0
+    straggler_factor: float = 4.0
+    # Wall-clock deadline on a container (0 = none): a container that
+    # would run longer is killed at the deadline and its pipeline retried.
+    timeout_ticks: int = 0
+    # Retry policy for fault-killed / timed-out pipelines: re-queue at
+    # ``tick + base_backoff_ticks * 2**attempt`` until ``max_retries`` is
+    # exhausted, then FAILED.
+    max_retries: int = 0
+    base_backoff_ticks: int = 0
+    # Capacity of the pre-materialised crash/outage tables in the fault
+    # trace (events beyond it never fire).
+    max_fault_events: int = 64
+    # Per-priority SLO latency targets in seconds (BATCH, QUERY,
+    # INTERACTIVE); 0 = no target for that class (attainment reported as
+    # NaN by metrics.summarize).
+    slo_latency_s: tuple[float, ...] = (0.0, 0.0, 0.0)
+
     # ---- engine -------------------------------------------------------------
     engine: str = "event"              # "event" (lane-major core) | "python"
     max_containers: int = 64
@@ -181,6 +211,35 @@ class SimParams:
             self.cache_gb_per_pool > 0
             or self.scan_ticks_per_gb > 0
             or self.cold_start_ticks > 0
+        )
+
+    @property
+    def faults_active(self) -> bool:
+        """True when any fault/retry knob is switched on.
+
+        With everything at the 0 defaults the fault layer is compiled out
+        entirely: the faults-off engine is the identical XLA program
+        (digest-pinned in tests/captures/trace_off_digests.json)."""
+        return (
+            self.fault_events_active
+            or self.straggler_prob > 0
+            or self.timeout_ticks > 0
+        )
+
+    @property
+    def fault_events_active(self) -> bool:
+        """True when the engine needs the per-event fault pass (crash or
+        outage events can fire). Stragglers/timeouts alone ride the
+        container end ticks and need no extra event source."""
+        return self.crash_mtbf_ticks > 0 or self.outage_mtbf_ticks > 0
+
+    @property
+    def fault_trace_active(self) -> bool:
+        """True when the workload needs a materialised fault trace."""
+        return (
+            self.crash_mtbf_ticks > 0
+            or self.outage_mtbf_ticks > 0
+            or self.straggler_prob > 0
         )
 
     @property

@@ -10,7 +10,7 @@ path. See docs/scenarios.md for each family's story and knobs.
 Three layers:
 
 * family functions (``diurnal``/``bursty``/``heavy_tail``/
-  ``priority_skew``) — one trace each;
+  ``priority_skew``/``spot_churn``) — one trace each;
 * ``scenario_lane_batch`` — n_lanes independent draws of one family
   (per-lane seeds), the fleet Monte-Carlo shape;
 * ``scenario_fleet`` — the same, ingested: returns ``(workloads,
@@ -19,7 +19,7 @@ Three layers:
 >>> from repro.core import SimParams
 >>> from repro.core.scenarios import get_scenario, list_scenarios
 >>> list_scenarios()
-['bursty', 'diurnal', 'heavy_tail', 'priority_skew']
+['bursty', 'diurnal', 'heavy_tail', 'priority_skew', 'spot_churn']
 >>> fn = get_scenario("diurnal")
 >>> recs = fn(SimParams(duration=0.5), seed=0)
 >>> len(recs) > 0
@@ -32,7 +32,14 @@ from typing import Any, Callable, Sequence
 from ..params import SimParams
 from ..state import Workload
 from ..workload import workload_batch_from_traces
-from .families import bursty, diurnal, heavy_tail, priority_skew
+from .families import (
+    bursty,
+    diurnal,
+    heavy_tail,
+    priority_skew,
+    spot_churn,
+    spot_churn_params,
+)
 
 ScenarioFn = Callable[..., "list[dict[str, Any]]"]
 
@@ -41,6 +48,7 @@ SCENARIOS: dict[str, ScenarioFn] = {
     "bursty": bursty,
     "heavy_tail": heavy_tail,
     "priority_skew": priority_skew,
+    "spot_churn": spot_churn,
 }
 
 
@@ -132,4 +140,6 @@ __all__ = [
     "bursty",
     "heavy_tail",
     "priority_skew",
+    "spot_churn",
+    "spot_churn_params",
 ]

@@ -497,6 +497,26 @@ register_vector_scheduler_family("locality_pool")(
 # instances jit sees everywhere else (a bare `_priority_like(...)` call
 # here would build uncached duplicates and defeat the jit-identity
 # cache).
+def mask_down_pools(sim: SimState, tick: jax.Array) -> SimState:
+    """Scheduler view of ``sim`` with down pools' free capacity zeroed.
+
+    A pool is down while ``tick < pool_down_until`` (chaos layer, see
+    docs/faults.md). The engine hands the scheduler this masked *view*
+    — free-resource-driven schedulers then treat the pool as full and
+    place elsewhere — while the committed state keeps the true free
+    counts (the outage killed containers and refunded their resources;
+    recovery must not re-inflate capacity). Schedulers that read pool
+    *caps* rather than free counts (``naive``) are caught by the
+    engine's decision filter, which drops assignments onto down pools
+    before they commit.
+    """
+    down = tick < sim.pool_down_until
+    return sim._replace(
+        pool_cpu_free=jnp.where(down, 0.0, sim.pool_cpu_free),
+        pool_ram_free=jnp.where(down, 0.0, sim.pool_ram_free),
+    )
+
+
 priority_scheduler = get_vector_scheduler("priority")
 priority_pool_scheduler = get_vector_scheduler("priority_pool")
 cache_aware_scheduler = get_vector_scheduler("cache_aware")
@@ -507,6 +527,7 @@ __all__ = [
     "SchedDecision",
     "decision_loop",
     "empty_decision",
+    "mask_down_pools",
     "select_next_pipe",
     "select_victim",
     "naive_scheduler",

@@ -22,6 +22,27 @@ from .types import ContainerStatus, PipeStatus, TICKS_PER_SECOND
 INF_TICK = np.int32(2**31 - 1)
 
 
+class FaultTrace(NamedTuple):
+    """Pre-materialised fault events for one lane (chaos layer).
+
+    Like the arrival table, every fault is drawn up front from the seed —
+    no on-device RNG — so each engine replays the exact same faults.
+    Shapes: MF = ``params.max_fault_events``, MP = max_pipelines. Unused
+    slots hold ``INF_TICK`` (crash/outage times) or 1.0 (stragglers), so
+    an all-padding trace is inert.
+    """
+
+    crash_time: jax.Array    # [MF] int32 sorted crash ticks (INF = unused)
+    outage_start: jax.Array  # [MF] int32 sorted outage start ticks
+    outage_end: jax.Array    # [MF] int32 outage recovery ticks
+    outage_pool: jax.Array   # [MF] int32 struck pool per outage
+    straggler: jax.Array     # [MP] f32 per-pipeline slowdown factor (1 = none)
+
+    @property
+    def max_fault_events(self) -> int:
+        return self.crash_time.shape[-1]
+
+
 class Workload(NamedTuple):
     """Immutable arrival table produced by the workload generator.
 
@@ -41,6 +62,8 @@ class Workload(NamedTuple):
     pipe_out: jax.Array     # [MP] f32 GB — precomputed Σ op_out per pipe
     #   (precomputed once at generation so every engine reads identical
     #    bits instead of re-reducing f32 arrays in engine-specific order)
+    # ---- chaos layer: pre-materialised fault events (None = faults off) --
+    faults: "FaultTrace | None" = None
 
     @property
     def max_pipelines(self) -> int:
@@ -126,9 +149,47 @@ class SimState(NamedTuple):
     warm_starts: jax.Array        # [] int32 containers reusing a warm slot
     cold_start_tick_total: jax.Array  # [] int32 Σ cold-start ticks charged
 
+    # ---- chaos layer (fault injection + retry policy) --------------------
+    # NOTE: every field below was appended AFTER the pre-fault schema; the
+    # digest tools hash the legacy prefix by a pinned field list, so the
+    # faults-off captures in tests/captures/ stay valid verbatim.
+    pipe_retries: jax.Array       # [MP] int32 fault/timeout retry count
+    ctr_timed: jax.Array          # [MC] bool — ctr_end is a timeout deadline
+    pool_down_until: jax.Array    # [NP] int32 — pool down while tick < value
+    crash_cursor: jax.Array       # [] int32 crash-trace events consumed
+    outage_cursor: jax.Array      # [] int32 outage-trace events consumed
+    nxt_fault: jax.Array          # [] int32 next crash/outage/recovery tick
+    crash_events: jax.Array       # [] int32 crash events fired
+    outage_events: jax.Array      # [] int32 outage events fired
+    timeout_events: jax.Array     # [] int32 containers killed at the deadline
+    retry_events: jax.Array       # [] int32 fault/timeout re-queues
+    fault_kills: jax.Array        # [] int32 containers killed by crash/outage
+    wasted_ticks: jax.Array       # [] int32 Σ elapsed ticks of killed work
+    pool_down_s: jax.Array        # [] f32 ∫ #down-pools dt (pool-seconds)
+
     @property
     def max_containers(self) -> int:
         return self.ctr_status.shape[0]
+
+
+# the chaos-layer fields, in declaration order — the single source of
+# truth for the digest tools' pinned legacy field list (everything NOT
+# here predates fault injection, so tests/captures/ hashes stay valid)
+CHAOS_FIELDS = (
+    "pipe_retries",
+    "ctr_timed",
+    "pool_down_until",
+    "crash_cursor",
+    "outage_cursor",
+    "nxt_fault",
+    "crash_events",
+    "outage_events",
+    "timeout_events",
+    "retry_events",
+    "fault_kills",
+    "wasted_ticks",
+    "pool_down_s",
+)
 
 
 def init_state(params: SimParams) -> SimState:
@@ -195,6 +256,19 @@ def init_state(params: SimParams) -> SimState:
         cold_starts=jnp.asarray(0, i32),
         warm_starts=jnp.asarray(0, i32),
         cold_start_tick_total=jnp.asarray(0, i32),
+        pipe_retries=jnp.zeros((MP,), i32),
+        ctr_timed=jnp.zeros((MC,), bool),
+        pool_down_until=jnp.zeros((NP,), i32),
+        crash_cursor=jnp.asarray(0, i32),
+        outage_cursor=jnp.asarray(0, i32),
+        nxt_fault=jnp.asarray(INF_TICK, i32),
+        crash_events=jnp.asarray(0, i32),
+        outage_events=jnp.asarray(0, i32),
+        timeout_events=jnp.asarray(0, i32),
+        retry_events=jnp.asarray(0, i32),
+        fault_kills=jnp.asarray(0, i32),
+        wasted_ticks=jnp.asarray(0, i32),
+        pool_down_s=jnp.asarray(0.0, f32),
     )
 
 
@@ -327,6 +401,8 @@ def seconds(ticks: jax.Array) -> jax.Array:
 
 __all__ = [
     "INF_TICK",
+    "CHAOS_FIELDS",
+    "FaultTrace",
     "Workload",
     "SimState",
     "init_state",

@@ -40,6 +40,7 @@ from repro.parallel.compat import shard_map
 from .engine import _fleet_compiled, _quiet_partial_donation
 from .params import SimParams
 from .state import INF_TICK, SimState, Workload
+from .types import TICKS_PER_SECOND
 from .workload import generate_workload, workload_batch_from_traces  # noqa: F401  (re-export: batch ingestion pairs with fleet_run)
 
 
@@ -89,9 +90,19 @@ def pad_lanes(wls: Workload, n_lanes: int) -> Workload:
         return jnp.concatenate([x, fill], axis=0)
 
     padded = jax.tree.map(pad_leaf, wls)
-    return padded._replace(
+    padded = padded._replace(
         arrival=padded.arrival.at[F:].set(INF_TICK)
     )
+    if padded.faults is not None:
+        # padding lanes must stay single-event: a replicated fault trace
+        # would wake them for every crash/outage of lane 0
+        padded = padded._replace(
+            faults=padded.faults._replace(
+                crash_time=padded.faults.crash_time.at[F:].set(INF_TICK),
+                outage_start=padded.faults.outage_start.at[F:].set(INF_TICK),
+            )
+        )
+    return padded
 
 
 @functools.partial(
@@ -316,6 +327,13 @@ def fleet_run(
                 f"trace_capacity must be positive, got {trace_capacity}"
             )
     wls = workloads if seeds is None else make_workload_batch(params, seeds)
+    if params.fault_trace_active and wls.faults is None:
+        # trace/scenario batches carry no fault traces of their own;
+        # derive the per-lane chaos schedule from params.seed so replays
+        # under fault injection stay reproducible (docs/faults.md)
+        from .faults import attach_fault_traces
+
+        wls = attach_fault_traces(wls, params)
     F = wls.arrival.shape[0]
     n_shards = _resolve_shards(shard, F)
     tbufs = None
@@ -374,14 +392,19 @@ def _decode_traces(tbufs):
     return decode_fleet(tbufs, capacity=cap)
 
 
-def fleet_summary(states: SimState, params: SimParams) -> dict:
-    """Aggregate fleet statistics (mean/std across fleet members)."""
+def fleet_summary(states: SimState, params: SimParams, traces=None) -> dict:
+    """Aggregate fleet statistics (mean/std across fleet members).
+
+    ``traces`` (the list returned by ``fleet_run(..., trace=True)``) is
+    optional; when given, the summary also reports the fleet-total
+    recorder overflow counter ``events_dropped_total``.
+    """
     done = np.asarray(states.done_count)
     lat = np.asarray(states.sum_latency_s) / np.maximum(done, 1)
     util = np.asarray(states.util_cpu_s).sum(-1) / (
         params.total_cpus * params.duration
     )
-    return {
+    out = {
         "fleet_size": int(done.shape[0]),
         "throughput_per_s_mean": float(done.mean() / params.duration),
         "throughput_per_s_std": float(done.std() / params.duration),
@@ -399,7 +422,23 @@ def fleet_summary(states: SimState, params: SimParams) -> dict:
         "cache_hit_rate_mean": _fleet_hit_rate(states),
         "cold_starts_mean": float(np.asarray(states.cold_starts).mean()),
         "warm_starts_mean": float(np.asarray(states.warm_starts).mean()),
+        # ---- chaos layer (fleet means, zero when faults are off) ----------
+        "crash_events_mean": float(np.asarray(states.crash_events).mean()),
+        "outage_events_mean": float(np.asarray(states.outage_events).mean()),
+        "fault_kills_mean": float(np.asarray(states.fault_kills).mean()),
+        "timeouts_mean": float(np.asarray(states.timeout_events).mean()),
+        "retries_mean": float(np.asarray(states.retry_events).mean()),
+        "failed_mean": float(np.asarray(states.failed_count).mean()),
+        "wasted_work_s_mean": float(
+            np.asarray(states.wasted_ticks).mean() / TICKS_PER_SECOND
+        ),
+        "pool_down_s_mean": float(np.asarray(states.pool_down_s).mean()),
     }
+    if traces is not None:
+        out["events_dropped_total"] = int(
+            sum(t.events_dropped for t in traces)
+        )
+    return out
 
 
 def _fleet_hit_rate(states: SimState) -> float:

@@ -61,7 +61,7 @@ class Span:
     priority: int
     start_tick: int
     end_tick: int
-    end_kind: str  # "complete" | "preempt" | "oom" | "open"
+    end_kind: str  # "complete" | "preempt" | "oom" | "fault" | "timeout" | "open"
     cpus: float
     ram_gb: float
 
@@ -148,6 +148,8 @@ class TraceEvents:
             int(EventKind.COMPLETE): "complete",
             int(EventKind.PREEMPT): "preempt",
             int(EventKind.OOM): "oom",
+            int(EventKind.FAULT): "fault",
+            int(EventKind.TIMEOUT): "timeout",
         }
         for row in self.records:
             kind = int(row[COL_KIND])

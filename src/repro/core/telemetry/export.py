@@ -47,6 +47,11 @@ _INSTANT_KINDS = (
     EventKind.PREEMPT,
     EventKind.OOM,
     EventKind.REJECT,
+    EventKind.FAULT,
+    EventKind.POOL_DOWN,
+    EventKind.POOL_UP,
+    EventKind.TIMEOUT,
+    EventKind.RETRY,
 )
 
 

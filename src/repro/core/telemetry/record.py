@@ -59,20 +59,34 @@ class TraceBuffer(NamedTuple):
 
 
 def step_record_count(max_pipelines: int, max_containers: int,
-                      max_assignments: int) -> int:
+                      max_assignments: int,
+                      params: SimParams | None = None) -> int:
     """Candidate records one engine step can emit: arrivals + rejects
     over pipelines, oom/complete/preempt over containers, one scheduler
-    decision, and start/cold/hit/miss per assignment slot."""
-    return (
-        2 * max_pipelines + 3 * max_containers + 1 + 4 * max_assignments
-    )
+    decision, and start/cold/hit/miss per assignment slot. With fault
+    knobs on (``params`` given, see docs/faults.md) the chaos-layer
+    groups are appended: fault kills / timeouts over containers,
+    pool-down/-up markers over pools, and retries over pipelines."""
+    n = 2 * max_pipelines + 3 * max_containers + 1 + 4 * max_assignments
+    if params is not None:
+        if params.fault_events_active:
+            n += max_containers                 # FAULT
+        if params.timeout_ticks > 0:
+            n += max_containers                 # TIMEOUT
+        if params.outage_mtbf_ticks > 0:
+            n += 2 * params.num_pools           # POOL_DOWN + POOL_UP
+        if params.faults_active:
+            n += max_pipelines                  # RETRY
+    return n
 
 
 def step_block_rows(max_pipelines: int, max_containers: int,
-                    max_assignments: int) -> int:
+                    max_assignments: int,
+                    params: SimParams | None = None) -> int:
     """Rows in the per-step write block (the buffer's tail scratch)."""
     return min(
-        step_record_count(max_pipelines, max_containers, max_assignments),
+        step_record_count(max_pipelines, max_containers, max_assignments,
+                          params),
         TRACE_STEP_EVENTS,
     )
 
@@ -127,6 +141,7 @@ def record_step(
     ph,                  # fused phase-1 masks (repro.kernels.sim_tick)
     dec: SchedDecision,
     aux,                 # (aux_i [K,4], aux_f [K,5]) from apply_decision
+    fault_aux=None,      # chaos-layer step outputs from executor.apply_faults
 ) -> TraceBuffer:
     """Append one engine step's events to the lane's trace buffer."""
     (oomed, done, _st, _fc, _fr, fresh, _rel, _nr, _nl) = ph
@@ -134,8 +149,8 @@ def record_step(
     MP = wl.max_pipelines
     MC = pre.max_containers
     K = aux_i.shape[0]
-    n = step_record_count(MP, MC, K)
-    G = step_block_rows(MP, MC, K)
+    n = step_record_count(MP, MC, K, params)
+    G = step_block_rows(MP, MC, K, params)
     i32 = jnp.int32
 
     # step-wide gauges, sampled once on the post-step state and attached
@@ -156,16 +171,27 @@ def record_step(
     a_cpus, a_ram, a_hit, a_miss, a_out = (aux_f[:, j] for j in range(5))
     started = a_pipe >= 0
 
+    # a timed-out retirement is a TIMEOUT record, not a COMPLETE: split
+    # the phase-1 done mask on the deadline marker (knob-gated so the
+    # faults-off candidate table is byte-identical to before)
+    if params.timeout_ticks > 0:
+        timed = done & pre.ctr_timed
+        done_c = done & ~timed
+    else:
+        done_c = done
+
     # candidate columns, one concatenate per varying column; group order
     # (the fixed within-step record order, schema.py) is:
     #   arrival[MP] oom[MC] complete[MC] preempt[MC] reject[MP]
     #   sched_decision[1] start[K] cold_start[K] cache_hit[K] cache_miss[K]
-    mask = jnp.concatenate([
-        fresh, oomed, done, susp, rej, (chosen >= 0)[None],
+    # plus, knob-gated at the end (chaos layer, docs/faults.md):
+    #   fault[MC] timeout[MC] pool_down[NP] pool_up[NP] retry[MP]
+    mask_parts = [
+        fresh, oomed, done_c, susp, rej, (chosen >= 0)[None],
         started, started & (a_warm == 0), started & (a_hit > 0),
         started & (a_out > 0) & (a_miss > 0),
-    ]) & active
-    kind_col = jnp.asarray(np.concatenate([
+    ]
+    kind_parts = [
         np.full(MP, int(EventKind.ARRIVAL)),
         np.full(MC, int(EventKind.OOM)),
         np.full(MC, int(EventKind.COMPLETE)),
@@ -176,29 +202,88 @@ def record_step(
         np.full(K, int(EventKind.COLD_START)),
         np.full(K, int(EventKind.CACHE_HIT)),
         np.full(K, int(EventKind.CACHE_MISS)),
-    ]).astype(np.int32))
-    pipe_col = jnp.concatenate([
+    ]
+    pipe_parts = [
         pipes, pre.ctr_pipe, pre.ctr_pipe, st1.ctr_pipe, pipes,
         chosen[None], a_pipe, a_pipe, a_pipe, a_pipe,
-    ]).astype(i32)
-    # op is -1 everywhere except the decision record's runner-up priority
-    op_dec = jnp.where(runner >= 0, wl.prio[runner_c], -1).astype(i32)
-    op_col = jnp.full((n,), -1, i32).at[2 * MP + 3 * MC].set(op_dec)
+    ]
     neg1_mp = jnp.full((MP,), -1, i32)
-    pool_col = jnp.concatenate([
+    pool_parts = [
         neg1_mp, pre.ctr_pool, pre.ctr_pool, st1.ctr_pool, neg1_mp,
         dec.assign_pool[:1], a_pool, a_pool, a_pool, a_pool,
-    ]).astype(i32)
-    a_col = jnp.concatenate([
+    ]
+    a_parts = [
         wl.prio, slots, slots, slots, wl.prio, runner[None],
         _f32_bits(a_cpus), a_cold, _f32_bits(a_hit), _f32_bits(a_miss),
-    ]).astype(i32)
+    ]
     zeros_k = jnp.zeros((K,), i32)
-    b_col = jnp.concatenate([
+    b_parts = [
         wl.arrival, pre.ctr_prio, pre.ctr_prio, st1.ctr_prio,
         jnp.zeros((MP,), i32), wl.prio[chosen_c][None],
         _f32_bits(a_ram), zeros_k, zeros_k, zeros_k,
-    ]).astype(i32)
+    ]
+    # op is -1 everywhere except the decision record's runner-up priority
+    # and the FAULT group's cause code (set by offset below)
+    op_sets = [(2 * MP + 3 * MC,
+                jnp.where(runner >= 0, wl.prio[runner_c], -1).astype(i32))]
+
+    off = 2 * MP + 3 * MC + 1 + 4 * K
+    if params.fault_events_active:
+        (kill, kill_pipe, kill_pool, kill_cause, _kill_wasted,
+         down_new, up_now, pool_down_until) = fault_aux
+        mask_parts.append(kill)
+        kind_parts.append(np.full(MC, int(EventKind.FAULT)))
+        pipe_parts.append(kill_pipe)
+        pool_parts.append(kill_pool)
+        a_parts.append(slots)
+        # killed slots were RUNNING since step entry (phase 1 never
+        # starts containers), so pre still holds their priority
+        b_parts.append(pre.ctr_prio)
+        op_sets.append((slice(off, off + MC), kill_cause))
+        off += MC
+    if params.timeout_ticks > 0:
+        mask_parts.append(timed)
+        kind_parts.append(np.full(MC, int(EventKind.TIMEOUT)))
+        pipe_parts.append(pre.ctr_pipe)
+        pool_parts.append(pre.ctr_pool)
+        a_parts.append(slots)
+        b_parts.append(pre.ctr_prio)
+        off += MC
+    if params.outage_mtbf_ticks > 0:
+        NP = pool_down_until.shape[0]
+        pools = jnp.arange(NP, dtype=i32)
+        neg1_np = jnp.full((NP,), -1, i32)
+        zeros_np = jnp.zeros((NP,), i32)
+        mask_parts += [down_new, up_now]
+        kind_parts += [np.full(NP, int(EventKind.POOL_DOWN)),
+                       np.full(NP, int(EventKind.POOL_UP))]
+        pipe_parts += [neg1_np, neg1_np]
+        pool_parts += [pools, pools]
+        a_parts += [pool_down_until, zeros_np]
+        b_parts += [zeros_np, zeros_np]
+        off += 2 * NP
+    if params.faults_active:
+        # retried = attempt counter bumped this step (fault kill or
+        # timeout); the new count and the backoff release tick ride along
+        retried = st1.pipe_retries > pre.pipe_retries
+        mask_parts.append(retried)
+        kind_parts.append(np.full(MP, int(EventKind.RETRY)))
+        pipe_parts.append(pipes)
+        pool_parts.append(neg1_mp)
+        a_parts.append(st1.pipe_retries)
+        b_parts.append(st1.pipe_release)
+        off += MP
+    assert off == n
+
+    mask = jnp.concatenate(mask_parts) & active
+    kind_col = jnp.asarray(np.concatenate(kind_parts).astype(np.int32))
+    pipe_col = jnp.concatenate(pipe_parts).astype(i32)
+    pool_col = jnp.concatenate(pool_parts).astype(i32)
+    a_col = jnp.concatenate(a_parts).astype(i32)
+    b_col = jnp.concatenate(b_parts).astype(i32)
+    op_col = jnp.full((n,), -1, i32)
+    for idx, val in op_sets:
+        op_col = op_col.at[idx].set(val)
 
     # in-step compaction without touching candidate rows: scatter each
     # selected candidate's INDEX into its ordered block slot (a scalar

@@ -41,12 +41,22 @@ Payloads per kind (``op`` / ``a`` / ``b``)
  OOM               -1                     container slot          priority
  COMPLETE          -1                     container slot          priority
  REJECT            -1                     priority                0
+ FAULT             cause (0=crash,        container slot          priority
+                   1=outage)
+ POOL_DOWN         -1                     down-until tick         0
+ POOL_UP           -1                     0                       0
+ TIMEOUT           -1                     container slot          priority
+ RETRY             -1                     attempt number          release tick
 ================  =====================  ======================  =================
 
 Within one engine step, records appear in the fixed order arrivals ->
 ooms -> completes -> preempts -> rejects -> scheduler decision ->
 starts -> cold-starts -> cache hits -> cache misses, and steps append
 chronologically, so a lane's record array is time-ordered as stored.
+The chaos-layer kinds (FAULT, TIMEOUT, POOL_DOWN, POOL_UP, RETRY,
+emitted only when the matching fault knobs are on — see docs/faults.md)
+extend that order at the end of each step: faults -> timeouts ->
+pool-downs -> pool-ups -> retries.
 """
 from __future__ import annotations
 
@@ -66,6 +76,11 @@ class EventKind(enum.IntEnum):
     OOM = 7             # container killed by the RAM model
     COMPLETE = 8        # pipeline finished
     REJECT = 9          # pipeline failed back to the user
+    FAULT = 10          # container killed by the chaos layer (crash/outage)
+    POOL_DOWN = 11      # pool struck by an outage (capacity masked)
+    POOL_UP = 12        # pool recovered from its outage
+    TIMEOUT = 13        # container killed at its wall-clock deadline
+    RETRY = 14          # faulted/timed-out pipeline re-queued with backoff
 
 
 KIND_NAMES = tuple(k.name.lower() for k in EventKind)

@@ -44,7 +44,10 @@ def utilization_timeline(res: SimResult, *, width: int = 64) -> str:
     return "\n".join(lines)
 
 
-_GANTT_END = {"complete": "C", "preempt": "P", "oom": "O", "open": ">"}
+_GANTT_END = {
+    "complete": "C", "preempt": "P", "oom": "O", "open": ">",
+    "fault": "X", "timeout": "T",
+}
 
 
 def pipeline_gantt(res: SimResult, *, width: int = 64) -> str:
@@ -53,8 +56,9 @@ def pipeline_gantt(res: SimResult, *, width: int = 64) -> str:
 
     Needs a telemetry trace (``run(..., trace=True)``); each span is a
     run of ``=`` from its START to its end event, terminated by ``C``
-    (complete), ``P`` (preempt), ``O`` (oom) or ``>`` (still running at
-    the end of the trace). Priorities are taken from the spans' end
+    (complete), ``P`` (preempt), ``O`` (oom), ``X`` (killed by an
+    injected fault), ``T`` (wall-clock timeout) or ``>`` (still running
+    at the end of the trace). Priorities are taken from the spans' end
     records.
     """
     trace = getattr(res, "trace", None)

@@ -134,6 +134,15 @@ def generate_workload(params: SimParams, key: jax.Array | None = None) -> Worklo
     alpha_ix = jax.random.categorical(k_alpha, jnp.log(aprobs), shape=(MP, MO))
     alpha = jnp.asarray(params.alpha_choices, jnp.float32)[alpha_ix]
 
+    # --- fault trace (chaos layer; fold-in 8..12, see faults.py) ------------
+    # generated from the SAME key, so the draws above stay bitwise-identical
+    # whether faults are on or off (faults=None when every knob is 0).
+    faults = None
+    if params.fault_trace_active:
+        from .faults import generate_fault_trace
+
+        faults = generate_fault_trace(params, key)
+
     zero_f = jnp.zeros((MP, MO), jnp.float32)
     op_out = jnp.where(op_valid, out, zero_f).astype(jnp.float32)
     return Workload(
@@ -147,6 +156,7 @@ def generate_workload(params: SimParams, key: jax.Array | None = None) -> Worklo
         op_alpha=jnp.where(op_valid, alpha, zero_f),
         op_out=op_out,
         pipe_out=jnp.sum(op_out, axis=1, dtype=jnp.float32),
+        faults=faults,
     )
 
 

@@ -4,11 +4,12 @@ checkpoint-cadence policy.
 At 1000+ nodes, mean-time-between-failures is hours, not days; the
 runtime must (a) detect dead/slow hosts, (b) restart from the newest
 checkpoint on a possibly-smaller mesh, and (c) choose a checkpoint
-cadence that balances write cost against expected lost work. (c) is a
-*scheduling policy* question — exactly what the paper's simulator is
-for — so ``advise_checkpoint_cadence`` runs a deterministic Eudoxia
-simulation of the failure/restart process instead of a closed-form
-guess.
+cadence that balances write cost against expected lost work. (c) is
+answered by ``advise_checkpoint_cadence`` with a small purpose-built
+replay of the failure/restart process — deterministic, but NOT a run
+of the Eudoxia engine (see its docstring for why, and for how the
+failure model is kept honest against the engine's chaos layer,
+docs/faults.md).
 """
 from __future__ import annotations
 
@@ -84,15 +85,25 @@ def advise_checkpoint_cadence(
     candidates: tuple[int, ...] = (10, 25, 50, 100, 250, 500),
     seed: int = 0,
 ) -> dict:
-    """Pick the checkpoint interval that maximises useful-step throughput
-    under failures, by simulating the training job in Eudoxia.
+    """Pick the checkpoint interval that minimises wall-clock time to
+    ``horizon_steps`` useful steps under failures.
 
-    The training job is modelled as a pipeline of `horizon_steps`
-    sequential ops; failures arrive as preemptions at exponential times;
-    on failure the job restarts from the last checkpoint (losing the
-    steps since) and pays `restart_s`. Each candidate interval is one
-    deterministic simulation — the paper's "cheap mechanism to evaluate
-    scheduling policies" applied to our own runtime.
+    This is a purpose-built deterministic replay, not a Eudoxia engine
+    run: the engine simulates many *independent* pipelines under a
+    scheduler, while cadence choice needs one *sequential* job with
+    checkpoint/restart state the engine deliberately does not model.
+    What IS shared with the engine is the failure process — exponential
+    inter-failure gaps, exactly how the chaos layer's
+    ``repro.core.faults.generate_fault_trace`` draws crash times
+    (docs/faults.md) — and tests/test_faults.py cross-checks the two:
+    lost work predicted here and the engine's ``wasted_ticks`` counter
+    under crash injection must both grow as MTBF shrinks.
+
+    The job replays as ``horizon_steps`` sequential steps; failures
+    arrive at exponential times; each failure rolls back to the last
+    checkpoint (losing the steps since) and pays ``restart_s``; each
+    checkpoint pays ``ckpt_write_s``. One deterministic replay per
+    candidate interval.
     """
     rng = np.random.default_rng(seed)
     fail_times = np.cumsum(

@@ -34,6 +34,20 @@ COMPARE_FIELDS = [
     "cache_bytes",
     "cache_last",
     "pool_cache_used",
+    # ---- chaos layer: exact agreement expected (same int arithmetic and
+    # f32 backoff/stretch formulas in both engines) ------------------------
+    "pipe_retries",
+    "ctr_timed",
+    "pool_down_until",
+    "crash_cursor",
+    "outage_cursor",
+    "nxt_fault",
+    "crash_events",
+    "outage_events",
+    "timeout_events",
+    "retry_events",
+    "fault_kills",
+    "wasted_ticks",
 ]
 
 
@@ -70,6 +84,10 @@ def _assert_states_equal(a, b, ctx=""):
     # float accumulators agree loosely (different summation orders)
     np.testing.assert_allclose(
         np.asarray(a.util_cpu_s), np.asarray(b.util_cpu_s), rtol=1e-3, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(a.pool_down_s), np.asarray(b.pool_down_s),
+        rtol=1e-3, atol=1e-4,
     )
 
 

@@ -1,0 +1,409 @@
+"""Chaos-layer guarantees (docs/faults.md).
+
+Four properties the fault-injection subsystem stands on:
+
+* **Off is free**: with every fault knob at its zero default, the chaos
+  fields of the final state are deterministic zeros/INF — combined with
+  the pinned-field digests of tests/test_telemetry.py, a default run is
+  bitwise what it was before the chaos layer existed.
+* **One semantics**: the fused lane-major engine and the Python
+  reference agree exactly on every chaos counter, retry count and final
+  pipeline status under crashes, outages, timeouts and stragglers.
+* **Deterministic chaos**: same (params, seed) -> bitwise-identical
+  faults, kills and recoveries; the fault trace round-trips through its
+  record form.
+* **The retry contract**: exhausted budgets FAIL, budgets > 0 absorb
+  transient kills via exponential-backoff re-queues whose release times
+  follow ``tick + base_backoff_ticks * 2**attempt`` exactly.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (
+    SimParams,
+    fleet_run,
+    generate_workload,
+    run,
+)
+from repro.core.faults import (
+    attach_fault_trace,
+    fault_trace_from_records,
+    fault_trace_to_records,
+    generate_fault_trace,
+)
+from repro.core.state import CHAOS_FIELDS, INF_TICK
+from repro.core.telemetry.schema import (
+    COL_A,
+    COL_B,
+    COL_PIPE,
+    COL_POOL,
+    COL_TICK,
+    EventKind,
+)
+
+CHAOS = dict(
+    crash_mtbf_ticks=500.0,
+    outage_mtbf_ticks=1_500.0,
+    outage_duration_ticks=300.0,
+    straggler_prob=0.15,
+    timeout_ticks=30_000,
+    max_retries=3,
+    base_backoff_ticks=40,
+)
+
+
+def _params(seed=0, algo="priority", duration=0.04, **extra):
+    return SimParams(
+        duration=duration,
+        seed=seed,
+        scheduling_algo=algo,
+        num_pools=1 if algo == "naive" else 2,
+        waiting_ticks_mean=400.0,
+        op_base_seconds_mean=0.005,
+        op_base_seconds_sigma=1.0,
+        max_pipelines=32,
+        max_containers=32,
+        **extra,
+    )
+
+
+CHAOS_COMPARE = [
+    "pipe_status",
+    "pipe_completion",
+    "pipe_retries",
+    "done_count",
+    "failed_count",
+    "oom_events",
+    "preempt_events",
+    "crash_events",
+    "outage_events",
+    "timeout_events",
+    "retry_events",
+    "fault_kills",
+    "wasted_ticks",
+    "pool_down_until",
+    "crash_cursor",
+    "outage_cursor",
+    "ctr_timed",
+]
+
+
+def _assert_chaos_equal(a, b, ctx=""):
+    for f in CHAOS_COMPARE:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)),
+            np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: field {f}",
+        )
+    np.testing.assert_allclose(
+        np.asarray(a.pool_down_s), np.asarray(b.pool_down_s),
+        rtol=1e-3, atol=1e-4, err_msg=f"{ctx}: pool_down_s",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Off is free.
+# ---------------------------------------------------------------------------
+def test_faults_off_state_is_pristine():
+    """A default run leaves every chaos field at its init value — the
+    structural half of the pinned-digest guarantee."""
+    res = run(_params())
+    state = res.state
+    assert res.workload.faults is None  # no trace even materialised
+    for f in CHAOS_FIELDS:
+        a = np.asarray(getattr(state, f))
+        if f == "nxt_fault":
+            assert (a == INF_TICK).all(), f
+        else:
+            assert not a.any(), f"{f} changed in a faults-off run"
+    s = res.summary()
+    assert s["faults_injected"] == s["retries"] == s["timeouts"] == 0
+    assert np.isnan(s["mttr_s"])
+
+
+# ---------------------------------------------------------------------------
+# One semantics: fused == Python reference under every fault class.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "knobs",
+    [
+        dict(crash_mtbf_ticks=500.0, max_retries=3, base_backoff_ticks=40),
+        dict(outage_mtbf_ticks=1_200.0, outage_duration_ticks=300.0,
+             max_retries=3, base_backoff_ticks=40),
+        dict(timeout_ticks=25_000, max_retries=2, base_backoff_ticks=30),
+        dict(straggler_prob=0.3),
+        CHAOS,
+    ],
+    ids=["crash", "outage", "timeout", "straggler", "all"],
+)
+@pytest.mark.parametrize("algo", ["priority", "naive"])
+def test_event_equals_python_under_faults(knobs, algo):
+    params = _params(seed=5, algo=algo, **knobs)
+    wl = generate_workload(params)
+    r_event = run(params, workload=wl, engine="event")
+    r_python = run(params, workload=wl, engine="python")
+    _assert_chaos_equal(
+        r_event.state, r_python.state, ctx=f"{algo}/{sorted(knobs)}"
+    )
+
+
+@settings(
+    max_examples=10,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    seed=st.integers(0, 2**16),
+    algo=st.sampled_from(["naive", "priority", "priority_pool"]),
+    crash_mtbf=st.sampled_from([0.0, 400.0, 2_000.0]),
+    outage_mtbf=st.sampled_from([0.0, 1_500.0]),
+    max_retries=st.integers(0, 4),
+)
+def test_event_equals_python_under_faults_property(
+    seed, algo, crash_mtbf, outage_mtbf, max_retries
+):
+    params = _params(
+        seed=seed,
+        algo=algo,
+        crash_mtbf_ticks=crash_mtbf,
+        outage_mtbf_ticks=outage_mtbf,
+        outage_duration_ticks=250.0 if outage_mtbf else 0.0,
+        max_retries=max_retries,
+        base_backoff_ticks=25,
+        timeout_ticks=40_000,
+    )
+    wl = generate_workload(params)
+    r_event = run(params, workload=wl, engine="event")
+    r_python = run(params, workload=wl, engine="python")
+    _assert_chaos_equal(
+        r_event.state, r_python.state,
+        ctx=f"{algo}/s{seed}/c{crash_mtbf}/o{outage_mtbf}/r{max_retries}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic chaos.
+# ---------------------------------------------------------------------------
+def test_same_seed_same_faults():
+    params = _params(seed=9, **CHAOS)
+    a, b = run(params).state, run(params).state
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)), err_msg=f
+        )
+
+
+def test_fault_trace_roundtrip():
+    params = _params(seed=3, **CHAOS)
+    ft = generate_fault_trace(params)
+    back = fault_trace_from_records(fault_trace_to_records(ft), params)
+    for f in ft._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ft, f)), np.asarray(getattr(back, f)), err_msg=f
+        )
+
+
+def test_fleet_lanes_draw_independent_faults():
+    from repro.core import make_workload_batch
+
+    params = _params(seed=2, crash_mtbf_ticks=400.0, max_retries=3,
+                     base_backoff_ticks=40)
+    batch = make_workload_batch(params, seeds=[0, 1, 2, 3])
+    assert batch.faults is not None
+    crash = np.asarray(batch.faults.crash_time)
+    # per-lane keys -> independent chaos schedules, not one broadcast
+    assert any(
+        not np.array_equal(crash[0], crash[i]) for i in range(1, 4)
+    )
+    states = fleet_run(params, seeds=[0, 1, 2, 3])
+    assert np.asarray(states.crash_events).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# The retry contract.
+# ---------------------------------------------------------------------------
+def test_retry_backoff_schedule_exact():
+    """Every RETRY record's release tick obeys
+    tick + max(base_backoff_ticks * 2**(attempt-1), 1) — the recorded
+    attempt is the post-increment count."""
+    params = _params(seed=11, **CHAOS)
+    res = run(params, trace=True, trace_capacity=8192)
+    assert res.trace.events_dropped == 0
+    retries = res.trace.of_kind(EventKind.RETRY)
+    assert len(retries) > 0, "config too quiet: no retries recorded"
+    base = params.base_backoff_ticks
+    for row in retries:
+        tick, attempt, release = (
+            int(row[COL_TICK]), int(row[COL_A]), int(row[COL_B])
+        )
+        assert attempt >= 1
+        want = tick + max(base * 2 ** (attempt - 1), 1)
+        assert release == want, (
+            f"RETRY at {tick}, attempt {attempt}: release {release} != {want}"
+        )
+    # per-pipe attempts are strictly increasing (re-queue ordering)
+    by_pipe = {}
+    for row in retries:
+        by_pipe.setdefault(int(row[COL_PIPE]), []).append(int(row[COL_A]))
+    for pipe, attempts in by_pipe.items():
+        assert attempts == sorted(attempts), f"pipe {pipe}: {attempts}"
+        assert len(set(attempts)) == len(attempts), f"pipe {pipe}: {attempts}"
+
+
+def test_retry_budget_contract():
+    """With a retry budget, transient kills are absorbed (zero FAILED);
+    with max_retries=0, the same chaos fails pipelines to the user."""
+    chaos = dict(crash_mtbf_ticks=400.0, base_backoff_ticks=40)
+    lenient = run(_params(seed=4, max_retries=5, **chaos)).summary()
+    strict = run(_params(seed=4, max_retries=0, **chaos)).summary()
+    assert lenient["fault_kills"] > 0, "config too quiet: no kills"
+    assert lenient["failed"] == 0
+    assert lenient["retries"] > 0
+    assert strict["failed"] > 0
+    assert strict["retries"] == 0
+
+
+def test_timeouts_kill_and_requeue():
+    params = _params(
+        seed=8, timeout_ticks=2_000, max_retries=2, base_backoff_ticks=30
+    )
+    s = run(params).summary()
+    assert s["timeouts"] > 0, "config too quiet: no timeouts"
+    assert s["retries"] > 0
+    assert s["wasted_work_s"] > 0
+    # timed-out work never counts as DONE throughput at the deadline
+    assert s["done"] + s["failed"] + s["in_flight"] == s["submitted"]
+
+
+def test_no_assignments_to_down_pools():
+    """Between POOL_DOWN and recovery, no container starts on the pool."""
+    params = _params(
+        seed=6, algo="priority_pool",
+        outage_mtbf_ticks=800.0, outage_duration_ticks=400.0,
+        max_retries=3, base_backoff_ticks=40,
+    )
+    res = run(params, trace=True, trace_capacity=8192)
+    assert res.trace.events_dropped == 0
+    downs = res.trace.of_kind(EventKind.POOL_DOWN)
+    assert len(downs) > 0, "config too quiet: no outages"
+    starts = res.trace.of_kind(EventKind.START)
+    for d in downs:
+        pool, t0, until = int(d[COL_POOL]), int(d[COL_TICK]), int(d[COL_A])
+        bad = [
+            int(s[COL_TICK]) for s in starts
+            if int(s[COL_POOL]) == pool and t0 <= int(s[COL_TICK]) < until
+        ]
+        assert not bad, (
+            f"pool {pool} down [{t0}, {until}) but containers started at {bad}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Next-event oracle under faults: the nxt_fault register agrees with a
+# recompute-from-scratch at every event of a faults-on run.
+# ---------------------------------------------------------------------------
+def test_next_event_registers_match_oracle_under_faults():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import engine as engine_mod
+    from repro.core import executor
+    from repro.core.engine import _filter_down_pool_assignments
+    from repro.core.scheduler import (
+        get_vector_scheduler,
+        get_vector_scheduler_init,
+        mask_down_pools,
+    )
+    from repro.core.state import init_state
+    from repro.kernels.sim_tick import fleet_tick
+
+    params = _params(seed=13, algo="priority", **CHAOS)
+    wl = generate_workload(params)
+    assert wl.faults is not None
+    scheduler_fn = get_vector_scheduler("priority", early_exit=True)
+    ss = get_vector_scheduler_init("priority")(params)
+    arr_sorted = engine_mod._sorted_arrivals(wl.arrival)
+    horizon = jnp.int32(params.horizon_ticks)
+
+    @jax.jit
+    def step(state, ss):
+        tick = state.tick
+        ph = fleet_tick(
+            state.ctr_status[None], state.ctr_end[None], state.ctr_oom[None],
+            state.ctr_cpus[None], state.ctr_ram[None], state.ctr_pool[None],
+            state.pipe_status[None], wl.arrival[None],
+            state.pipe_release[None], tick[None],
+            num_pools=params.num_pools,
+        )
+        ph_l = jax.tree.map(lambda x: x[0], ph)
+        # recompute the oracle on the exact state the engine's register
+        # read sees (post phase 1 + faults + decision application)
+        st1 = executor.apply_fused_phase1(state, wl, tick, params, ph_l)
+        st1, _ = executor.apply_faults(st1, wl, tick, params)
+        view = mask_down_pools(st1, tick)
+        ss1, dec = scheduler_fn(ss, view, wl, params)
+        dec = _filter_down_pool_assignments(dec, st1, tick, params)
+        st2 = executor.apply_decision(
+            st1, wl, dec, tick, params, early_exit=True
+        )
+        acted = (
+            jnp.any(dec.suspend)
+            | jnp.any(dec.reject)
+            | jnp.any(dec.assign_pipe >= 0)
+        )
+        nxt_full = engine_mod._next_event(st2, wl, tick, acted)
+        new_state, new_ss = engine_mod.lane_event_step(
+            params, horizon, scheduler_fn, state, ss, wl, arr_sorted, tick,
+            ph_l,
+        )
+        return new_state, new_ss, nxt_full
+
+    state = init_state(params)
+    n_events = 0
+    while int(state.tick) < params.horizon_ticks:
+        state, ss, nxt_full = step(state, ss)
+        assert int(state.tick) == min(int(nxt_full), params.horizon_ticks), (
+            f"event {n_events}: engine jumped to {int(state.tick)}, "
+            f"oracle says {int(nxt_full)}"
+        )
+        n_events += 1
+    assert n_events > 10
+    assert int(state.crash_events) > 0 or int(state.outage_events) > 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: advise_checkpoint_cadence shares the engine's failure model.
+# ---------------------------------------------------------------------------
+def test_checkpoint_cadence_crosschecks_engine_wasted_work():
+    """The cadence advisor's failure model (exponential gaps, lost work
+    since the last safe point) must move with MTBF the same way the real
+    engine's wasted_ticks counter does under crash injection: less MTBF,
+    more lost work — and a shorter recommended interval."""
+    from repro.runtime.failures import advise_checkpoint_cadence
+
+    frequent = advise_checkpoint_cadence(
+        step_time_s=0.1, ckpt_write_s=0.5, restart_s=2.0,
+        mtbf_steps=50.0, horizon_steps=500, seed=0,
+    )
+    rare = advise_checkpoint_cadence(
+        step_time_s=0.1, ckpt_write_s=0.5, restart_s=2.0,
+        mtbf_steps=5_000.0, horizon_steps=500, seed=0,
+    )
+    assert frequent["best_interval"] <= rare["best_interval"]
+    assert (
+        min(frequent["total_time_s"].values())
+        >= min(rare["total_time_s"].values())
+    )
+
+    wasted = []
+    for mtbf in (300.0, 3_000.0):
+        s = run(
+            _params(seed=1, crash_mtbf_ticks=mtbf, max_retries=6,
+                    base_backoff_ticks=40)
+        ).summary()
+        wasted.append(s["wasted_work_s"])
+    assert wasted[0] > wasted[1], (
+        "engine wasted work should grow as crash MTBF shrinks, like the "
+        f"advisor's lost-work model: {wasted}"
+    )

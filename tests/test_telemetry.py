@@ -57,9 +57,18 @@ def _params(algo, dp, **extra):
     )
 
 
-def _digest(state) -> str:
+def _digest(state, fields=None) -> str:
+    # default to the PRE-FAULT field list: the faults-off captures were
+    # recorded before the chaos layer appended its SimState fields, and
+    # with every fault knob at its zero default the legacy fields are
+    # bitwise unchanged (test_faults.py asserts the new fields are
+    # deterministic zeros). Chaos digests pass fields=state._fields.
+    if fields is None:
+        from repro.core.state import CHAOS_FIELDS
+
+        fields = [f for f in state._fields if f not in CHAOS_FIELDS]
     h = hashlib.sha256()
-    for f in state._fields:
+    for f in fields:
         a = np.ascontiguousarray(np.asarray(getattr(state, f)))
         h.update(f.encode())
         h.update(str(a.dtype).encode())
@@ -68,7 +77,7 @@ def _digest(state) -> str:
     return h.hexdigest()
 
 
-def _capture():
+def _capture(key="digests"):
     import platform
 
     import jax
@@ -87,7 +96,9 @@ def _capture():
             f"({payload['backend']}/{payload['machine']}); digests are "
             "only comparable on the recording machine class"
         )
-    return payload["digests"]
+    if key not in payload:
+        pytest.skip(f"capture predates the {key!r} section")
+    return payload[key]
 
 
 def _run_config(algo, dp, path, trace):
@@ -122,6 +133,43 @@ def test_states_match_pretelemetry_capture(algo, dp, path):
     assert _digest(_run_config(algo, dp, path, trace=True)) == want, (
         f"{algo}/dp={dp}/{path}: enabling the trace changed the simulation"
     )
+
+
+# mirrors tools/record_telemetry_capture.py:CHAOS — the faults-ON grid
+_CHAOS = dict(
+    crash_mtbf_ticks=400.0,
+    outage_mtbf_ticks=1_200.0,
+    outage_duration_ticks=250.0,
+    straggler_prob=0.1,
+    timeout_ticks=40_000,
+    max_retries=3,
+    base_backoff_ticks=50,
+)
+
+
+@pytest.mark.parametrize("algo", ["naive", "priority_pool"])
+@pytest.mark.parametrize("path", ["run", "fleet"])
+def test_chaos_states_match_capture(algo, path):
+    """Faults-ON runs are bitwise-reproducible: every SimState field
+    (chaos counters included) hashes to the recorded capture, with and
+    without the trace recorder."""
+    digests = _capture("digests_chaos")
+    want = digests[f"{algo}/chaos/{path}"]
+    params = _params(algo, dp=True).replace(seed=7, **_CHAOS)
+
+    def run_path(trace):
+        kw = dict(trace=True, trace_capacity=2048) if trace else {}
+        if path == "run":
+            return run(params, **kw).state
+        out = fleet_run(params, FLEET_SEEDS, shard=None, **kw)
+        return out[0] if trace else out
+
+    for trace in (False, True):
+        state = run_path(trace)
+        assert _digest(state, fields=state._fields) == want, (
+            f"{algo}/chaos/{path} trace={trace}: faults-on state diverged "
+            "from the recorded capture"
+        )
 
 
 # ---------------------------------------------------------------------------

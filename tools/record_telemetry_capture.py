@@ -7,6 +7,18 @@ The telemetry suite recomputes the digests on the same grid and asserts
 bitwise identity, proving the trace machinery's off path never perturbs
 the simulation.
 
+Two digest families live in the capture:
+
+* ``digests`` — the faults-off grid, hashing the PRE-FAULT field list
+  (``SimState._fields`` minus ``state.CHAOS_FIELDS``). Pinning the list
+  keeps these digests valid verbatim across chaos-layer schema growth:
+  with every fault knob at its zero default the legacy fields are
+  bitwise what they were before the chaos layer existed (and the new
+  fields are deterministic zeros, asserted separately by
+  tests/test_faults.py).
+* ``digests_chaos`` — a faults-ON grid, hashing ALL fields: the
+  reproducibility pin for the chaos layer itself.
+
 Digests are only comparable on the machine class that recorded them
 (same backend, same arch): the capture file records both and the test
 skips on mismatch rather than chasing cross-platform ULPs.
@@ -56,11 +68,23 @@ def capture_params(algo: str, dp: bool):
     )
 
 
-def state_digest(state) -> str:
+CHAOS = dict(
+    crash_mtbf_ticks=400.0,
+    outage_mtbf_ticks=1_200.0,
+    outage_duration_ticks=250.0,
+    straggler_prob=0.1,
+    timeout_ticks=40_000,
+    max_retries=3,
+    base_backoff_ticks=50,
+)
+CHAOS_SCHEDULERS = ["naive", "priority_pool"]
+
+
+def state_digest(state, fields=None) -> str:
     import numpy as np
 
     h = hashlib.sha256()
-    for f in state._fields:
+    for f in fields if fields is not None else state._fields:
         a = np.ascontiguousarray(np.asarray(getattr(state, f)))
         h.update(f.encode())
         h.update(str(a.dtype).encode())
@@ -69,25 +93,50 @@ def state_digest(state) -> str:
     return h.hexdigest()
 
 
+def legacy_fields():
+    """The pre-fault SimState field list the faults-off digests hash."""
+    from repro.core.state import CHAOS_FIELDS, SimState
+
+    return [f for f in SimState._fields if f not in CHAOS_FIELDS]
+
+
 def run_grid() -> dict[str, str]:
     from repro.core import fleet_run, run
 
+    fields = legacy_fields()
     digests: dict[str, str] = {}
     for algo in ALL_SCHEDULERS:
         for dp in (False, True):
             params = capture_params(algo, dp).replace(seed=7)
             tag = f"{algo}/dp={int(dp)}"
-            digests[f"{tag}/run"] = state_digest(run(params).state)
+            digests[f"{tag}/run"] = state_digest(run(params).state, fields)
             digests[f"{tag}/fleet"] = state_digest(
-                fleet_run(params, FLEET_SEEDS, shard=None)
+                fleet_run(params, FLEET_SEEDS, shard=None), fields
             )
             digests[f"{tag}/shard"] = state_digest(
-                fleet_run(params, FLEET_SEEDS, shard="auto", bin_lanes=True)
+                fleet_run(params, FLEET_SEEDS, shard="auto", bin_lanes=True),
+                fields,
             )
             digests[f"{tag}/shard_nobin"] = state_digest(
-                fleet_run(params, FLEET_SEEDS, shard="auto", bin_lanes=False)
+                fleet_run(params, FLEET_SEEDS, shard="auto", bin_lanes=False),
+                fields,
             )
             print(f"captured {tag}", flush=True)
+    return digests
+
+
+def run_chaos_grid() -> dict[str, str]:
+    from repro.core import fleet_run, run
+
+    digests: dict[str, str] = {}
+    for algo in CHAOS_SCHEDULERS:
+        params = capture_params(algo, dp=True).replace(seed=7, **CHAOS)
+        tag = f"{algo}/chaos"
+        digests[f"{tag}/run"] = state_digest(run(params).state)
+        digests[f"{tag}/fleet"] = state_digest(
+            fleet_run(params, FLEET_SEEDS, shard=None)
+        )
+        print(f"captured {tag}", flush=True)
     return digests
 
 
@@ -100,10 +149,14 @@ def main() -> None:
         "n_devices": jax.local_device_count(),
         "fleet_seeds": FLEET_SEEDS,
         "digests": run_grid(),
+        "digests_chaos": run_chaos_grid(),
     }
     CAPTURE.parent.mkdir(parents=True, exist_ok=True)
     CAPTURE.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"wrote {CAPTURE} ({len(payload['digests'])} configs)")
+    print(
+        f"wrote {CAPTURE} ({len(payload['digests'])} trace-off + "
+        f"{len(payload['digests_chaos'])} chaos configs)"
+    )
 
 
 if __name__ == "__main__":
