@@ -42,6 +42,7 @@ from repro.core.scheduler import (
 )
 from repro.core.state import broadcast_lanes, init_state
 from repro.core.sweep import make_workload_batch
+from repro.kernels.dispatch import resolved_impl
 from repro.kernels.sched_select import masked_lex_argmin
 from repro.kernels.sim_tick import fleet_tick
 
@@ -407,6 +408,65 @@ def selection_bench(n_rounds: int = 24, reps: int = 7) -> dict:
     return out
 
 
+def apply_bench(n_rounds: int = 24, reps: int = 7) -> dict:
+    """Decision-application microbench: the seed's fixed ``fori_loop``
+    of per-slot ``lax.cond`` commits vs the fused early-exit rows loop
+    + ``state_update.assign_gather`` landing, on the engine's own
+    shapes — 64 lanes of real scheduler decisions applied to mid-flight
+    states. Like ``selection_bench`` the whole drain runs inside one
+    jitted ``lax.scan`` (the tick offset threads the carry so the body
+    is not loop-invariant), so the clock sees the commit chain's
+    compute rather than per-call dispatch. Feeds the ``apply`` row of
+    BENCH_fleet.json.
+    """
+    params = _fleet_params(smoke=False)
+    F = 64
+    scheduler_fn = get_vector_scheduler("priority", early_exit=True)
+    ss0 = broadcast_lanes(get_vector_scheduler_init("priority")(params), F)
+    wls = make_workload_batch(params, list(range(F)))
+    states = broadcast_lanes(init_state(params), F)
+    # land the early arrivals so the scheduler has real work to hand out
+    tick = jnp.full((F,), 2_000, jnp.int32)
+    states = jax.jit(jax.vmap(executor.process_arrivals))(states, wls, tick)
+    states = states._replace(tick=tick)
+    _, decs = jax.jit(
+        jax.vmap(lambda ss, s, w: scheduler_fn(ss, s, w, params))
+    )(ss0, states, wls)
+
+    def make(early_exit):
+        @jax.jit
+        def fn():
+            def round_(tok, _):
+                out = jax.vmap(
+                    lambda s, w, d, t: executor.apply_decision(
+                        s, w, d, t, params, early_exit=early_exit
+                    )
+                )(states, wls, decs, states.tick + tok)
+                return tok + 1, jnp.sum(out.done_count) + jnp.sum(
+                    out.ctr_pipe
+                )
+            _, outs = jax.lax.scan(
+                round_, jnp.int32(0), None, length=n_rounds
+            )
+            return outs
+        return fn
+
+    legacy, fused = make(early_exit=False), make(early_exit=True)
+    out = {}
+    for name, fn in (("legacy", legacy), ("fused", fused)):
+        jax.block_until_ready(fn())
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        out[f"{name}_us"] = round(min(ts) * 1e6 / n_rounds, 2)
+    out["speedup"] = round(out["legacy_us"] / out["fused_us"], 2)
+    # sanity: both commit paths agree before we publish a speedup
+    assert bool(jnp.array_equal(legacy(), fused()))
+    return out
+
+
 def phase_breakdown(n_events: int = 150) -> dict:
     """Per-phase cost attribution on the 64-lane skewed batch.
 
@@ -505,6 +565,17 @@ def phase_breakdown(n_events: int = 150) -> dict:
             k: round(v * 1e6 / n_events, 1) for k, v in acc.items()
         },
         "share": {k: round(v / total, 3) for k, v in acc.items()},
+        # what each fused kernel resolved to on THIS backend, with the
+        # batching each call site actually uses: fleet_tick sees the
+        # explicit [F, ...] batch; the state_update and sched_select
+        # landings run per-lane under the engine's vmap (ref by design
+        # — see docs/architecture.md §"Kernel subsystems")
+        "impl": {
+            "sim_tick.fleet_tick": resolved_impl(batched=True),
+            "state_update.retire_land": resolved_impl(batched=False),
+            "state_update.assign_gather": resolved_impl(batched=False),
+            "sched_select.masked_lex_argmin": resolved_impl(batched=False),
+        },
     }
 
 
@@ -564,6 +635,15 @@ def main(print_rows: bool = True, smoke: bool = False) -> list[dict]:
                 "engine": "selection microbench [64,128]+[64,64]",
                 "fleet_engine": "selection",
                 **selection_bench(),
+            }
+        )
+        # decision-application microbench -> the `apply` row (legacy
+        # fori_loop cond-commits vs the fused assign_gather landing)
+        rows.append(
+            {
+                "engine": "apply microbench F=64",
+                "fleet_engine": "apply",
+                **apply_bench(),
             }
         )
     if print_rows:

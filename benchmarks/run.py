@@ -100,6 +100,7 @@ def write_fleet_json(
     assert recorded >= set(ENGINE_ROWS), "missing fleet path rows"
     if not smoke:
         assert "selection" in recorded, "missing selection microbench row"
+        assert "apply" in recorded, "missing apply microbench row"
     for r in loaded["rows"]:
         if r["fleet_engine"] not in ENGINE_ROWS:
             continue
@@ -137,6 +138,14 @@ def _fused_vs_vmap(payload: dict) -> float | None:
     return fused["ticks_per_s"] / max(vmap["ticks_per_s"], 1)
 
 
+def _faults_ratio(payload: dict) -> float | None:
+    """Faults-ON / faults-OFF wall ratio (same-run, machine-neutral)."""
+    pct = payload.get("faults_overhead_pct")
+    if pct is None:
+        return None
+    return 1.0 + pct / 100.0
+
+
 def check_smoke_regression(loaded: dict, baseline: dict | None) -> bool | None:
     """One gate measurement: did fused throughput regress >20% vs the
     *committed* smoke baseline?
@@ -164,7 +173,22 @@ def check_smoke_regression(loaded: dict, baseline: dict | None) -> bool | None:
     verdict = "OK" if rel >= 0.8 else "REGRESSED"
     print(f"fused/vmap smoke ratio: {new_ratio:.2f} vs recorded "
           f"{base_ratio:.2f} ({rel:.2f}x) {verdict}")
-    return rel >= 0.8
+    ok = rel >= 0.8
+    # second gate, same normalisation trick: the faults-ON/faults-OFF
+    # wall ratio is measured in one run, so machine speed cancels and a
+    # >20% regression means the chaos layer's hot-path cost grew (e.g.
+    # the nxt_fault register gate stopped eliding the fault pass).
+    # Skipped when the committed baseline predates the metric.
+    base_fr = _faults_ratio(baseline)
+    new_fr = _faults_ratio(loaded)
+    if base_fr is None or new_fr is None:
+        print("no recorded faults ratio - faults-overhead gate skipped")
+        return ok
+    frel = new_fr / base_fr
+    fverdict = "OK" if frel <= 1.2 else "REGRESSED"
+    print(f"faults-on/off smoke ratio: {new_fr:.2f} vs recorded "
+          f"{base_fr:.2f} ({frel:.2f}x) {fverdict}")
+    return ok and frel <= 1.2
 
 
 def _maybe_profile(trace_dir: str | None):
@@ -263,8 +287,8 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fleet bench only; asserts BENCH_fleet.json "
                          "is produced and well-formed, and fails if fused "
-                         "throughput regressed >20% vs the recorded smoke "
-                         "baseline (CI)")
+                         "throughput or the faults-on/off overhead ratio "
+                         "regressed >20% vs the recorded smoke baseline (CI)")
     ap.add_argument("--no-regression-gate", action="store_true",
                     help="skip the --smoke fused-throughput regression gate")
     ap.add_argument("--profile", metavar="DIR", default=None,
@@ -296,13 +320,25 @@ def main() -> None:
             # so one quiet-host run doesn't set a bar the gate's 20%
             # margin can't absorb under normal runner load
             candidates = []
+            faults_ratios = []
             for i in range(3):
                 rows = engine_throughput.fleet_bench(smoke=True)
+                rows += engine_throughput.faults_overhead_bench(smoke=True)
                 loaded = write_fleet_json(rows, smoke=True)
                 ratio = _fused_vs_vmap(loaded)
-                print(f"recording run {i + 1}/3: fused/vmap {ratio:.2f}")
+                fr = _faults_ratio(loaded)
+                print(f"recording run {i + 1}/3: fused/vmap {ratio:.2f}, "
+                      f"faults on/off {fr:.2f}")
                 candidates.append((ratio, loaded))
+                faults_ratios.append(fr)
             _, floor = min(candidates, key=lambda c: c[0])
+            # the faults gate fails on ratios ABOVE baseline, so its
+            # conservative record is the highest of the three runs
+            frs = [fr for fr in faults_ratios if fr is not None]
+            if frs:
+                floor["faults_overhead_pct"] = round(
+                    (max(frs) - 1.0) * 100, 1
+                )
             SMOKE_BASELINE.write_text(json.dumps(floor, indent=2) + "\n")
             print(f"recorded smoke baseline (floor of 3) -> {SMOKE_BASELINE}")
             print("benchmarks smoke OK")
@@ -324,15 +360,17 @@ def main() -> None:
                 # reproduces on every run, a runner load spike does not
                 print(f"re-measuring (attempt {attempts + 1}/3)...")
                 rows = engine_throughput.fleet_bench(smoke=True)
+                rows += engine_throughput.faults_overhead_bench(smoke=True)
                 loaded = write_fleet_json(rows, smoke=True)
                 ok = check_smoke_regression(loaded, baseline)
                 attempts += 1
             if ok is False:
                 raise SystemExit(
-                    "fused engine smoke throughput regressed >20% relative "
-                    "to the same-run vmap baseline in 3/3 measurements; if "
-                    "intentional, re-record the committed baseline with "
-                    "`--smoke --record-smoke-baseline` "
+                    "smoke gate failed in 3/3 measurements: fused/vmap "
+                    "throughput down >20% or faults-on/off overhead up >20% "
+                    "vs the recorded baseline; if intentional, re-record the "
+                    "committed baseline with `--smoke "
+                    "--record-smoke-baseline` "
                     "(benchmarks/smoke_baseline.json), or pass "
                     "--no-regression-gate"
                 )
@@ -419,6 +457,10 @@ def main() -> None:
                 _csv("engine_selection_microbench", r["fused_us"],
                      f"three_pass={r['three_pass_us']}us_"
                      f"speedup={r['speedup']}x")
+                continue
+            if r.get("fleet_engine") == "apply":
+                _csv("engine_apply_microbench", r["fused_us"],
+                     f"legacy={r['legacy_us']}us_speedup={r['speedup']}x")
                 continue
             _csv(
                 f"engine_{r['engine'].split()[0]}_{r.get('fleet_engine', '')}"

@@ -243,31 +243,74 @@ def _quiet_partial_donation():
 # ---------------------------------------------------------------------------
 # The lane-major engine.
 # ---------------------------------------------------------------------------
-def _lane_step_core(
+def _zero_fault_aux(state: SimState):
+    """The ``fault_aux`` of a not-due :func:`executor.apply_faults` call,
+    constructed without running it — bitwise what the skipped call would
+    have returned: empty kill masks, causes defaulting to 1 (= outage),
+    no new outages/recoveries (``pool_down_until == tick`` would have
+    made the event due), and ``pool_down_until`` passed through. Shape-
+    polymorphic over a leading fleet axis."""
+    i32 = jnp.int32
+    MC = state.ctr_status.shape[-1]
+    NP = state.pool_cpu_cap.shape[-1]
+    batch = state.ctr_status.shape[:-1]
+    return (
+        jnp.zeros(batch + (MC,), bool),       # kill
+        jnp.full(batch + (MC,), -1, i32),     # kill_pipe
+        jnp.full(batch + (MC,), -1, i32),     # kill_pool
+        jnp.ones(batch + (MC,), i32),         # kill_cause
+        jnp.zeros(batch + (MC,), i32),        # kill_wasted
+        jnp.zeros(batch + (NP,), bool),       # down_new
+        jnp.zeros(batch + (NP,), bool),       # up_now
+        state.pool_down_until,
+    )
+
+
+def _fleet_gated_faults(
+    params: SimParams,
+    states: SimState,
+    wls: Workload,
+    tick: jax.Array,
+    active: jax.Array,
+):
+    """Run the fault pass only on events where some active lane's
+    ``nxt_fault`` register is due; event-skip steps with no fault due
+    pay one scalar compare instead of the full pass. The skipped call
+    is a provable identity (``tick < nxt_fault`` means the searchsorted
+    cursors do not move, the kill masks are empty, and the register
+    recompute reproduces itself), so the gate is bitwise-neutral. The
+    predicate is hoisted to the fleet level because a per-lane cond
+    under ``vmap`` lowers to a select that runs both branches."""
+    due = jnp.any(active & (tick >= states.nxt_fault))
+
+    def apply(sts):
+        with jax.named_scope("faults"):
+            return jax.vmap(
+                lambda s, w, t: executor.apply_faults(s, w, t, params)
+            )(sts, wls, tick)
+
+    def skip(sts):
+        return sts, _zero_fault_aux(sts)
+
+    return jax.lax.cond(due, apply, skip, states)
+
+
+def _lane_decide(
     params: SimParams,
     horizon: jax.Array,
     scheduler_fn: Callable,
+    with_aux: bool,
     state: SimState,
     sched_state: Any,
     wl: Workload,
     arr_sorted: jax.Array,
     tick: jax.Array,
-    ph,
-    with_aux: bool,
 ):
-    """One lane, one event. Returns the advanced ``(state, sched_state)``
-    plus — for the telemetry recorder — the post-phase-1 state the
-    scheduler saw, its decision, and (``with_aux=True`` only) the
-    per-slot assignment aux from ``apply_decision``. The named scopes
-    label the engine phases in XLA/profiler output; they change HLO
-    metadata only, never the computation."""
-    with jax.named_scope("phase1"):
-        state = executor.apply_fused_phase1(state, wl, tick, params, ph)
-    if params.fault_events_active:
-        with jax.named_scope("faults"):
-            state, fault_aux = executor.apply_faults(state, wl, tick, params)
-    else:
-        fault_aux = None
+    """One lane, one event, from the scheduler onward (the post-phase-1 /
+    post-faults half of the step): schedule, apply the decision, and
+    jump to the lane's next event. The named scopes label the engine
+    phases in XLA/profiler output; they change HLO metadata only, never
+    the computation."""
     st1 = state
     with jax.named_scope("scheduler"):
         view = (
@@ -298,6 +341,45 @@ def _lane_step_core(
         nxt = jnp.minimum(nxt, horizon)
         state = executor.integrate(state, tick, nxt, params, exact_buckets=True)
     state = state._replace(tick=nxt, nxt_arrival_cursor=cursor)
+    return state, sched_state, st1, dec, aux
+
+
+def _lane_step_core(
+    params: SimParams,
+    horizon: jax.Array,
+    scheduler_fn: Callable,
+    state: SimState,
+    sched_state: Any,
+    wl: Workload,
+    arr_sorted: jax.Array,
+    tick: jax.Array,
+    ph,
+    with_aux: bool,
+):
+    """One lane, one event. Returns the advanced ``(state, sched_state)``
+    plus — for the telemetry recorder — the post-phase-1 state the
+    scheduler saw, its decision, and (``with_aux=True`` only) the
+    per-slot assignment aux from ``apply_decision``. This single-lane
+    composition gates the fault pass on the lane's own ``nxt_fault``
+    register (here the cond genuinely branches — the fleet engine uses
+    :func:`_fleet_gated_faults` instead, since a vmapped cond would
+    run both sides)."""
+    with jax.named_scope("phase1"):
+        state = executor.apply_fused_phase1(state, wl, tick, params, ph)
+    if params.fault_events_active:
+        with jax.named_scope("faults"):
+            state, fault_aux = jax.lax.cond(
+                tick >= state.nxt_fault,
+                lambda s: executor.apply_faults(s, wl, tick, params),
+                lambda s: (s, _zero_fault_aux(s)),
+                state,
+            )
+    else:
+        fault_aux = None
+    state, sched_state, st1, dec, aux = _lane_decide(
+        params, horizon, scheduler_fn, with_aux, state, sched_state, wl,
+        arr_sorted, tick,
+    )
     return state, sched_state, st1, dec, aux, fault_aux
 
 
@@ -384,6 +466,11 @@ def _run_lane_major_engine(
 
     states0 = broadcast_lanes(init_state(params), F)
     scheds0 = broadcast_lanes(sched_state0, F)
+    faults_on = params.fault_events_active
+
+    def phase1(state, wl, tick, ph):
+        with jax.named_scope("phase1"):
+            return executor.apply_fused_phase1(state, wl, tick, params, ph)
 
     # finished lanes pass through untouched
     def keep_fn(active):
@@ -396,6 +483,9 @@ def _run_lane_major_engine(
     if trace_capacity == 0:
         lane = functools.partial(
             lane_event_step, params, horizon, scheduler_fn
+        )
+        decide = functools.partial(
+            _lane_decide, params, horizon, scheduler_fn, False
         )
 
         def cond(carry):
@@ -414,9 +504,20 @@ def _run_lane_major_engine(
                 tick, num_pools=params.num_pools, impl=impl,
             )
 
-            new_states, new_scheds = jax.vmap(lane)(
-                states, scheds, wls, arr_sorted, tick, ph
-            )
+            if faults_on:
+                # split body: vmap(phase1) -> fleet-gated faults ->
+                # vmap(decide). vmap of the composition == composition
+                # of the vmaps, so this is bitwise the single-vmap body
+                # below with the fault pass hoisted behind its register.
+                sts1 = jax.vmap(phase1)(states, wls, tick, ph)
+                sts1, _ = _fleet_gated_faults(params, sts1, wls, tick, active)
+                new_states, new_scheds, _, _, _ = jax.vmap(decide)(
+                    sts1, scheds, wls, arr_sorted, tick
+                )
+            else:
+                new_states, new_scheds = jax.vmap(lane)(
+                    states, scheds, wls, arr_sorted, tick, ph
+                )
 
             keep = keep_fn(active)
             states = jax.tree.map(keep, new_states, states)
@@ -440,6 +541,19 @@ def _run_lane_major_engine(
         lane_event_step_traced, params, trace_capacity, horizon, scheduler_fn
     )
 
+    def decide_t(pre, st1_in, sched_state, tbuf, wl, arr_sorted_l, tick,
+                 ph, active, fault_aux):
+        state, sched_state, st1, dec, aux = _lane_decide(
+            params, horizon, scheduler_fn, True, st1_in, sched_state, wl,
+            arr_sorted_l, tick,
+        )
+        with jax.named_scope("telemetry"):
+            tbuf = record_step(
+                tbuf, trace_capacity, active, pre, st1, state, wl, params,
+                tick, ph, dec, aux, fault_aux,
+            )
+        return state, sched_state, tbuf
+
     def cond_t(carry):
         states, _, _ = carry
         return jnp.any(states.tick < horizon)
@@ -456,9 +570,22 @@ def _run_lane_major_engine(
             tick, num_pools=params.num_pools, impl=impl,
         )
 
-        new_states, new_scheds, tbufs = jax.vmap(lane_t)(
-            states, scheds, tbufs, wls, arr_sorted, tick, ph, active
-        )
+        if faults_on:
+            # same split as the untraced body; the recorder consumes the
+            # batched fault_aux (zeros on skipped events — bitwise what
+            # the ungated pass would have reported)
+            sts1 = jax.vmap(phase1)(states, wls, tick, ph)
+            sts1, fault_auxs = _fleet_gated_faults(
+                params, sts1, wls, tick, active
+            )
+            new_states, new_scheds, tbufs = jax.vmap(decide_t)(
+                states, sts1, scheds, tbufs, wls, arr_sorted, tick, ph,
+                active, fault_auxs,
+            )
+        else:
+            new_states, new_scheds, tbufs = jax.vmap(lane_t)(
+                states, scheds, tbufs, wls, arr_sorted, tick, ph, active
+            )
 
         keep = keep_fn(active)
         states = jax.tree.map(keep, new_states, states)

@@ -39,6 +39,7 @@ from .state import (
     used_resources,
 )
 from .types import ContainerStatus, PipeStatus, TICKS_PER_SECOND
+from repro.kernels.state_update import assign_gather, retire_land
 
 
 def _warm_until(tick: jax.Array, params: SimParams) -> jax.Array:
@@ -192,14 +193,24 @@ def apply_faults(
         ).astype(i32)
         due = (fidx >= state.outage_cursor) & (fidx < new_ocur)
         n_due = new_ocur - state.outage_cursor
-        pool_t = jnp.where(due, ft.outage_pool, NP)  # out-of-range = dropped
-        down_new = (
-            jnp.zeros((NP,), i32)
-            .at[pool_t]
-            .add(due.astype(i32), mode="drop")
-        ) > 0
-        pool_down_until = pool_down_until.at[pool_t].max(
-            jnp.where(due, ft.outage_end, 0), mode="drop"
+        pool_t = jnp.where(due, ft.outage_pool, NP)  # NP = not due, no hit
+        # one-hot forms, not ``.at[pool_t].add/max`` scatters: a vmapped
+        # dynamic-index scatter serializes into a while thunk per
+        # scatter on XLA:CPU (see docs/architecture.md §"Kernel
+        # subsystems"). Bitwise identical — ``> 0`` == any for the hit
+        # mask, and the int scatter-max is a reassociation-exact
+        # max-fold.
+        pool_oh_f = pool_t[:, None] == jnp.arange(NP, dtype=i32)[None, :]
+        down_new = jnp.any(pool_oh_f, axis=0)
+        pool_down_until = jnp.maximum(
+            pool_down_until,
+            jnp.max(
+                jnp.where(
+                    pool_oh_f, jnp.where(due, ft.outage_end, 0)[:, None], 0
+                ),
+                axis=0,
+                initial=0,
+            ),
         )
         out_kill = running & ~crash_kill & down_new[state.ctr_pool]
     else:
@@ -228,10 +239,12 @@ def apply_faults(
     nxt_retire = jnp.min(
         jnp.where(still, jnp.minimum(state.ctr_end, state.ctr_oom), INF_TICK)
     )
-    pid = jnp.where(kill, state.ctr_pipe, MP)
-    fault_hit = (
-        jnp.zeros((MP,), i32).at[pid].add(kill.astype(i32), mode="drop")
-    ) > 0
+    pid = jnp.where(kill, state.ctr_pipe, MP)  # MP = not killed, no hit
+    # one-hot membership, not a ``.at[pid].add`` scatter (see the outage
+    # landing above for why); ``> 0`` == any, bitwise
+    fault_hit = jnp.any(
+        pid[:, None] == jnp.arange(MP, dtype=i32)[None, :], axis=0
+    )
 
     # a struck slot is cold (no warm hand-off), and every slot kept warm
     # for a newly-down pool loses its warmth with the pool
@@ -481,10 +494,12 @@ def apply_decision(
     freed_cpu = jnp.sum(jnp.where(pool_oh, state.ctr_cpus[None, :], 0.0), axis=1)
     freed_ram = jnp.sum(jnp.where(pool_oh, state.ctr_ram[None, :], 0.0), axis=1)
     MP = params.max_pipelines
-    pid = jnp.where(susp, state.ctr_pipe, MP)
-    susp_hit = (
-        jnp.zeros((MP,), jnp.int32).at[pid].add(susp.astype(jnp.int32), mode="drop")
-    ) > 0
+    pid = jnp.where(susp, state.ctr_pipe, MP)  # MP = not suspended, no hit
+    # one-hot membership, not a ``.at[pid].add`` scatter: vmapped
+    # dynamic scatters serialize on XLA:CPU (``> 0`` == any, bitwise)
+    susp_hit = jnp.any(
+        pid[:, None] == jnp.arange(MP, dtype=jnp.int32)[None, :], axis=0
+    )
 
     # next-event registers: preempted containers leave the running set
     # (recompute the retire min over the survivors); every new suspension
@@ -670,45 +685,327 @@ def apply_decision(
         return new_st, aux_i, aux_f
 
     K = params.max_assignments_per_tick
-    if with_aux:
-        if not early_exit:
-            raise ValueError("with_aux requires early_exit=True")
-        ks = jnp.arange(K, dtype=jnp.int32)
-        n_slots = jnp.max(jnp.where(dec.assign_pipe >= 0, ks + 1, 0))
-        aux_i0 = jnp.full((K, 4), -1, jnp.int32).at[:, 2:].set(0)
-        aux_f0 = jnp.zeros((K, 5), jnp.float32)
-
-        def wa_cond(carry):
-            k, _, _, _ = carry
-            return k < n_slots
-
-        def wa_body(carry):
-            k, st, ai, af = carry
-            st, row_i, row_f = assign_one(k, st, collect_aux=True)
-            return k + 1, st, ai.at[k].set(row_i), af.at[k].set(row_f)
-
-        _, state, aux_i, aux_f = jax.lax.while_loop(
-            wa_cond, wa_body, (jnp.int32(0), state, aux_i0, aux_f0)
-        )
-        return state, (aux_i, aux_f)
+    if with_aux and not early_exit:
+        raise ValueError("with_aux requires early_exit=True")
     if early_exit:
-        # process only up to the last populated slot; most events carry
-        # zero or one assignment, so this usually runs 0-1 iterations
-        ks = jnp.arange(K, dtype=jnp.int32)
-        n_slots = jnp.max(jnp.where(dec.assign_pipe >= 0, ks + 1, 0))
+        # fused landing (kernels/state_update): the early-exit loop
+        # collects one row of commit values per populated slot and the
+        # table writes land afterwards as one masked scatter —
+        # bitwise-identical to the per-slot cond-commit loop below,
+        # which stays as the property-tested oracle
+        return _apply_assignments_fused(
+            state, wl, dec, tick, params, with_aux=with_aux
+        )
+    return jax.lax.fori_loop(0, K, assign_one, state)
 
-        def w_cond(carry):
-            k, _ = carry
-            return k < n_slots
 
-        def w_body(carry):
-            k, st = carry
-            return k + 1, assign_one(k, st)
+def _apply_assignments_fused(
+    state: SimState,
+    wl: Workload,
+    dec: SchedDecision,
+    tick: jax.Array,
+    params: SimParams,
+    with_aux: bool = False,
+):
+    """Vectorised assignment pass with a fused landing (Pallas phase 3).
 
-        _, state = jax.lax.while_loop(w_cond, w_body, (jnp.int32(0), state))
+    Bitwise-identical to the legacy per-slot ``lax.cond`` commit loop
+    (``apply_decision(early_exit=False)``, the oracle), but the per-row
+    math runs over all K slots at once instead of a while_loop carrying
+    the full SimState:
+
+    * **validity** is closed-form: a row can only commit if it is the
+      first occurrence of its pipeline (any earlier same-pipe row either
+      consumed the pipeline or failed for a reason that persists), the
+      pipeline was waiting before the loop, and its rank among such rows
+      does not exceed the number of empty slots (capacity once exhausted
+      never recovers inside the loop);
+    * **slot pick**: with cold starts off every valid row takes the
+      lowest remaining empty slot, so the rank-r row lands on the r-th
+      lowest empty slot (cumsum matching). With warm-slot preference the
+      pick order is pool-dependent, so a minimal while_loop carrying
+      only the empty mask computes the picks;
+    * **order-sensitive f32 accumulators** (pool frees, cache sums, LRU
+      inserts) keep the seed's left-fold association in a small
+      sequential loop over the populated slots — everything else (int
+      counters, the ``nxt_retire`` min-fold) is reassociation-exact and
+      reduces vectorised.
+
+    The container/pipeline table writes land once through
+    ``kernels/state_update.assign_gather`` (unique indices -> masked
+    overwrite scatters, fp-exact). ``with_aux=True`` reads the telemetry
+    aux straight out of the same row vectors the landing commits.
+    """
+    i32, f32 = jnp.int32, jnp.float32
+    MC = state.ctr_status.shape[0]
+    MP = state.pipe_status.shape[0]
+    K = params.max_assignments_per_tick
+    cache_on = params.cache_gb_per_pool > 0
+    timeout_on = params.timeout_ticks > 0
+
+    ks = jnp.arange(K, dtype=i32)
+    # loops below only walk the populated prefix; most events carry
+    # zero or one assignment, so they usually run 0-1 iterations
+    n_slots = jnp.max(jnp.where(dec.assign_pipe >= 0, ks + 1, 0))
+
+    pipe = dec.assign_pipe
+    pipe_c = jnp.maximum(pipe, 0)
+    pool = dec.assign_pool
+    cpus = dec.assign_cpus
+    ram = dec.assign_ram
+
+    waiting0 = state.pipe_status == int(PipeStatus.WAITING)
+    empty0 = state.ctr_status == int(ContainerStatus.EMPTY)
+    n_empty = jnp.sum(empty0).astype(i32)
+
+    # -- closed-form validity (proof in the docstring) -----------------------
+    # a row repeating an earlier row's pipeline can never commit: the
+    # earlier row either took the pipeline (no longer waiting) or failed
+    # because it never waited / capacity ran out — conditions that still
+    # hold at the later row
+    dup_before = jnp.any(
+        (pipe[None, :] == pipe[:, None]) & (ks[None, :] < ks[:, None]),
+        axis=1,
+    )
+    pre = (pipe >= 0) & waiting0[pipe_c] & ~dup_before
+    rank = jnp.cumsum(pre.astype(i32))  # 1-based, inclusive
+    valid = pre & (rank <= n_empty)
+
+    # -- slot pick -----------------------------------------------------------
+    if params.cold_start_ticks > 0:
+        # warm-slot preference makes the pick order pool-dependent, so
+        # walk the populated slots with the smallest possible carry
+        # (just the evolving empty mask). Commits never write slot
+        # warmth, so the pre-loop warmth view is the loop-invariant
+        # truth (mirrors engine_python._pick_slot).
+        def _pick_body(c):
+            k, empty, slots = c
+            warm_ok = (
+                empty
+                & (state.slot_warm_pool == pool[k])
+                & (tick < state.slot_warm_until)
+            )
+            s = jnp.where(
+                jnp.any(warm_ok), jnp.argmax(warm_ok), jnp.argmax(empty)
+            ).astype(i32)
+            # one-hot selects, not ``.at[]`` scatters (vmapped dynamic
+            # scatters serialize on XLA:CPU); bitwise identical
+            return (
+                k + 1,
+                jnp.where(
+                    valid[k] & (jnp.arange(empty.shape[0]) == s),
+                    False,
+                    empty,
+                ),
+                jnp.where(jnp.arange(slots.shape[0]) == k, s, slots),
+            )
+
+        _, _, slot = jax.lax.while_loop(
+            lambda c: c[0] < n_slots,
+            _pick_body,
+            (jnp.int32(0), empty0, jnp.zeros((K,), i32)),
+        )
     else:
-        state = jax.lax.fori_loop(0, K, assign_one, state)
-    return state
+        # every valid row takes the lowest remaining empty slot, so the
+        # rank-r row lands on the r-th lowest empty slot
+        cum = jnp.cumsum(empty0.astype(i32))
+        eq = empty0[None, :] & (cum[None, :] == rank[:, None])
+        slot = jnp.argmax(eq, axis=1).astype(i32)
+
+    is_warm = (state.slot_warm_pool[slot] == pool) & (
+        tick < state.slot_warm_until[slot]
+    )
+    cold_ticks = jnp.where(is_warm, 0, jnp.int32(params.cold_start_ticks))
+    total_out = wl.pipe_out[pipe_c]
+
+    # -- sequential walk over the populated slots ----------------------------
+    # One small loop keeps (a) the order-sensitive f32 state — pool
+    # frees, cache sums, LRU inserts — in the seed's left-fold
+    # association, and (b) ``container_schedule`` (a [MO, MO] level
+    # reduction) priced per *populated* slot only, exactly like the
+    # legacy loop. The carry is a handful of small rows, not the whole
+    # SimState.
+    pcf0, prf0 = state.pool_cpu_free, state.pool_ram_free
+    chg0, bmg0 = state.cache_hit_gb, state.bytes_moved_gb
+    durs0 = jnp.zeros((K,), i32)
+    ooms0 = jnp.zeros((K,), i32)
+    if cache_on:
+        # the cache gather must see earlier rows' LRU inserts, so the
+        # data plane rides in the same loop
+        def _slot_body(c):
+            k, cb, cl, pcu, pcf, prf, chg, bmg, hits, misses, durs, ooms = c
+            v, p, pc = valid[k], pool[k], pipe_c[k]
+            to = total_out[k]
+            cached = cb[p, pc]
+            hg = jnp.minimum(cached, to)
+            mg = jnp.maximum(to - cached, 0.0)
+            row_b, row_l, used = cache_insert(
+                cb[p], cl[p], pcu[p], pc, to, tick,
+                params.cache_gb_per_pool,
+            )
+            d, o = container_schedule(wl, pc, cpus[k], ram[k])
+            # one-hot selects, not ``.at[]`` scatters: a vmapped scatter
+            # lowers to a serialized while loop on XLA:CPU; these stay
+            # elementwise (and a select is trivially bitwise-exact)
+            onp = jnp.arange(pcf.shape[0]) == p
+            onk = ks == k
+            return (
+                k + 1,
+                jnp.where(v & onp[:, None], row_b[None, :], cb),
+                jnp.where(v & onp[:, None], row_l[None, :], cl),
+                jnp.where(v & onp, used, pcu),
+                jnp.where(v & onp, pcf - cpus[k], pcf),
+                jnp.where(v & onp, prf - ram[k], prf),
+                jnp.where(v, chg + hg, chg),
+                jnp.where(v, bmg + mg, bmg),
+                jnp.where(onk, hg, hits),
+                jnp.where(onk, mg, misses),
+                jnp.where(onk, d, durs),
+                jnp.where(onk, o, ooms),
+            )
+
+        (_, cache_bytes, cache_last, pool_cache_used, pool_cpu_free,
+         pool_ram_free, cache_hit_gb, bytes_moved_gb, hit_gb, miss_gb,
+         dur, oom_off) = jax.lax.while_loop(
+            lambda c: c[0] < n_slots,
+            _slot_body,
+            (jnp.int32(0), state.cache_bytes, state.cache_last,
+             state.pool_cache_used, pcf0, prf0, chg0, bmg0,
+             jnp.zeros((K,), f32), jnp.zeros((K,), f32), durs0, ooms0),
+        )
+    else:
+        cached = state.cache_bytes[pool, pipe_c]
+        hit_gb = jnp.minimum(cached, total_out)
+        miss_gb = jnp.maximum(total_out - cached, 0.0)
+
+        def _slot_body(c):
+            k, pcf, prf, chg, bmg, durs, ooms = c
+            v, p = valid[k], pool[k]
+            d, o = container_schedule(wl, pipe_c[k], cpus[k], ram[k])
+            # one-hot selects, not ``.at[]`` scatters: a vmapped scatter
+            # lowers to a serialized while loop on XLA:CPU; these stay
+            # elementwise (and a select is trivially bitwise-exact)
+            onp = jnp.arange(pcf.shape[0]) == p
+            onk = ks == k
+            return (
+                k + 1,
+                jnp.where(v & onp, pcf - cpus[k], pcf),
+                jnp.where(v & onp, prf - ram[k], prf),
+                jnp.where(v, chg + hit_gb[k], chg),
+                jnp.where(v, bmg + miss_gb[k], bmg),
+                jnp.where(onk, d, durs),
+                jnp.where(onk, o, ooms),
+            )
+
+        (_, pool_cpu_free, pool_ram_free, cache_hit_gb, bytes_moved_gb,
+         dur, oom_off) = jax.lax.while_loop(
+            lambda c: c[0] < n_slots,
+            _slot_body,
+            (jnp.int32(0), pcf0, prf0, chg0, bmg0, durs0, ooms0),
+        )
+
+    # -- row timing, vectorised ----------------------------------------------
+    scan_ticks = jnp.ceil(
+        jnp.float32(params.scan_ticks_per_gb) * miss_gb
+    ).astype(i32)
+    startup = cold_ticks + scan_ticks
+    if params.straggler_prob > 0:
+        fct = wl.faults.straggler[pipe_c]
+        stretch = lambda t: jnp.minimum(  # noqa: E731
+            jnp.ceil(t.astype(f32) * fct), jnp.float32(2**30)
+        ).astype(i32)
+        dur = stretch(dur)
+        oom_off = jnp.where(oom_off == INF_TICK, INF_TICK, stretch(oom_off))
+    end = tick + startup + dur
+    oom = jnp.where(
+        oom_off == INF_TICK,
+        INF_TICK,
+        tick + startup + jnp.minimum(oom_off, dur),
+    )
+    if timeout_on:
+        deadline = tick + jnp.int32(params.timeout_ticks)
+        timed = end > deadline
+        end = jnp.minimum(end, deadline)
+    else:
+        timed = jnp.zeros((K,), bool)
+
+    # reassociation-exact reductions (int sums / min-folds)
+    nxt_retire = jnp.minimum(
+        state.nxt_retire,
+        jnp.min(jnp.where(valid, jnp.minimum(end, oom), INF_TICK)),
+    )
+    n_hit = jnp.sum(valid & (hit_gb > 0)).astype(i32)
+    n_look = jnp.sum(valid & (total_out > 0)).astype(i32)
+    n_warm = jnp.sum(valid & is_warm).astype(i32)
+    n_cold = jnp.sum(valid & ~is_warm).astype(i32)
+    cold_total = jnp.sum(jnp.where(valid, cold_ticks, 0)).astype(i32)
+
+    # -- fused landing (kernels/state_update) --------------------------------
+    prio = wl.prio[pipe_c]
+    (hit_c, l_pipe, l_pool, l_cpus, l_ram, l_end, l_oom, l_prio, l_warm,
+     l_timed, hit_p, l_pcpus, l_pram) = assign_gather(
+        valid, slot, pipe_c, pool, cpus, ram, end, oom, prio, is_warm,
+        timed, max_containers=MC, max_pipelines=MP,
+    )
+    state = state._replace(
+        nxt_retire=nxt_retire,
+        pipe_status=jnp.where(
+            hit_p, int(PipeStatus.RUNNING), state.pipe_status
+        ),
+        pipe_last_cpus=jnp.where(hit_p, l_pcpus, state.pipe_last_cpus),
+        pipe_last_ram=jnp.where(hit_p, l_pram, state.pipe_last_ram),
+        pipe_fail_flag=jnp.where(hit_p, False, state.pipe_fail_flag),
+        pipe_first_start=jnp.where(
+            hit_p, jnp.minimum(state.pipe_first_start, tick),
+            state.pipe_first_start,
+        ),
+        ctr_status=jnp.where(
+            hit_c, int(ContainerStatus.RUNNING), state.ctr_status
+        ),
+        ctr_pipe=jnp.where(hit_c, l_pipe, state.ctr_pipe),
+        ctr_pool=jnp.where(hit_c, l_pool, state.ctr_pool),
+        ctr_cpus=jnp.where(hit_c, l_cpus, state.ctr_cpus),
+        ctr_ram=jnp.where(hit_c, l_ram, state.ctr_ram),
+        ctr_start=jnp.where(hit_c, tick, state.ctr_start),
+        ctr_end=jnp.where(hit_c, l_end, state.ctr_end),
+        ctr_oom=jnp.where(hit_c, l_oom, state.ctr_oom),
+        ctr_prio=jnp.where(hit_c, l_prio, state.ctr_prio),
+        ctr_warm=jnp.where(hit_c, l_warm, state.ctr_warm),
+        pool_cpu_free=pool_cpu_free,
+        pool_ram_free=pool_ram_free,
+        cache_hit_gb=cache_hit_gb,
+        bytes_moved_gb=bytes_moved_gb,
+        cache_hits=state.cache_hits + n_hit,
+        cache_lookups=state.cache_lookups + n_look,
+        cold_starts=state.cold_starts + n_cold,
+        warm_starts=state.warm_starts + n_warm,
+        cold_start_tick_total=state.cold_start_tick_total + cold_total,
+    )
+    if timeout_on:
+        state = state._replace(
+            ctr_timed=jnp.where(hit_c, l_timed, state.ctr_timed)
+        )
+    if cache_on:
+        state = state._replace(
+            cache_bytes=cache_bytes,
+            cache_last=cache_last,
+            pool_cache_used=pool_cache_used,
+        )
+    if not with_aux:
+        return state
+    aux_i = jnp.where(
+        valid[:, None],
+        jnp.stack(
+            [pipe_c, pool, cold_ticks, is_warm.astype(i32)], axis=1
+        ),
+        jnp.array([-1, -1, 0, 0], i32),
+    )
+    aux_f = jnp.where(
+        valid[:, None],
+        jnp.stack([cpus, ram, hit_gb, miss_gb, total_out], axis=1),
+        jnp.float32(0.0),
+    )
+    return state, (aux_i, aux_f)
 
 
 # ---------------------------------------------------------------------------
@@ -718,31 +1015,80 @@ def apply_decision(
 # ``process_arrivals -> process_releases -> process_completions``
 # composition: the three phases read disjoint status partitions (EMPTY /
 # SUSPENDED / RUNNING-container), so masks computed from the pre-state
-# and applied together commute with the sequential wheres.
+# and applied together commute with the sequential wheres; each field is
+# written once with its wheres chained in the sequential order
+# (arrivals, then releases, then retirements). The retirement scatters
+# (``.at[pid].add/max`` in ``_apply_retirements``, kept as the oracle)
+# are replaced by the fused ``kernels/state_update.retire_land`` pass.
 # ---------------------------------------------------------------------------
 def apply_fused_phase1(
     state: SimState, wl: Workload, tick: jax.Array, params: SimParams, ph
 ) -> SimState:
     (oomed, done, _new_ctr_status, freed_cpu, freed_ram,
      fresh, rel, nxt_retire, nxt_release) = ph
+    i32 = jnp.int32
+    retired = oomed | done
+    timeout_on = params.timeout_ticks > 0
 
-    # ---- arrivals, then releases (same write order as the sequential path) -
-    pipe_status = jnp.where(fresh, int(PipeStatus.WAITING), state.pipe_status)
+    (oom_hit, done_hit, timed_hit, end_of, timed_wasted,
+     lat_sum, lat_prio, dprio, n_done, n_oom) = retire_land(
+        state.ctr_pipe, state.ctr_end, state.ctr_start, oomed, done,
+        state.ctr_timed if timeout_on else None,
+        wl.arrival, wl.prio, tick, timeout_on=timeout_on,
+    )
+
+    # ---- one write per field: arrivals -> releases -> retirements ----------
+    W = int(PipeStatus.WAITING)
+    pipe_status = jnp.where(fresh, W, state.pipe_status)
     pipe_entered = jnp.where(fresh, wl.arrival, state.pipe_entered)
-    pipe_status = jnp.where(rel, int(PipeStatus.WAITING), pipe_status)
+    pipe_status = jnp.where(rel, W, pipe_status)
     pipe_entered = jnp.where(rel, state.pipe_release, pipe_entered)
     pipe_release = jnp.where(rel, INF_TICK, state.pipe_release)
+    pipe_status = jnp.where(
+        oom_hit, W, jnp.where(done_hit, int(PipeStatus.DONE), pipe_status)
+    )
+    pipe_entered = jnp.where(oom_hit, tick, pipe_entered)
+
     state = state._replace(
+        nxt_retire=nxt_retire,
+        nxt_release=nxt_release,
         pipe_status=pipe_status,
         pipe_entered=pipe_entered,
         pipe_release=pipe_release,
-        nxt_release=nxt_release,
+        pipe_fail_flag=state.pipe_fail_flag | oom_hit,
+        pipe_fails=state.pipe_fails + oom_hit.astype(i32),
+        pipe_completion=jnp.where(done_hit, end_of, state.pipe_completion),
+        ctr_status=jnp.where(
+            retired, int(ContainerStatus.EMPTY), state.ctr_status
+        ),
+        ctr_pipe=jnp.where(retired, -1, state.ctr_pipe),
+        ctr_end=jnp.where(retired, INF_TICK, state.ctr_end),
+        ctr_oom=jnp.where(retired, INF_TICK, state.ctr_oom),
+        ctr_start=jnp.where(retired, INF_TICK, state.ctr_start),
+        ctr_prio=jnp.where(retired, -1, state.ctr_prio),
+        # retired containers keep their slot warm on their pool for a while
+        ctr_warm=jnp.where(retired, False, state.ctr_warm),
+        slot_warm_pool=jnp.where(retired, state.ctr_pool, state.slot_warm_pool),
+        slot_warm_until=jnp.where(
+            retired, _warm_until(tick, params), state.slot_warm_until
+        ),
+        pool_cpu_free=state.pool_cpu_free + freed_cpu,
+        pool_ram_free=state.pool_ram_free + freed_ram,
+        done_count=state.done_count + n_done,
+        oom_events=state.oom_events + n_oom,
+        sum_latency_s=state.sum_latency_s + lat_sum,
+        sum_latency_s_prio=state.sum_latency_s_prio + lat_prio,
+        done_prio=state.done_prio + dprio,
     )
-
-    # ---- completions: identical body as the sequential engines -------------
-    return _apply_retirements(
-        state, wl, tick, params, oomed, done, freed_cpu, freed_ram, nxt_retire
-    )
+    if timeout_on:
+        state = state._replace(
+            ctr_timed=jnp.where(retired, False, state.ctr_timed),
+            timeout_events=state.timeout_events
+            + jnp.sum(done & state.ctr_timed).astype(i32),
+            wasted_ticks=state.wasted_ticks + timed_wasted,
+        )
+        state = _requeue_faulted(state, tick, params, timed_hit)
+    return state
 
 
 # ---------------------------------------------------------------------------

@@ -33,6 +33,7 @@ from .scheduler import (
     decision_loop,
     empty_decision,
     get_vector_scheduler,
+    onehot_set,
     register_vector_scheduler_family,
 )
 from .state import INF_TICK, SimState, Workload
@@ -94,14 +95,16 @@ def _sjf_like(early_exit: bool = False):
             fits = (free_cpu[0] >= want_cpu - EPS) & (free_ram[0] >= want_ram - EPS)
             do = valid & fits
             dec = dec._replace(
-                assign_pipe=dec.assign_pipe.at[k].set(jnp.where(do, pipe_c, -1)),
-                assign_pool=dec.assign_pool.at[k].set(0),
-                assign_cpus=dec.assign_cpus.at[k].set(want_cpu),
-                assign_ram=dec.assign_ram.at[k].set(want_ram),
+                assign_pipe=onehot_set(
+                    dec.assign_pipe, k, jnp.where(do, pipe_c, -1)
+                ),
+                assign_pool=onehot_set(dec.assign_pool, k, 0),
+                assign_cpus=onehot_set(dec.assign_cpus, k, want_cpu),
+                assign_ram=onehot_set(dec.assign_ram, k, want_ram),
             )
             free_cpu = jnp.where(do, free_cpu.at[0].add(-want_cpu), free_cpu)
             free_ram = jnp.where(do, free_ram.at[0].add(-want_ram), free_ram)
-            tried = jnp.where(valid, tried.at[pipe_c].set(True), tried)
+            tried = jnp.where(valid, onehot_set(tried, pipe_c, True), tried)
             return (dec, free_cpu, free_ram, tried), valid
 
         tried0 = jnp.zeros((params.max_pipelines,), bool)

@@ -91,6 +91,26 @@ def select_victim(
     return jnp.where(any_, idx, -1)
 
 
+def onehot_set(arr: jax.Array, idx: jax.Array, val):
+    """``arr.at[idx].set(val)`` as an elementwise select.
+
+    Dynamic-index scatters lower to a serialized ``while`` thunk per
+    scatter on XLA:CPU under the engine's per-lane ``vmap``; the
+    one-hot select stays elementwise. Bitwise identical: only position
+    ``idx`` takes ``val``, every other element is passed through."""
+    iota = jnp.arange(arr.shape[0], dtype=jnp.int32)
+    return jnp.where(iota == idx, val, arr)
+
+
+def onehot_add(arr: jax.Array, idx: jax.Array, val):
+    """``arr.at[idx].add(val)`` as an elementwise select (see
+    :func:`onehot_set`). Exact: the selected element is the same single
+    ``arr[idx] + val`` the scatter-add performs; the rest pass through
+    untouched (no reassociation anywhere)."""
+    iota = jnp.arange(arr.shape[0], dtype=jnp.int32)
+    return jnp.where(iota == idx, arr + val, arr)
+
+
 # ---------------------------------------------------------------------------
 # Decision-slot loop runner shared by the K-assignment schedulers.
 # ---------------------------------------------------------------------------
@@ -281,13 +301,17 @@ def _priority_like(pool_mode: str, early_exit: bool = False):
             victim_c = jnp.maximum(victim, 0)
             vpool = sim.ctr_pool[victim_c]
             free_cpu2 = jnp.where(
-                has_victim, free_cpu.at[vpool].add(sim.ctr_cpus[victim_c]), free_cpu
+                has_victim,
+                onehot_add(free_cpu, vpool, sim.ctr_cpus[victim_c]),
+                free_cpu,
             )
             free_ram2 = jnp.where(
-                has_victim, free_ram.at[vpool].add(sim.ctr_ram[victim_c]), free_ram
+                has_victim,
+                onehot_add(free_ram, vpool, sim.ctr_ram[victim_c]),
+                free_ram,
             )
             live2 = jnp.where(
-                has_victim, live.at[victim_c].set(False), live
+                has_victim, onehot_set(live, victim_c, False), live
             )
             if multi_pool:
                 pool2 = jnp.where(
@@ -307,7 +331,7 @@ def _priority_like(pool_mode: str, early_exit: bool = False):
             commit_victim = has_victim & ~fits & fits2
             suspend = jnp.where(
                 commit_victim,
-                dec.suspend.at[victim_c].set(True),
+                onehot_set(dec.suspend, victim_c, True),
                 dec.suspend,
             )
             free_cpu3 = jnp.where(commit_victim, free_cpu2, free_cpu)
@@ -315,20 +339,22 @@ def _priority_like(pool_mode: str, early_exit: bool = False):
             live3 = jnp.where(commit_victim, live2, live)
 
             free_cpu4 = jnp.where(
-                do, free_cpu3.at[use_pool].add(-want_cpu), free_cpu3
+                do, onehot_add(free_cpu3, use_pool, -want_cpu), free_cpu3
             )
             free_ram4 = jnp.where(
-                do, free_ram3.at[use_pool].add(-want_ram), free_ram3
+                do, onehot_add(free_ram3, use_pool, -want_ram), free_ram3
             )
             dec = dec._replace(
                 suspend=suspend,
-                assign_pipe=dec.assign_pipe.at[k].set(jnp.where(do, pipe_c, -1)),
-                assign_pool=dec.assign_pool.at[k].set(use_pool),
-                assign_cpus=dec.assign_cpus.at[k].set(want_cpu),
-                assign_ram=dec.assign_ram.at[k].set(want_ram),
+                assign_pipe=onehot_set(
+                    dec.assign_pipe, k, jnp.where(do, pipe_c, -1)
+                ),
+                assign_pool=onehot_set(dec.assign_pool, k, use_pool),
+                assign_cpus=onehot_set(dec.assign_cpus, k, want_cpu),
+                assign_ram=onehot_set(dec.assign_ram, k, want_ram),
             )
             # whether assigned or blocked, don't reconsider this pipe today
-            tried = jnp.where(valid, tried.at[pipe_c].set(True), tried)
+            tried = jnp.where(valid, onehot_set(tried, pipe_c, True), tried)
             return (dec, free_cpu4, free_ram4, live3, tried), valid
 
         tried0 = jnp.zeros((params.max_pipelines,), bool)

@@ -261,7 +261,14 @@ def init_state(params: SimParams) -> SimState:
         pool_down_until=jnp.zeros((NP,), i32),
         crash_cursor=jnp.asarray(0, i32),
         outage_cursor=jnp.asarray(0, i32),
-        nxt_fault=jnp.asarray(INF_TICK, i32),
+        # seeded *due* (0) when the chaos layer is on so the engine's
+        # register-gated fault pass runs at the first event and computes
+        # the true register; the seed value never reaches a final state.
+        # Faults off it stays pinned at INF_TICK (and the gate never
+        # fires), keeping the faults-off captures valid verbatim.
+        nxt_fault=jnp.asarray(
+            0 if params.fault_events_active else INF_TICK, i32
+        ),
         crash_events=jnp.asarray(0, i32),
         outage_events=jnp.asarray(0, i32),
         timeout_events=jnp.asarray(0, i32),

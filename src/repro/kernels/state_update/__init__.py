@@ -1,0 +1,9 @@
+from .ops import assign_gather, retire_land
+from .ref import assign_gather_ref, retire_land_ref
+
+__all__ = [
+    "retire_land",
+    "assign_gather",
+    "retire_land_ref",
+    "assign_gather_ref",
+]

@@ -1,0 +1,253 @@
+"""Pallas TPU kernels for the fused state-update landings (phase 3).
+
+Same house conventions as ``kernels/sim_tick``: one grid step processes
+a fleet block entirely in VMEM, scalar-per-lane outputs are emitted as
+[FB, 8] sublane-aligned tiles (the dispatch wrapper takes column 0),
+and the fleet axis is zero-padded to whole tiles (padding lanes produce
+garbage that is sliced off — nothing reduces across the fleet axis).
+
+The one-hot landings materialise a rank-3 [FB, MC, MP] (retire) or
+[FB, K, MC]/[FB, K, MP] (assign) mask in VMEM, so the default fleet
+blocks are sized small enough that the biggest intermediate stays well
+under the ~16 MB VMEM budget for the repo's table sizes (MC<=128,
+MP<=512, K<=16): 8 lanes x 128 x 512 x 4 B = 2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INF_TICK, N_PRIO, TICKS_PER_SECOND  # noqa: F401
+
+_iota = jax.lax.broadcasted_iota
+
+
+def _retire_kernel(
+    pipe_ref, end_ref, start_ref, oomed_ref, done_ref, timed_ref,
+    arr_ref, prio_ref, tick_ref,
+    oomh_ref, doneh_ref, timedh_ref, endof_ref, wasted_ref,
+    latsum_ref, latprio_ref, doneprio_ref, ndone_ref, noom_ref,
+    *,
+    timeout_on: bool,
+):
+    i32 = jnp.int32
+    FB, MC = pipe_ref.shape
+    MP = arr_ref.shape[1]
+    t = tick_ref[...][:, :1]                       # [FB, 1]
+    oomed = oomed_ref[...] != 0
+    done = done_ref[...] != 0
+    retired = oomed | done
+    if timeout_on:
+        timed = done & (timed_ref[...] != 0)
+        done_eff = done & ~timed
+    else:
+        timed = jnp.zeros_like(done)
+        done_eff = done
+
+    pid = jnp.where(retired, pipe_ref[...], MP)
+    oh = pid[:, :, None] == _iota(i32, (FB, MC, MP), 2)
+    oom_hit = jnp.any(oh & oomed[:, :, None], axis=1)
+    done_hit = jnp.any(oh & done_eff[:, :, None], axis=1)
+    end_of = jnp.max(
+        jnp.where(oh & done_eff[:, :, None], end_ref[...][:, :, None], 0),
+        axis=1,
+    )
+    oomh_ref[...] = oom_hit.astype(i32)
+    doneh_ref[...] = done_hit.astype(i32)
+    endof_ref[...] = end_of
+    if timeout_on:
+        timedh_ref[...] = jnp.any(oh & timed[:, :, None], axis=1).astype(i32)
+        wasted = jnp.sum(
+            jnp.where(timed, t - start_ref[...], 0), axis=1, keepdims=True
+        )
+    else:
+        timedh_ref[...] = jnp.zeros((FB, MP), i32)
+        wasted = jnp.zeros((FB, 1), i32)
+    wasted_ref[...] = jnp.broadcast_to(wasted, wasted_ref.shape)
+
+    lat_s = (end_of - arr_ref[...]).astype(jnp.float32) / TICKS_PER_SECOND
+    lat_s = jnp.where(done_hit, lat_s, 0.0)
+    prio_oh = prio_ref[...][:, None, :] == _iota(i32, (FB, N_PRIO, MP), 1)
+    latsum = jnp.sum(lat_s, axis=1, keepdims=True)
+    latsum_ref[...] = jnp.broadcast_to(latsum, latsum_ref.shape)
+    latprio_ref[...] = jnp.sum(
+        jnp.where(prio_oh, lat_s[:, None, :], 0.0), axis=2
+    )
+    doneprio_ref[...] = jnp.sum(
+        (prio_oh & done_hit[:, None, :]).astype(i32), axis=2
+    )
+    ndone = jnp.sum(done_hit.astype(i32), axis=1, keepdims=True)
+    ndone_ref[...] = jnp.broadcast_to(ndone, ndone_ref.shape)
+    noom = jnp.sum(oom_hit.astype(i32), axis=1, keepdims=True)
+    noom_ref[...] = jnp.broadcast_to(noom, noom_ref.shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("timeout_on", "block_fleet", "interpret")
+)
+def retire_land_kernel(
+    ctr_pipe, ctr_end, ctr_start, oomed, done, timed, arrival, prio, tick,
+    *, timeout_on: bool = False, block_fleet: int = 8,
+    interpret: bool = False,
+):
+    F, MC = ctr_pipe.shape
+    MP = arrival.shape[1]
+    FB = min(block_fleet, F)
+    pad = (-F) % FB
+    if pad:
+        def padded(x):
+            return jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+            )
+
+        ctr_pipe, ctr_end, ctr_start, arrival, prio, tick = map(
+            padded, (ctr_pipe, ctr_end, ctr_start, arrival, prio, tick)
+        )
+        oomed, done, timed = map(padded, (oomed, done, timed))
+    FP = F + pad
+    grid = (FP // FB,)
+    tick2 = jnp.broadcast_to(tick[:, None], (FP, 8)).astype(jnp.int32)
+
+    ctile = pl.BlockSpec((FB, MC), lambda i: (i, 0))
+    ptile = pl.BlockSpec((FB, MP), lambda i: (i, 0))
+    prio_tile = pl.BlockSpec((FB, N_PRIO), lambda i: (i, 0))
+    reg_tile = pl.BlockSpec((FB, 8), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_retire_kernel, timeout_on=timeout_on),
+        grid=grid,
+        in_specs=[ctile, ctile, ctile, ctile, ctile, ctile,
+                  ptile, ptile, reg_tile],
+        out_specs=[ptile, ptile, ptile, ptile, reg_tile,
+                   reg_tile, prio_tile, prio_tile, reg_tile, reg_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((FP, MP), jnp.int32),
+            jax.ShapeDtypeStruct((FP, MP), jnp.int32),
+            jax.ShapeDtypeStruct((FP, MP), jnp.int32),
+            jax.ShapeDtypeStruct((FP, MP), jnp.int32),
+            jax.ShapeDtypeStruct((FP, 8), jnp.int32),
+            jax.ShapeDtypeStruct((FP, 8), jnp.float32),
+            jax.ShapeDtypeStruct((FP, N_PRIO), jnp.float32),
+            jax.ShapeDtypeStruct((FP, N_PRIO), jnp.int32),
+            jax.ShapeDtypeStruct((FP, 8), jnp.int32),
+            jax.ShapeDtypeStruct((FP, 8), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ctr_pipe, ctr_end, ctr_start, oomed.astype(jnp.int32),
+      done.astype(jnp.int32), timed.astype(jnp.int32),
+      arrival, prio, tick2)
+    (oomh, doneh, timedh, endof, wasted,
+     latsum, latprio, doneprio, ndone, noom) = outs
+    return (
+        oomh[:F].astype(bool), doneh[:F].astype(bool),
+        timedh[:F].astype(bool), endof[:F], wasted[:F, 0],
+        latsum[:F, 0], latprio[:F], doneprio[:F], ndone[:F, 0], noom[:F, 0],
+    )
+
+
+def _assign_kernel(
+    valid_ref, slot_ref, pipe_ref, pool_ref, cpus_ref, ram_ref,
+    end_ref, oom_ref, prio_ref, warm_ref, timed_ref,
+    hitc_ref, lpipe_ref, lpool_ref, lcpus_ref, lram_ref, lend_ref,
+    loom_ref, lprio_ref, lwarm_ref, ltimed_ref,
+    hitp_ref, lpcpus_ref, lpram_ref,
+):
+    i32 = jnp.int32
+    FB, K = valid_ref.shape
+    MC = hitc_ref.shape[1]
+    MP = hitp_ref.shape[1]
+    valid = valid_ref[...] != 0
+
+    oh_c = (slot_ref[...][:, :, None] == _iota(i32, (FB, K, MC), 2)) & valid[
+        :, :, None
+    ]
+    hitc_ref[...] = jnp.any(oh_c, axis=1).astype(i32)
+
+    def land_c(x, fill=0):
+        return jnp.sum(jnp.where(oh_c, x[:, :, None], fill), axis=1)
+
+    lpipe_ref[...] = land_c(pipe_ref[...])
+    lpool_ref[...] = land_c(pool_ref[...])
+    lcpus_ref[...] = land_c(cpus_ref[...], 0.0)
+    lram_ref[...] = land_c(ram_ref[...], 0.0)
+    lend_ref[...] = land_c(end_ref[...])
+    loom_ref[...] = land_c(oom_ref[...])
+    lprio_ref[...] = land_c(prio_ref[...])
+    lwarm_ref[...] = jnp.any(
+        oh_c & (warm_ref[...] != 0)[:, :, None], axis=1
+    ).astype(i32)
+    ltimed_ref[...] = jnp.any(
+        oh_c & (timed_ref[...] != 0)[:, :, None], axis=1
+    ).astype(i32)
+
+    oh_p = (pipe_ref[...][:, :, None] == _iota(i32, (FB, K, MP), 2)) & valid[
+        :, :, None
+    ]
+    hitp_ref[...] = jnp.any(oh_p, axis=1).astype(i32)
+    lpcpus_ref[...] = jnp.sum(
+        jnp.where(oh_p, cpus_ref[...][:, :, None], 0.0), axis=1
+    )
+    lpram_ref[...] = jnp.sum(
+        jnp.where(oh_p, ram_ref[...][:, :, None], 0.0), axis=1
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_containers", "max_pipelines", "block_fleet",
+                     "interpret"),
+)
+def assign_gather_kernel(
+    valid, slot, pipe, pool, cpus, ram, end, oom, prio, warm, timed,
+    *, max_containers: int, max_pipelines: int, block_fleet: int = 64,
+    interpret: bool = False,
+):
+    F, K = valid.shape
+    MC, MP = max_containers, max_pipelines
+    FB = min(block_fleet, F)
+    pad = (-F) % FB
+    rows = (valid, slot, pipe, pool, cpus, ram, end, oom, prio, warm, timed)
+    if pad:
+        rows = tuple(
+            jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+            )
+            for x in rows
+        )
+    FP = F + pad
+    grid = (FP // FB,)
+    row_tile = pl.BlockSpec((FB, K), lambda i: (i, 0))
+    ctile = pl.BlockSpec((FB, MC), lambda i: (i, 0))
+    ptile = pl.BlockSpec((FB, MP), lambda i: (i, 0))
+
+    def c_out(dt):
+        return jax.ShapeDtypeStruct((FP, MC), dt)
+
+    def p_out(dt):
+        return jax.ShapeDtypeStruct((FP, MP), dt)
+
+    outs = pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[row_tile] * 11,
+        out_specs=[ctile] * 10 + [ptile] * 3,
+        out_shape=[
+            c_out(jnp.int32), c_out(jnp.int32), c_out(jnp.int32),
+            c_out(jnp.float32), c_out(jnp.float32), c_out(jnp.int32),
+            c_out(jnp.int32), c_out(jnp.int32), c_out(jnp.int32),
+            c_out(jnp.int32),
+            p_out(jnp.int32), p_out(jnp.float32), p_out(jnp.float32),
+        ],
+        interpret=interpret,
+    )(rows[0].astype(jnp.int32), *rows[1:9],
+      rows[9].astype(jnp.int32), rows[10].astype(jnp.int32))
+    (hitc, lpipe, lpool, lcpus, lram, lend, loom, lprio, lwarm, ltimed,
+     hitp, lpcpus, lpram) = outs
+    return (
+        hitc[:F].astype(bool), lpipe[:F], lpool[:F], lcpus[:F], lram[:F],
+        lend[:F], loom[:F], lprio[:F], lwarm[:F].astype(bool),
+        ltimed[:F].astype(bool), hitp[:F].astype(bool), lpcpus[:F],
+        lpram[:F],
+    )

@@ -1,0 +1,220 @@
+"""Pure-jnp oracle for the fused executor state-update passes (phase 3).
+
+After the phase-1 read fusion (``kernels/sim_tick``) and the scheduler
+selection fusion (``kernels/sched_select``), the remaining hot path of
+the lane-major engine was the executor's *write* side: the chain of
+per-pass ``.at[].set/add`` scatters that land retirements on the
+pipeline table (``_apply_retirements``) and the per-slot ``lax.cond``
+commit inside ``apply_decision``'s assignment loop, which selected the
+ENTIRE SimState once per slot. This module fuses both landings:
+
+* :func:`retire_land_ref` — the retirement landing: for each pipeline,
+  did one of its containers OOM / complete / time out this event, what
+  is the completion tick, and the latency / priority-bucket sums.
+* :func:`assign_gather_ref` — the decision landing: the per-slot
+  assignment *rows* collected by the (now tiny) early-exit loop are
+  landed on the container and pipeline tables in one pass, instead of
+  ~20 ``.at[slot].set`` writes under a full-state ``lax.cond`` per
+  slot.
+
+The reference computes the landings as masked one-hot reductions and
+gathers over ``[MC, MP]`` — NOT the seed's ``.at[idx].add/max/set``
+scatters. On XLA:CPU a dynamic-index scatter under the engine's
+per-lane ``vmap`` lowers to a serialized ``while`` thunk per scatter
+(~180us fixed cost each), so the scatter form is the slow one there;
+the one-hot form lowers to elementwise ops + reduces and is also the
+regular tiling form the Pallas kernel / MXU wants, so ref and kernel
+share one shape. The one-hot forms are bitwise identical to the seed's
+scatters:
+
+* int/bool scatters with unique indices == one-hot masked reductions,
+  exactly;
+* the f32 landings (``cpus``/``ram``/latency terms) have at most one
+  nonzero term per output element, and ``x + 0.0 == x`` bitwise for
+  every ``x != -0.0`` (allocations and latencies are never ``-0.0``),
+  so the kernel's one-hot sums are fp-exact too;
+* order-sensitive f32 accumulators (pool frees, cache bytes) are NOT
+  landed here — the executor carries them sequentially, preserving the
+  seed's left-fold association.
+
+Property-tested in tests/test_state_update.py against the sequential
+oracles (``executor.process_*`` and the ``early_exit=False`` commit
+loop), with ``interpret=True`` pinning kernel == ref on CPU CI.
+
+Shapes (unbatched | batched): retire_land: ctr_* ``[MC] | [F, MC]``,
+arrival/prio ``[MP] | [F, MP]``, tick ``[] | [F]``; assign_gather:
+rows ``[K] | [F, K]``. The explicit batched form (what the kernel
+tiles) dispatches through ``jax.vmap`` of the per-lane landing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+INF_TICK = 2**31 - 1
+TICKS_PER_SECOND = 100_000  # types.TICK_SECONDS = 10 us (paper §3.2)
+N_PRIO = 3
+
+
+def _retire_land_1d(
+    ctr_pipe, ctr_end, ctr_start, oomed, done, timed,
+    arrival, prio, tick, timeout_on: bool,
+):
+    i32 = jnp.int32
+    MP = arrival.shape[0]
+
+    retired = oomed | done
+    if timeout_on:
+        timed = done & timed
+        done_eff = done & ~timed
+    else:
+        timed = jnp.zeros_like(done)
+        done_eff = done
+
+    # the landing as one-hot reductions over [MC, MP] instead of the
+    # seed's ``.at[pid].add/max`` scatters: batched scatters serialize
+    # on XLA:CPU under the engine's per-lane vmap, while these lower to
+    # elementwise ops + reduces. Aggregation semantics are preserved
+    # bitwise — the hit counts are int sums (``> 0`` == any), ``end_of``
+    # is an int max-fold — so duplicate ``ctr_pipe`` rows (several
+    # containers of one pipeline retiring together) land exactly like
+    # the scatters did.
+    pid = jnp.where(retired, ctr_pipe, MP)
+    oh = pid[:, None] == jnp.arange(MP, dtype=i32)[None, :]  # [MC, MP]
+    oom_hit = jnp.any(oh & oomed[:, None], axis=0)
+    done_hit = jnp.any(oh & done_eff[:, None], axis=0)
+    end_of = jnp.max(
+        jnp.where(
+            oh & done_eff[:, None], ctr_end[:, None], jnp.int32(0)
+        ),
+        axis=0,
+        initial=0,
+    )
+    if timeout_on:
+        timed_hit = jnp.any(oh & timed[:, None], axis=0)
+        timed_wasted = jnp.sum(jnp.where(timed, tick - ctr_start, 0)).astype(
+            i32
+        )
+    else:
+        timed_hit = jnp.zeros_like(done_hit)
+        timed_wasted = jnp.zeros((), i32)
+
+    lat_s = (end_of - arrival).astype(jnp.float32) / TICKS_PER_SECOND
+    lat_s = jnp.where(done_hit, lat_s, 0.0)
+    prio_oh = prio[None, :] == jnp.arange(N_PRIO, dtype=i32)[:, None]
+    lat_sum = jnp.sum(lat_s)
+    lat_prio = jnp.sum(jnp.where(prio_oh, lat_s[None, :], 0.0), axis=-1)
+    done_prio = jnp.sum(prio_oh & done_hit[None, :], axis=-1).astype(i32)
+    n_done = jnp.sum(done_hit).astype(i32)
+    n_oom = jnp.sum(oom_hit).astype(i32)
+    return (
+        oom_hit, done_hit, timed_hit, end_of, timed_wasted,
+        lat_sum, lat_prio, done_prio, n_done, n_oom,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("timeout_on",))
+def retire_land_ref(
+    ctr_pipe, ctr_end, ctr_start, oomed, done, timed,
+    arrival, prio, tick, *, timeout_on: bool = False,
+):
+    """Land container retirements on the pipeline axis.
+
+    ``timed`` (``done & ctr_timed``: the deadline kills) is consumed
+    only when ``timeout_on``; pass any placeholder (e.g. ``done``)
+    otherwise. Returns ``(oom_hit, done_hit, timed_hit, end_of,
+    timed_wasted, lat_sum, lat_prio, done_prio, n_done, n_oom)`` —
+    ``timed_hit``/``timed_wasted`` are zeros when ``timeout_on`` is
+    False.
+    """
+    fn = functools.partial(_retire_land_1d, timeout_on=timeout_on)
+    if ctr_pipe.ndim == 2:
+        return jax.vmap(
+            lambda cp, ce, cs, o, d, td, a, p, t: fn(
+                cp, ce, cs, o, d, td, a, p, t
+            )
+        )(ctr_pipe, ctr_end, ctr_start, oomed, done, timed, arrival, prio,
+          tick)
+    return fn(ctr_pipe, ctr_end, ctr_start, oomed, done, timed, arrival,
+              prio, tick)
+
+
+def _assign_gather_1d(
+    valid, slot, pipe, pool, cpus, ram, end, oom, prio, warm, timed,
+    max_containers: int, max_pipelines: int,
+):
+    i32 = jnp.int32
+    # valid rows carry unique slots/pipes (the loop consumes each empty
+    # slot and waiting pipeline it assigns), so every output element has
+    # at most one contributing row and the masked one-hot reductions are
+    # exact (single-term sums; ``x + 0.0 == x`` bitwise for the f32
+    # values, which are never ``-0.0``). One-hot instead of scatter
+    # because batched scatters serialize on XLA:CPU under the engine's
+    # per-lane vmap; these reduce to elementwise ops + reduces.
+    sv = jnp.where(valid, slot, max_containers)
+    pv = jnp.where(valid, pipe, max_pipelines)
+
+    # one one-hot membership test per axis, then *gathers*: with unique
+    # row indices, ``argmax`` over the one-hot recovers the (single)
+    # contributing row per output element, and each landed field is one
+    # [K]-to-[MC] gather instead of a full masked reduction per field
+    oh_c = sv[:, None] == jnp.arange(max_containers, dtype=i32)[None, :]
+    hit_c = jnp.any(oh_c, axis=0)
+    rr_c = jnp.argmax(oh_c, axis=0)
+
+    def land_c(x, dtype=i32):
+        return jnp.where(hit_c, x.astype(dtype)[rr_c], dtype(0))
+
+    l_pipe = land_c(pipe)
+    l_pool = land_c(pool)
+    l_cpus = land_c(cpus, jnp.float32)
+    l_ram = land_c(ram, jnp.float32)
+    l_end = land_c(end)
+    l_oom = land_c(oom)
+    l_prio = land_c(prio)
+    l_warm = hit_c & warm[rr_c]
+    l_timed = hit_c & timed[rr_c]
+
+    oh_p = pv[:, None] == jnp.arange(max_pipelines, dtype=i32)[None, :]
+    hit_p = jnp.any(oh_p, axis=0)
+    rr_p = jnp.argmax(oh_p, axis=0)
+    l_pcpus = jnp.where(hit_p, cpus[rr_p], jnp.float32(0))
+    l_pram = jnp.where(hit_p, ram[rr_p], jnp.float32(0))
+
+    return (
+        hit_c, l_pipe, l_pool, l_cpus, l_ram, l_end, l_oom, l_prio,
+        l_warm, l_timed, hit_p, l_pcpus, l_pram,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_containers", "max_pipelines")
+)
+def assign_gather_ref(
+    valid, slot, pipe, pool, cpus, ram, end, oom, prio, warm, timed,
+    *, max_containers: int, max_pipelines: int,
+):
+    """Land the collected assignment rows on the container/pipeline axes.
+
+    Rows (``[.., K]``) come from the executor's early-exit loop; valid
+    rows carry unique ``slot``/``pipe`` indices (the loop consumes each
+    empty slot and waiting pipeline it assigns), so every output element
+    has at most one contributing row.
+
+    Returns ``(hit_c, l_pipe, l_pool, l_cpus, l_ram, l_end, l_oom,
+    l_prio, l_warm, l_timed, hit_p, l_pcpus, l_pram)``: the container-
+    axis landing (``hit_c`` [.., MC] plus the per-slot values) and the
+    pipeline-axis landing (``hit_p`` [.., MP] plus the last-allocation
+    values); the executor applies them with one ``where`` per field.
+    """
+    fn = functools.partial(
+        _assign_gather_1d,
+        max_containers=max_containers,
+        max_pipelines=max_pipelines,
+    )
+    args = (valid, slot, pipe, pool, cpus, ram, end, oom, prio, warm, timed)
+    if valid.ndim == 2:
+        return jax.vmap(lambda *a: fn(*a))(*args)
+    return fn(*args)
