@@ -283,6 +283,68 @@ def faults_overhead_bench(smoke: bool = False, reps: int = 7) -> list[dict]:
     ]
 
 
+def closed_loop_overhead_bench(smoke: bool = False, reps: int = 7) -> list[dict]:
+    """Closed-loop-layer cost on the fused fleet path
+    (docs/closed-loop.md): the ``fused`` bench re-measured with the
+    client concurrency gate, client retries, and a queue-threshold
+    admission policy on, against a loop-off run timed in the same call —
+    ``closed_loop_overhead_pct`` is a same-run ratio like the trace and
+    faults gates, so machine speed normalises out. Feeds the
+    ``fused_closed_loop`` row of BENCH_fleet.json. Min-of-7 for the same
+    reason as ``trace_overhead_bench``: a ratio of two short walls needs
+    more reps than an absolute row."""
+    fleet_size = 32 if smoke else 64
+    params_off = _fleet_params(smoke)
+    # a gate tight enough that admission actually rejects/defers (every
+    # closed-loop path stays hot) but loose enough that the *simulated*
+    # work doesn't collapse and skew the wall-clock ratio
+    params_on = params_off.replace(
+        client_max_inflight=6,
+        client_think_ticks=200,
+        client_max_retries=3,
+        client_backoff_ticks=200,
+        admission_policy="queue_threshold",
+        admit_queue_limit=4,
+    )
+    seeds = list(range(fleet_size))
+    horizon = params_off.horizon_ticks
+
+    def loop_off():
+        return jax.block_until_ready(
+            fleet_run(params_off, seeds, shard=None).done_count
+        )
+
+    def loop_on():
+        return jax.block_until_ready(
+            fleet_run(params_on, seeds, shard=None).done_count
+        )
+
+    t_off_min, _ = _time(loop_off, reps=reps)
+    t_on_min, t_on_mean = _time(loop_on, reps=reps)
+    states = fleet_run(params_on, seeds, shard=None)
+    overhead_pct = round((t_on_min / t_off_min - 1.0) * 100, 1)
+    return [
+        {
+            "engine": f"fleet fused+closed-loop x{fleet_size}",
+            "fleet_engine": "fused_closed_loop",
+            "fleet_size": fleet_size,
+            "devices": 1,
+            "wall_s": round(t_on_mean, 4),
+            "wall_s_min": round(t_on_min, 4),
+            "ticks_per_s": round(fleet_size * horizon / t_on_min),
+            "sim_s_per_wall_s": round(
+                fleet_size * params_on.duration / t_on_min, 2
+            ),
+            "offered": int(jnp.sum(states.offered_total)),
+            "shed": int(jnp.sum(states.shed_total)),
+            "deferred": int(jnp.sum(states.deferred_total)),
+            "client_retries": int(jnp.sum(states.client_retry_events)),
+            "open_loop_wall_s_min": round(t_off_min, 4),
+            "closed_loop_overhead_pct": overhead_pct,
+        }
+    ]
+
+
 def scenario_fleet_bench(smoke: bool = False) -> list[dict]:
     """Scenario-family throughput rows (fused vs sharded) for
     BENCH_fleet.json: each family of the scenario library is drawn as a
@@ -627,6 +689,7 @@ def main(print_rows: bool = True, smoke: bool = False) -> list[dict]:
     rows.extend(fleet_bench(smoke=smoke))
     rows.extend(trace_overhead_bench(smoke=smoke))
     rows.extend(faults_overhead_bench(smoke=smoke))
+    rows.extend(closed_loop_overhead_bench(smoke=smoke))
     if not smoke:
         # scheduler-selection microbench -> the `selection` row of
         # BENCH_fleet.json (three-pass helpers vs fused kernel)

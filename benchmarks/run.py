@@ -87,6 +87,13 @@ def write_fleet_json(
         # chaos-layer cost on the fused path (engine_throughput.
         # faults_overhead_bench, EXPERIMENTS.md §Scheduler-Resilience)
         payload["faults_overhead_pct"] = faulted.get("faults_overhead_pct")
+    closed = by_engine.get("fused_closed_loop")
+    if closed is not None:
+        # closed-loop-layer cost on the fused path (engine_throughput.
+        # closed_loop_overhead_bench, docs/closed-loop.md)
+        payload["closed_loop_overhead_pct"] = closed.get(
+            "closed_loop_overhead_pct"
+        )
     if phase_breakdown is not None:
         payload["phase_breakdown"] = phase_breakdown
     if scenario_rows is not None:
@@ -146,6 +153,14 @@ def _faults_ratio(payload: dict) -> float | None:
     return 1.0 + pct / 100.0
 
 
+def _closed_loop_ratio(payload: dict) -> float | None:
+    """Closed-loop-ON / OFF wall ratio (same-run, machine-neutral)."""
+    pct = payload.get("closed_loop_overhead_pct")
+    if pct is None:
+        return None
+    return 1.0 + pct / 100.0
+
+
 def check_smoke_regression(loaded: dict, baseline: dict | None) -> bool | None:
     """One gate measurement: did fused throughput regress >20% vs the
     *committed* smoke baseline?
@@ -188,7 +203,22 @@ def check_smoke_regression(loaded: dict, baseline: dict | None) -> bool | None:
     fverdict = "OK" if frel <= 1.2 else "REGRESSED"
     print(f"faults-on/off smoke ratio: {new_fr:.2f} vs recorded "
           f"{base_fr:.2f} ({frel:.2f}x) {fverdict}")
-    return ok and frel <= 1.2
+    ok = ok and frel <= 1.2
+    # third gate, same trick again: the closed-loop-ON/OFF wall ratio is
+    # a same-run measurement, so a >20% rise means the admission/client
+    # pass itself got slower (e.g. its static gate stopped compiling the
+    # layer out of loop-off programs). Skipped when the committed
+    # baseline predates the metric.
+    base_cl = _closed_loop_ratio(baseline)
+    new_cl = _closed_loop_ratio(loaded)
+    if base_cl is None or new_cl is None:
+        print("no recorded closed-loop ratio - closed-loop gate skipped")
+        return ok
+    crel = new_cl / base_cl
+    cverdict = "OK" if crel <= 1.2 else "REGRESSED"
+    print(f"closed-loop on/off smoke ratio: {new_cl:.2f} vs recorded "
+          f"{base_cl:.2f} ({crel:.2f}x) {cverdict}")
+    return ok and crel <= 1.2
 
 
 def _maybe_profile(trace_dir: str | None):
@@ -256,6 +286,99 @@ def _chaos_smoke() -> None:
     print("chaos smoke OK")
 
 
+def _overload_smoke() -> None:
+    """CI overload smoke (docs/closed-loop.md): the retry_storm scenario
+    must produce a reproducible retry storm that a queue-threshold
+    admission policy survives and ``admit_all`` does not. Both arms
+    replay the SAME surge tapes (quiet tail after the surge, two early
+    pool outages); the treatment arm rejects at the gate — client
+    retries amplify its offered load and the excess is shed, but the
+    backlog drains back to its pre-fault level on every lane. The
+    control arm admits everything: amplification stays 1.0 (nothing for
+    clients to retry) yet the backlog never recovers — the metastable
+    signature, asserted on the real fused engine every CI run."""
+    import numpy as np
+
+    from repro.core import SimParams, fleet_run, workload_batch_from_traces
+    from repro.core.scenarios import retry_storm_params, scenario_lane_batch
+    from repro.core.state import INF_TICK
+
+    base = SimParams(
+        duration=0.08,
+        max_pipelines=0,
+        max_ops_per_pipeline=0,
+        max_containers=16,
+        waiting_ticks_mean=150.0,
+        op_base_seconds_mean=0.008,
+        op_base_seconds_sigma=1.0,
+        num_pools=2,
+        total_cpus=4,
+        total_ram_gb=8,
+        scheduling_algo="priority_pool",
+    )
+    n_lanes = 4
+    # tape stops at 0.06s: a quiet tail the backlog COULD drain into —
+    # whether it does is exactly what separates the two arms
+    lanes = scenario_lane_batch(
+        "retry_storm", base.replace(duration=0.06), n_lanes,
+        seed=3, surge_factor=6.0,
+    )
+
+    def arm(policy: str, limit: int = 0):
+        wls, params = workload_batch_from_traces(lanes, base)
+        p = retry_storm_params(
+            params,
+            admission_policy=policy,
+            admit_queue_limit=limit,
+            outage_mtbf_s=0.02,
+            outage_duration_s=0.006,
+            client_max_retries=3,
+        ).replace(max_fault_events=2)  # outages stop early, tail is calm
+        st = fleet_run(p, workloads=wls)
+        offered = int(np.asarray(st.offered_total).sum())
+        unique = int(np.asarray(st.offered_unique).sum())
+        return {
+            "amp": offered / max(unique, 1),
+            "shed": int(np.asarray(st.shed_total).sum()),
+            "client_retries": int(np.asarray(st.client_retry_events).sum()),
+            "faulted": int(np.sum(np.asarray(st.last_fault_tick) < INF_TICK)),
+            "drained": int(np.sum(np.asarray(st.drain_tick) < INF_TICK)),
+        }
+
+    control = arm("admit_all")
+    treated = arm("queue_threshold", limit=3)
+    for name, r in (("admit_all", control), ("queue_threshold", treated)):
+        assert r["faulted"] == n_lanes, (
+            f"{name}: only {r['faulted']}/{n_lanes} lanes saw an outage"
+        )
+    # the storm is real: client retries amplify the treated arm's load
+    assert treated["amp"] > 1.5, (
+        f"queue_threshold: no retry storm (amplification {treated['amp']:.2f})"
+    )
+    assert treated["shed"] > 0, "queue_threshold: policy never shed load"
+    assert control["amp"] == 1.0 and control["shed"] == 0, (
+        f"admit_all rejected something: amp={control['amp']:.2f} "
+        f"shed={control['shed']}"
+    )
+    # ...and the policy survives it while admit_all goes metastable
+    assert treated["drained"] == n_lanes, (
+        f"queue_threshold: backlog stuck above the pre-fault level on "
+        f"{n_lanes - treated['drained']}/{n_lanes} lanes"
+    )
+    assert control["drained"] < n_lanes, (
+        "admit_all drained every lane - the smoke config no longer "
+        "overloads the fleet"
+    )
+    print(
+        f"overload smoke: admit_all amp={control['amp']:.2f} "
+        f"drained={control['drained']}/{n_lanes} | queue_threshold "
+        f"amp={treated['amp']:.2f} shed={treated['shed']} "
+        f"retries={treated['client_retries']} "
+        f"drained={treated['drained']}/{n_lanes}"
+    )
+    print("overload smoke OK")
+
+
 def _write_smoke_perfetto() -> None:
     """A small real Perfetto trace for the CI artifact: one traced
     single-sim run, exported with ``telemetry.to_perfetto_json``."""
@@ -321,23 +444,34 @@ def main() -> None:
             # margin can't absorb under normal runner load
             candidates = []
             faults_ratios = []
+            closed_ratios = []
             for i in range(3):
                 rows = engine_throughput.fleet_bench(smoke=True)
                 rows += engine_throughput.faults_overhead_bench(smoke=True)
+                rows += engine_throughput.closed_loop_overhead_bench(
+                    smoke=True
+                )
                 loaded = write_fleet_json(rows, smoke=True)
                 ratio = _fused_vs_vmap(loaded)
                 fr = _faults_ratio(loaded)
+                cr = _closed_loop_ratio(loaded)
                 print(f"recording run {i + 1}/3: fused/vmap {ratio:.2f}, "
-                      f"faults on/off {fr:.2f}")
+                      f"faults on/off {fr:.2f}, closed-loop on/off {cr:.2f}")
                 candidates.append((ratio, loaded))
                 faults_ratios.append(fr)
+                closed_ratios.append(cr)
             _, floor = min(candidates, key=lambda c: c[0])
-            # the faults gate fails on ratios ABOVE baseline, so its
-            # conservative record is the highest of the three runs
+            # the faults/closed-loop gates fail on ratios ABOVE baseline,
+            # so their conservative record is the highest of the three runs
             frs = [fr for fr in faults_ratios if fr is not None]
             if frs:
                 floor["faults_overhead_pct"] = round(
                     (max(frs) - 1.0) * 100, 1
+                )
+            crs = [cr for cr in closed_ratios if cr is not None]
+            if crs:
+                floor["closed_loop_overhead_pct"] = round(
+                    (max(crs) - 1.0) * 100, 1
                 )
             SMOKE_BASELINE.write_text(json.dumps(floor, indent=2) + "\n")
             print(f"recorded smoke baseline (floor of 3) -> {SMOKE_BASELINE}")
@@ -347,11 +481,13 @@ def main() -> None:
             rows = engine_throughput.fleet_bench(smoke=True)
             rows += engine_throughput.trace_overhead_bench(smoke=True)
             rows += engine_throughput.faults_overhead_bench(smoke=True)
+            rows += engine_throughput.closed_loop_overhead_bench(smoke=True)
         for r in rows:
             print(r)
         loaded = write_fleet_json(rows, smoke=True)
         _write_smoke_perfetto()
         _chaos_smoke()
+        _overload_smoke()
         if not args.no_regression_gate:
             ok = check_smoke_regression(loaded, baseline)
             attempts = 1
@@ -361,13 +497,17 @@ def main() -> None:
                 print(f"re-measuring (attempt {attempts + 1}/3)...")
                 rows = engine_throughput.fleet_bench(smoke=True)
                 rows += engine_throughput.faults_overhead_bench(smoke=True)
+                rows += engine_throughput.closed_loop_overhead_bench(
+                    smoke=True
+                )
                 loaded = write_fleet_json(rows, smoke=True)
                 ok = check_smoke_regression(loaded, baseline)
                 attempts += 1
             if ok is False:
                 raise SystemExit(
                     "smoke gate failed in 3/3 measurements: fused/vmap "
-                    "throughput down >20% or faults-on/off overhead up >20% "
+                    "throughput down >20%, or the faults-on/off or "
+                    "closed-loop-on/off overhead ratio up >20% "
                     "vs the recorded baseline; if intentional, re-record the "
                     "committed baseline with `--smoke "
                     "--record-smoke-baseline` "

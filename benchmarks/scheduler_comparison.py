@@ -17,7 +17,14 @@ policies on the *same* recorded arrival tapes.
 spot_churn scenario replayed per policy with fault injection OFF and
 ON, reporting goodput degradation, retries, wasted work and SLO
 attainment under churn — the measured numbers behind EXPERIMENTS.md
-§Scheduler-Resilience."""
+§Scheduler-Resilience.
+
+``overload_comparison`` is the graceful-degradation table
+(docs/closed-loop.md): the retry_storm scenario (surge + mid-surge pool
+outage + retrying clients) replayed under each admission policy on the
+same tapes, reporting offered vs admitted load, shed/deferred counts,
+retry amplification, time-to-drain and the metastability verdict — how
+each policy trades goodput for stability when the fleet is overrun."""
 from __future__ import annotations
 
 import time
@@ -254,8 +261,97 @@ def resilience_comparison(print_rows: bool = True) -> list[dict]:
     return rows
 
 
+# policy -> the knobs that arm it (docs/closed-loop.md); every arm
+# replays the same retry_storm tapes under the same outage schedule
+OVERLOAD_POLICIES = (
+    ("admit_all", {}),
+    ("queue_threshold", {"admit_queue_limit": 3}),
+    ("token_bucket", {"admit_rate_per_s": 400.0, "admit_burst": 4.0}),
+    ("codel", {"codel_target_ticks": 400, "codel_interval_ticks": 200}),
+)
+
+
+def overload_comparison(print_rows: bool = True) -> list[dict]:
+    """Admission-policy × overload table on shared retry_storm tapes.
+
+    Each policy replays the SAME 8-lane surge tapes (quiet tail after
+    the surge, early pool outages, clients that retry rejects with
+    exponential backoff), so the differences in a column are
+    attributable to the admission decision alone. ``admitted_fraction``
+    vs ``goodput_per_s`` is the throughput-vs-goodput trade;
+    ``metastable_lanes`` counts lanes whose backlog never returned to
+    its pre-fault level — the arm the control policy (admit_all) loses.
+    """
+    import numpy as np
+
+    from repro.core.scenarios import retry_storm_params
+    from repro.core.state import INF_TICK
+
+    rows = []
+    base = SimParams(
+        duration=0.08,
+        max_pipelines=0,
+        max_ops_per_pipeline=0,
+        max_containers=16,
+        waiting_ticks_mean=150.0,
+        op_base_seconds_mean=0.008,
+        op_base_seconds_sigma=1.0,
+        num_pools=2,
+        total_cpus=4,
+        total_ram_gb=8,
+        scheduling_algo="priority_pool",
+        seed=11,
+    )
+    n_lanes = 8
+    lanes = scenario_lane_batch(
+        "retry_storm", base.replace(duration=0.06), n_lanes,
+        seed=11, surge_factor=6.0,
+    )
+    for policy, knobs in OVERLOAD_POLICIES:
+        wls, params = workload_batch_from_traces(lanes, base)
+        armed = retry_storm_params(
+            params,
+            admission_policy=policy,
+            outage_mtbf_s=0.02,
+            outage_duration_s=0.006,
+            client_max_retries=3,
+        ).replace(max_fault_events=2, **knobs)
+        t0 = time.time()
+        states = jax.block_until_ready(fleet_run(armed, workloads=wls))
+        wall = time.time() - t0
+        s = fleet_summary(states, armed)
+        offered = int(np.asarray(states.offered_total).sum())
+        unique = int(np.asarray(states.offered_unique).sum())
+        drain = np.asarray(states.drain_tick)
+        row = {
+            "scenario": "retry_storm",
+            "policy": policy,
+            "lanes": n_lanes,
+            "offered": offered,
+            "admitted": int(np.asarray(states.admitted_total).sum()),
+            "admitted_fraction": round(s["admitted_fraction_mean"], 3),
+            "shed": int(np.asarray(states.shed_total).sum()),
+            "deferred": int(np.asarray(states.deferred_total).sum()),
+            "client_retries": int(
+                np.asarray(states.client_retry_events).sum()
+            ),
+            "retry_amplification": round(offered / max(unique, 1), 2),
+            "goodput_per_s": round(s["throughput_per_s_mean"], 2),
+            "mean_latency_s": round(s["mean_latency_s_mean"], 4),
+            "drained_lanes": int(np.sum(drain < INF_TICK)),
+            "metastable_lanes": int(np.sum(drain >= INF_TICK)),
+            "fairness_jain_done": round(s["fairness_jain_done"], 3),
+            "wall_s": round(wall, 3),
+        }
+        rows.append(row)
+        if print_rows:
+            print(row)
+    return rows
+
+
 if __name__ == "__main__":
     main()
     cache_sensitivity()
     scenario_comparison()
     resilience_comparison()
+    overload_comparison()

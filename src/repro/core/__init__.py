@@ -4,6 +4,13 @@ Public API mirrors the paper (§4.1): ``run_simulator(paramfile)``,
 the ``Scheduler`` class, the ``Failure``/``Assignment``/``Pipeline``
 records and the registration decorators in ``repro.core.algorithm``.
 """
+from .admission import (
+    AdmissionView,
+    has_admission_policy,
+    list_admission_policies,
+    register_admission_policy,
+    register_admission_policy_py,
+)
 from .algorithm import (
     register_scheduler,
     register_scheduler_init,
@@ -113,6 +120,11 @@ __all__ = [
     "fault_trace_to_records",
     "fault_trace_from_records",
     "mask_down_pools",
+    "AdmissionView",
+    "register_admission_policy",
+    "register_admission_policy_py",
+    "has_admission_policy",
+    "list_admission_policies",
     "fleet_run",
     "fleet_summary",
     "make_workload_batch",

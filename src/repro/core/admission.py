@@ -1,0 +1,430 @@
+"""Closed-loop client model + admission control (overload layer).
+
+Everything the open-loop simulator lacks for overload studies lives
+here: a client model deciding which pending arrivals are *offered* this
+event, and an admission-control stage ahead of the scheduler that can
+REJECT (shed / client-retry) or DEFER offers. Both are zero-default: with
+every knob off ``params.closed_loop_active`` is False and the engine
+compiles the identical XLA program it did before this layer existed
+(digest-pinned in tests/captures/trace_off_digests.json).
+
+Admission policies are pluggable and registered exactly like scheduler
+families (see scheduler.py):
+
+>>> sorted(list_admission_policies())
+['admit_all', 'codel', 'queue_threshold', 'token_bucket']
+>>> has_admission_policy("queue-threshold")
+True
+
+A compiled policy has signature::
+
+    policy(state, wl, params, tick, offered) -> (state, reject, defer,
+                                                 defer_ticks)
+
+where ``offered`` / ``reject`` / ``defer`` are ``[MP]`` bool masks
+(reject/defer subsets of offered), the returned state may carry updated
+policy registers (token bucket level, CoDel clock), and ``defer_ticks``
+is a static python int — deferred offers re-land ``max(defer_ticks, 1)``
+ticks later through the ordinary suspension-release registers, so
+event-skip stays exact. Rankings MUST be pipe-index order (cumsum over
+the mask), because the numpy mirrors iterate pids ascending.
+
+Every built-in policy has a numpy mirror (``*_py``, registered under the
+same key) used by ``engine_python`` — op-for-op identical, including f32
+association order for the token bucket. Mirrors see a tiny
+:class:`AdmissionView` instead of ``SimState``:
+
+>>> view = AdmissionView(admitted_waiting=3, oldest_admitted_entered=0,
+...                      regs={"tokens": np.float32(2.0), "last_tick": 0,
+...                            "above_since": int(INF_TICK)})
+>>> p = SimParams(admission_policy="queue_threshold", admit_queue_limit=4)
+>>> reject, defer, _ = queue_threshold_py(p, 10, [5, 6, 7], view)
+>>> (reject, defer)   # one free slot below the limit -> admit pid 5 only
+([6, 7], [])
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import SimParams
+from .state import INF_TICK, SimState, Workload
+from .types import PipeStatus, TICKS_PER_SECOND
+
+# (state, wl, params, tick, offered) -> (state, reject, defer, defer_ticks)
+AdmissionPolicy = Callable[
+    [SimState, Workload, SimParams, jax.Array, jax.Array],
+    tuple[SimState, jax.Array, jax.Array, int],
+]
+# (params, tick, offered_pids, view) -> (reject_pids, defer_pids, defer_ticks)
+AdmissionPolicyPy = Callable[
+    [SimParams, int, list, "AdmissionView"], tuple[list, list, int]
+]
+
+_POLICIES: dict[str, AdmissionPolicy] = {}
+_POLICIES_PY: dict[str, AdmissionPolicyPy] = {}
+
+
+def _norm(key: str) -> str:
+    return key.replace("-", "_").lower()
+
+
+def register_admission_policy(key: str):
+    """Register a compiled (lane-major, vmap-safe) admission policy."""
+
+    def deco(fn: AdmissionPolicy) -> AdmissionPolicy:
+        _POLICIES[_norm(key)] = fn
+        return fn
+
+    return deco
+
+
+def register_admission_policy_py(key: str):
+    """Register the numpy mirror used by ``engine_python``."""
+
+    def deco(fn: AdmissionPolicyPy) -> AdmissionPolicyPy:
+        _POLICIES_PY[_norm(key)] = fn
+        return fn
+
+    return deco
+
+
+def get_admission_policy(key: str) -> AdmissionPolicy:
+    k = _norm(key)
+    if k not in _POLICIES:
+        raise KeyError(
+            f"unknown admission policy {key!r}; registered: "
+            f"{sorted(_POLICIES)}"
+        )
+    return _POLICIES[k]
+
+
+def get_admission_policy_py(key: str) -> AdmissionPolicyPy:
+    k = _norm(key)
+    if k not in _POLICIES_PY:
+        raise KeyError(
+            f"admission policy {key!r} has no python mirror; registered: "
+            f"{sorted(_POLICIES_PY)}"
+        )
+    return _POLICIES_PY[k]
+
+
+def has_admission_policy(key: str) -> bool:
+    return _norm(key) in _POLICIES
+
+
+def list_admission_policies() -> list[str]:
+    return sorted(_POLICIES)
+
+
+class AdmissionView:
+    """Queue statistics + mutable policy registers for the numpy mirrors.
+
+    ``admitted_waiting`` counts pipelines admitted and still WAITING (the
+    backlog the scheduler sees); ``oldest_admitted_entered`` is the
+    smallest ``entered`` tick among them (``INF_TICK`` when none);
+    ``regs`` holds the policy registers {"tokens": np.float32,
+    "last_tick": int, "above_since": int} that policies mutate in place.
+    """
+
+    __slots__ = ("admitted_waiting", "oldest_admitted_entered", "regs")
+
+    def __init__(self, admitted_waiting, oldest_admitted_entered, regs):
+        self.admitted_waiting = admitted_waiting
+        self.oldest_admitted_entered = oldest_admitted_entered
+        self.regs = regs
+
+
+def _zeros_like_mask(offered: jax.Array) -> jax.Array:
+    return jnp.zeros_like(offered)
+
+
+# ---------------------------------------------------------------------------
+# Built-in policies. Each compiled policy is immediately followed by its
+# numpy mirror; keep them in visual lockstep when editing.
+# ---------------------------------------------------------------------------
+@register_admission_policy("admit_all")
+def admit_all(state, wl, params, tick, offered):
+    """Default open-door policy: nothing rejected, nothing deferred."""
+    z = _zeros_like_mask(offered)
+    return state, z, z, 1
+
+
+@register_admission_policy_py("admit_all")
+def admit_all_py(params, tick, offered, view):
+    return [], [], 1
+
+
+@register_admission_policy("queue_threshold")
+def queue_threshold(state, wl, params, tick, offered):
+    """REJECT offers beyond a cap on admitted-and-waiting pipelines.
+
+    Classic load shedding: the backlog the scheduler may accumulate is
+    bounded by ``params.admit_queue_limit``; everything else bounces to
+    the client (which may retry with backoff — the retry-storm mechanism
+    when the limit is hit during an outage).
+    """
+    i32 = jnp.int32
+    waiting = state.pipe_status == int(PipeStatus.WAITING)
+    q = jnp.sum(waiting & state.pipe_offered).astype(i32)
+    slots = jnp.maximum(jnp.int32(params.admit_queue_limit) - q, 0)
+    rank = jnp.cumsum(offered.astype(i32))
+    reject = offered & (rank > slots)
+    return state, reject, _zeros_like_mask(offered), 1
+
+
+@register_admission_policy_py("queue_threshold")
+def queue_threshold_py(params, tick, offered, view):
+    slots = max(params.admit_queue_limit - view.admitted_waiting, 0)
+    return list(offered[slots:]), [], 1
+
+
+def _token_bucket_consts(params: SimParams) -> tuple[np.float32, int]:
+    """(per-tick refill rate as f32, defer interval in ticks) — static."""
+    rate = np.float32(params.admit_rate_per_s / TICKS_PER_SECOND)
+    if params.admit_rate_per_s > 0:
+        defer_ticks = max(
+            int(np.ceil(TICKS_PER_SECOND / params.admit_rate_per_s)), 1
+        )
+    else:  # zero rate: only the initial burst ever admits
+        defer_ticks = int(TICKS_PER_SECOND)
+    return rate, defer_ticks
+
+
+@register_admission_policy("token_bucket")
+def token_bucket(state, wl, params, tick, offered):
+    """DEFER offers beyond a token-bucket rate limit.
+
+    Tokens accrue at ``admit_rate_per_s`` up to ``admit_burst``; each
+    admission consumes one. Offers without a token are deferred one
+    refill interval (the bucket never rejects — pair it with a client
+    concurrency cap or a queue threshold for shedding).
+    """
+    f32 = jnp.float32
+    i32 = jnp.int32
+    rate, defer_ticks = _token_bucket_consts(params)
+    elapsed = (tick - state.admit_last_tick).astype(f32)
+    # the max is value-neutral (elapsed, rate >= 0) but blocks XLA from
+    # contracting the mul+add into an FMA, which would round differently
+    # from the np.float32 mirror below (mirror discipline: every f32 op
+    # must round identically in both engines)
+    refill = jnp.maximum(elapsed * jnp.float32(rate), jnp.float32(0.0))
+    tokens = jnp.minimum(
+        state.admit_tokens + refill,
+        jnp.float32(params.admit_burst),
+    )
+    n_admit = jnp.floor(tokens).astype(i32)
+    rank = jnp.cumsum(offered.astype(i32))
+    admit = offered & (rank <= n_admit)
+    defer = offered & ~admit
+    tokens = tokens - jnp.sum(admit).astype(f32)
+    state = state._replace(admit_tokens=tokens, admit_last_tick=tick)
+    return state, _zeros_like_mask(offered), defer, defer_ticks
+
+
+@register_admission_policy_py("token_bucket")
+def token_bucket_py(params, tick, offered, view):
+    regs = view.regs
+    rate, defer_ticks = _token_bucket_consts(params)
+    elapsed = np.float32(tick - regs["last_tick"])
+    tokens = np.minimum(
+        np.float32(regs["tokens"] + np.float32(elapsed * rate)),
+        np.float32(params.admit_burst),
+    )
+    n_admit = int(np.floor(tokens).astype(np.int32))
+    admit = offered[:n_admit] if n_admit > 0 else []
+    defer = list(offered[len(admit):])
+    regs["tokens"] = np.float32(tokens - np.float32(len(admit)))
+    regs["last_tick"] = tick
+    return [], defer, defer_ticks
+
+
+@register_admission_policy("codel")
+def codel(state, wl, params, tick, offered):
+    """REJECT all offers while queue delay stays above target (CoDel).
+
+    Delay = sojourn of the oldest admitted-and-waiting pipeline. Once it
+    exceeds ``codel_target_ticks`` continuously for
+    ``codel_interval_ticks``, every offer is rejected until the delay
+    recovers — bounding queue *delay* rather than queue *depth*.
+    """
+    i32 = jnp.int32
+    waiting_adm = (
+        state.pipe_status == int(PipeStatus.WAITING)
+    ) & state.pipe_offered
+    oldest = jnp.min(jnp.where(waiting_adm, state.pipe_entered, INF_TICK))
+    delay = jnp.where(oldest == INF_TICK, 0, tick - oldest).astype(i32)
+    above = delay > jnp.int32(params.codel_target_ticks)
+    above_since = jnp.where(
+        above,
+        jnp.minimum(state.codel_above_since, tick),
+        INF_TICK,
+    )
+    overload = above & (
+        (tick - above_since) >= jnp.int32(params.codel_interval_ticks)
+    )
+    reject = offered & overload
+    state = state._replace(codel_above_since=above_since)
+    return state, reject, _zeros_like_mask(offered), 1
+
+
+@register_admission_policy_py("codel")
+def codel_py(params, tick, offered, view):
+    regs = view.regs
+    oldest = view.oldest_admitted_entered
+    delay = 0 if oldest == int(INF_TICK) else tick - oldest
+    above = delay > params.codel_target_ticks
+    if above:
+        regs["above_since"] = min(regs["above_since"], tick)
+    else:
+        regs["above_since"] = int(INF_TICK)
+    overload = above and (tick - regs["above_since"]
+                          >= params.codel_interval_ticks)
+    return (list(offered) if overload else []), [], 1
+
+
+# ---------------------------------------------------------------------------
+# The closed-loop pass. Runs at the top of every engine event (fused:
+# engine._lane_decide before the pre-decision snapshot; reference:
+# engine._tick_body after the fault pass; python: engine_python between
+# the chaos block and the scheduler) — statically compiled out when
+# ``params.closed_loop_active`` is False.
+# ---------------------------------------------------------------------------
+def apply_closed_loop(
+    state: SimState, wl: Workload, tick: jax.Array, params: SimParams
+) -> SimState:
+    """Offer pending arrivals through the client gate + admission policy.
+
+    Fresh presentations are WAITING pipelines that never started and are
+    not currently admitted (``~pipe_offered``) — i.e. new arrivals plus
+    deferred/client-retried ones re-landed by the release machinery.
+    Each presentation re-counts toward ``offered_total``, which is what
+    makes the retry-amplification factor observable. Deferred and
+    client-retried offers park as SUSPENDED with a release tick folded
+    into ``nxt_release``, so the event-skip registers stay exact with no
+    new event source.
+    """
+    i32 = jnp.int32
+    f32 = jnp.float32
+    WAITING = int(PipeStatus.WAITING)
+    waiting = state.pipe_status == WAITING
+    fresh = (
+        waiting & (state.pipe_first_start == INF_TICK) & ~state.pipe_offered
+    )
+
+    # ---- client concurrency gate (closed-loop think time) ----------------
+    if params.client_max_inflight > 0:
+        active = (
+            waiting
+            | (state.pipe_status == int(PipeStatus.RUNNING))
+            | (state.pipe_status == int(PipeStatus.SUSPENDED))
+        )
+        inflight = jnp.sum(state.pipe_offered & active).astype(i32)
+        slots = jnp.maximum(jnp.int32(params.client_max_inflight) - inflight, 0)
+        rank = jnp.cumsum(fresh.astype(i32))
+        offer = fresh & (rank <= slots)
+        gate_defer = fresh & ~offer
+    else:
+        offer = fresh
+        gate_defer = jnp.zeros_like(fresh)
+
+    prio_rows = jnp.arange(3, dtype=i32)[:, None] == wl.prio[None, :]  # [3,MP]
+    off_prio = jnp.sum(prio_rows & offer[None, :], axis=1).astype(i32)
+
+    # ---- admission policy (reads the pre-admission queue) ----------------
+    if params.admission_active:
+        policy = get_admission_policy(params.admission_policy)
+        state, reject, defer, defer_ticks = policy(
+            state, wl, params, tick, offer
+        )
+    else:
+        reject = jnp.zeros_like(offer)
+        defer = jnp.zeros_like(offer)
+        defer_ticks = 1
+    admit = offer & ~reject & ~defer
+    adm_prio = jnp.sum(prio_rows & admit[None, :], axis=1).astype(i32)
+
+    # ---- rejects: client retry with capped exponential backoff, or shed --
+    attempts = state.pipe_client_attempts
+    can_retry = reject & (attempts < jnp.int32(params.client_max_retries))
+    shed = reject & ~can_retry
+    backoff = jnp.minimum(
+        jnp.float32(params.client_backoff_ticks)
+        * jnp.exp2(jnp.minimum(attempts, 30).astype(f32)),
+        jnp.float32(2**30),
+    ).astype(i32)
+    retry_release = tick + jnp.maximum(backoff, 1)
+
+    gate_release = tick + jnp.int32(max(int(params.client_think_ticks), 1))
+    pol_release = tick + jnp.int32(max(int(defer_ticks), 1))
+    to_suspend = gate_defer | defer | can_retry
+    release = jnp.where(
+        gate_defer,
+        gate_release,
+        jnp.where(defer, pol_release, retry_release),
+    )
+
+    new_status = jnp.where(
+        to_suspend,
+        int(PipeStatus.SUSPENDED),
+        jnp.where(shed, int(PipeStatus.FAILED), state.pipe_status),
+    )
+    state = state._replace(
+        pipe_status=new_status,
+        pipe_release=jnp.where(to_suspend, release, state.pipe_release),
+        pipe_completion=jnp.where(shed, tick, state.pipe_completion),
+        pipe_offered=state.pipe_offered | admit,
+        pipe_presented=state.pipe_presented | offer,
+        pipe_client_attempts=attempts + can_retry.astype(i32),
+        offered_total=state.offered_total + jnp.sum(offer).astype(i32),
+        offered_unique=state.offered_unique
+        + jnp.sum(offer & ~state.pipe_presented).astype(i32),
+        admitted_total=state.admitted_total + jnp.sum(admit).astype(i32),
+        shed_total=state.shed_total + jnp.sum(reject).astype(i32),
+        deferred_total=state.deferred_total
+        + jnp.sum(gate_defer | defer).astype(i32),
+        client_retry_events=state.client_retry_events
+        + jnp.sum(can_retry).astype(i32),
+        offered_prio=state.offered_prio + off_prio,
+        admitted_prio=state.admitted_prio + adm_prio,
+        failed_count=state.failed_count + jnp.sum(shed).astype(i32),
+        nxt_release=jnp.minimum(
+            state.nxt_release,
+            jnp.min(jnp.where(to_suspend, release, INF_TICK)),
+        ),
+    )
+
+    # ---- drain detection (overload recovery, needs the chaos layer) ------
+    if params.fault_events_active:
+        backlog = jnp.sum(state.pipe_status == WAITING).astype(i32)
+        drained = (
+            (state.last_fault_tick != INF_TICK)
+            & (tick > state.last_fault_tick)
+            & (backlog <= jnp.maximum(state.prefault_backlog, 0))
+            & (state.drain_tick == INF_TICK)
+        )
+        state = state._replace(
+            drain_tick=jnp.where(drained, tick, state.drain_tick)
+        )
+    return state
+
+
+__all__ = [
+    "AdmissionPolicy",
+    "AdmissionPolicyPy",
+    "AdmissionView",
+    "apply_closed_loop",
+    "admit_all",
+    "codel",
+    "get_admission_policy",
+    "get_admission_policy_py",
+    "has_admission_policy",
+    "list_admission_policies",
+    "queue_threshold",
+    "register_admission_policy",
+    "register_admission_policy_py",
+    "token_bucket",
+]

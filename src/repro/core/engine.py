@@ -38,7 +38,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from . import executor
+from . import admission, executor
 from .params import SimParams, load_params
 from .scheduler import (
     get_vector_scheduler,
@@ -88,6 +88,8 @@ def _tick_body(
     state = executor.process_completions(state, wl, tick, params)
     if params.fault_events_active:
         state, _ = executor.apply_faults(state, wl, tick, params)
+    if params.closed_loop_active:
+        state = admission.apply_closed_loop(state, wl, tick, params)
     view = (
         mask_down_pools(state, tick)
         if params.outage_mtbf_ticks > 0
@@ -311,6 +313,9 @@ def _lane_decide(
     jump to the lane's next event. The named scopes label the engine
     phases in XLA/profiler output; they change HLO metadata only, never
     the computation."""
+    if params.closed_loop_active:
+        with jax.named_scope("closed_loop"):
+            state = admission.apply_closed_loop(state, wl, tick, params)
     st1 = state
     with jax.named_scope("scheduler"):
         view = (

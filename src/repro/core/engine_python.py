@@ -467,6 +467,29 @@ def run_python_engine(params: SimParams, wl: Workload):
     wasted_ticks = 0
     pool_down_s = 0.0
 
+    # ---- closed loop: client model + admission control --------------------
+    # (docs/closed-loop.md; mirrors admission.apply_closed_loop op-for-op)
+    closed_on = params.closed_loop_active
+    pipe_offered = np.zeros((MP,), bool)
+    pipe_presented = np.zeros((MP,), bool)
+    pipe_client_attempts = np.zeros((MP,), np.int64)
+    offered_total = offered_unique = admitted_total = 0
+    shed_total = deferred_total = client_retry_events = 0
+    offered_prio = np.zeros((3,), np.int64)
+    admitted_prio = np.zeros((3,), np.int64)
+    adm_regs = {
+        "tokens": np.float32(params.admit_burst),
+        "last_tick": 0,
+        "above_since": int(INF_TICK),
+    }
+    last_fault_tick = int(INF_TICK)
+    prefault_backlog = -1
+    drain_tick = int(INF_TICK)
+    if params.admission_active:
+        from .admission import AdmissionView, get_admission_policy_py
+
+        adm_policy = get_admission_policy_py(params.admission_policy)
+
     def _requeue_faulted_py(pid: int, t: int) -> None:
         """Retry policy for a fault-killed / timed-out pipeline: backoff
         re-queue while budget lasts, FAILED once it is exhausted. Does
@@ -546,9 +569,14 @@ def run_python_engine(params: SimParams, wl: Workload):
         # ---- chaos layer: crashes + pool outages due at this tick -----------
         if crash_on or outage_on:
             kills: list[Container] = []
+            k_due_now = o_due_now = 0
+            backlog_at_fault = sum(
+                1 for s2 in sch.status.values() if s2 == PipeStatus.WAITING
+            )
             if crash_on:
                 new_ccur = int(np.searchsorted(crash_time, tick, side="right"))
                 k_due = new_ccur - crash_cursor
+                k_due_now = k_due
                 crash_cursor = new_ccur
                 crash_events += k_due
                 if k_due > 0:
@@ -570,6 +598,7 @@ def run_python_engine(params: SimParams, wl: Workload):
                     pool_down_until[p_ix] = max(
                         pool_down_until[p_ix], int(outage_end_t[i])
                     )
+                o_due_now = new_ocur - outage_cursor
                 outage_events += new_ocur - outage_cursor
                 outage_cursor = new_ocur
                 if down_new.any():
@@ -615,6 +644,107 @@ def run_python_engine(params: SimParams, wl: Workload):
                 for p_ix in range(NP):
                     if pool_down_until[p_ix] > tick:
                         nxt_fault = min(nxt_fault, int(pool_down_until[p_ix]))
+            if closed_on and (k_due_now > 0 or o_due_now > 0):
+                # overload bookkeeping (mirrors executor.apply_faults):
+                # stamp the fault tick, snapshot the pre-fault backlog
+                # once, and re-arm drain detection
+                last_fault_tick = tick
+                if prefault_backlog < 0:
+                    prefault_backlog = backlog_at_fault
+                drain_tick = int(INF_TICK)
+
+        # ---- closed loop: client offer gate + admission (pre-scheduler) -----
+        # (mirrors admission.apply_closed_loop; docs/closed-loop.md)
+        if closed_on:
+            fresh = [
+                pid for pid in sorted(sch.status)
+                if sch.status[pid] == PipeStatus.WAITING
+                and first_start[pid] == INF_TICK
+                and not pipe_offered[pid]
+            ]
+            if params.client_max_inflight > 0:
+                inflight = sum(
+                    1 for pid2, s2 in sch.status.items()
+                    if pipe_offered[pid2]
+                    and s2 in (PipeStatus.WAITING, PipeStatus.RUNNING,
+                               PipeStatus.SUSPENDED)
+                )
+                open_slots = max(params.client_max_inflight - inflight, 0)
+                offer = fresh[:open_slots]
+                gate_defer = fresh[open_slots:]
+            else:
+                offer = fresh
+                gate_defer = []
+            if params.admission_active:
+                adm_waiting = [
+                    pid2 for pid2, s2 in sch.status.items()
+                    if s2 == PipeStatus.WAITING and pipe_offered[pid2]
+                ]
+                view = AdmissionView(
+                    admitted_waiting=len(adm_waiting),
+                    oldest_admitted_entered=min(
+                        (int(sch.entered[pid2]) for pid2 in adm_waiting),
+                        default=int(INF_TICK),
+                    ),
+                    regs=adm_regs,
+                )
+                reject, defer, defer_ticks = adm_policy(
+                    params, tick, offer, view
+                )
+            else:
+                reject, defer, defer_ticks = [], [], 1
+            bounced = set(reject) | set(defer)
+            admit = [pid for pid in offer if pid not in bounced]
+            offered_total += len(offer)
+            for pid in offer:
+                offered_prio[int(pipelines[pid].priority)] += 1
+                if not pipe_presented[pid]:
+                    offered_unique += 1
+                    pipe_presented[pid] = True
+            admitted_total += len(admit)
+            for pid in admit:
+                admitted_prio[int(pipelines[pid].priority)] += 1
+                pipe_offered[pid] = True
+            think = max(params.client_think_ticks, 1)
+            for pid in gate_defer:
+                sch.status[pid] = PipeStatus.SUSPENDED
+                release[pid] = tick + think
+            pol_delay = max(defer_ticks, 1)
+            for pid in defer:
+                sch.status[pid] = PipeStatus.SUSPENDED
+                release[pid] = tick + pol_delay
+            deferred_total += len(gate_defer) + len(defer)
+            shed_total += len(reject)
+            for pid in reject:
+                attempt = int(pipe_client_attempts[pid])
+                if attempt < params.client_max_retries:
+                    # client-side capped exponential backoff (np.float32
+                    # mirror of the compiled arithmetic)
+                    backoff = np.minimum(
+                        np.float32(params.client_backoff_ticks)
+                        * np.exp2(np.float32(min(attempt, 30))),
+                        np.float32(2**30),
+                    ).astype(np.int32)
+                    sch.status[pid] = PipeStatus.SUSPENDED
+                    release[pid] = tick + max(int(backoff), 1)
+                    pipe_client_attempts[pid] += 1
+                    client_retry_events += 1
+                else:
+                    sch.status[pid] = PipeStatus.FAILED
+                    completion[pid] = tick
+                    failed_count += 1
+            if params.fault_events_active:
+                backlog = sum(
+                    1 for s2 in sch.status.values()
+                    if s2 == PipeStatus.WAITING
+                )
+                if (
+                    last_fault_tick != int(INF_TICK)
+                    and tick > last_fault_tick
+                    and backlog <= max(prefault_backlog, 0)
+                    and drain_tick == int(INF_TICK)
+                ):
+                    drain_tick = tick
 
         # ---- scheduler (down pools masked to zero free capacity) ------------
         down = pool_down_until > tick
@@ -886,6 +1016,28 @@ def run_python_engine(params: SimParams, wl: Workload):
         fault_kills=jnp.asarray(fault_kills, jnp.int32),
         wasted_ticks=jnp.asarray(wasted_ticks, jnp.int32),
         pool_down_s=jnp.asarray(pool_down_s, jnp.float32),
+        # ---- closed-loop registers + counters -----------------------------
+        pipe_offered=jnp.asarray(pipe_offered),
+        pipe_presented=jnp.asarray(pipe_presented),
+        pipe_client_attempts=jnp.asarray(
+            pipe_client_attempts.astype(np.int32)
+        ),
+        offered_total=jnp.asarray(offered_total, jnp.int32),
+        offered_unique=jnp.asarray(offered_unique, jnp.int32),
+        admitted_total=jnp.asarray(admitted_total, jnp.int32),
+        shed_total=jnp.asarray(shed_total, jnp.int32),
+        deferred_total=jnp.asarray(deferred_total, jnp.int32),
+        client_retry_events=jnp.asarray(client_retry_events, jnp.int32),
+        offered_prio=jnp.asarray(offered_prio.astype(np.int32)),
+        admitted_prio=jnp.asarray(admitted_prio.astype(np.int32)),
+        admit_tokens=jnp.asarray(adm_regs["tokens"], jnp.float32),
+        admit_last_tick=jnp.asarray(adm_regs["last_tick"], jnp.int32),
+        codel_above_since=jnp.asarray(
+            min(adm_regs["above_since"], int(INF_TICK)), jnp.int32
+        ),
+        last_fault_tick=jnp.asarray(last_fault_tick, jnp.int32),
+        prefault_backlog=jnp.asarray(prefault_backlog, jnp.int32),
+        drain_tick=jnp.asarray(drain_tick, jnp.int32),
     )
     return SimResult(state=st, workload=wl, params=params, sched_state=sch)
 

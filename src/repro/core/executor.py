@@ -308,6 +308,30 @@ def apply_faults(
             cache_last=jnp.where(down_new[:, None], 0, state.cache_last),
             pool_cache_used=jnp.where(down_new, 0.0, state.pool_cache_used),
         )
+    if params.closed_loop_active:
+        # overload bookkeeping (docs/closed-loop.md): remember the last
+        # crash/outage tick and the backlog at the FIRST fault; a new
+        # fault re-arms drain detection (apply_closed_loop re-stamps
+        # drain_tick once the backlog recovers). Kills and re-queues
+        # never touch WAITING pipelines, so the backlog count is the
+        # same anywhere in this pass.
+        fault_now = (k_due > 0) | (n_due > 0)
+        backlog_now = jnp.sum(
+            state.pipe_status == int(PipeStatus.WAITING)
+        ).astype(i32)
+        state = state._replace(
+            last_fault_tick=jnp.where(
+                fault_now, tick, state.last_fault_tick
+            ),
+            prefault_backlog=jnp.where(
+                fault_now & (state.prefault_backlog < 0),
+                backlog_now,
+                state.prefault_backlog,
+            ),
+            drain_tick=jnp.where(
+                fault_now, INF_TICK, state.drain_tick
+            ),
+        )
     state = _requeue_faulted(state, tick, params, fault_hit)
     fault_aux = (
         kill, kill_pipe, kill_pool, kill_cause, kill_wasted,

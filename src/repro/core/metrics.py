@@ -33,18 +33,29 @@ def summarize(
     lat_ticks = np.where(done, completion - arrival, 0)
     lat_s = lat_ticks[done] / TICKS_PER_SECOND
 
+    offered_prio = np.asarray(state.offered_prio)
+    admitted_prio = np.asarray(state.admitted_prio)
     per_prio = {}
     for p in Priority:
         sel = done & (prio == int(p))
         sel_lat_s = (completion - arrival)[sel] / TICKS_PER_SECOND
+        # every bucket statistic is guarded against an empty bucket (a
+        # priority class with no finished — or no offered — pipelines
+        # reports NaN, never a divide-by-zero or an empty-percentile)
         per_prio[p.name.lower()] = {
             "done": int(np.sum(sel)),
             "submitted": int(np.sum((arrival < INF_TICK) & (prio == int(p)))),
             "mean_latency_s": float(np.mean(sel_lat_s))
-            if np.any(sel)
+            if sel_lat_s.size
             else float("nan"),
             "p99_latency_s": float(np.percentile(sel_lat_s, 99))
-            if np.any(sel)
+            if sel_lat_s.size
+            else float("nan"),
+            # per-tenant admitted fraction (closed loop; NaN when the
+            # class was never offered, e.g. closed loop off)
+            "admitted_fraction": float(admitted_prio[int(p)])
+            / float(offered_prio[int(p)])
+            if offered_prio[int(p)] > 0
             else float("nan"),
         }
 
@@ -107,10 +118,83 @@ def summarize(
             params, prio, arrival, completion, done
         ),
     }
+    out.update(
+        _closed_loop_stats(state, params, float(np.sum(done)), dur_s)
+    )
+    # ---- fairness (Jain's index; docs/closed-loop.md) ---------------------
+    # over per-pipeline latency of finished pipelines (1.0 = perfectly
+    # even service), and over per-tenant admitted fractions (closed loop)
+    out["fairness_jain_latency"] = _jain(lat_s)
+    out["fairness_jain_admission"] = _jain(
+        np.asarray(state.admitted_prio)[offered_prio > 0]
+        / np.maximum(offered_prio[offered_prio > 0], 1)
+    )
     if trace is not None:
         out["trace_enabled"] = True
         out["events_dropped"] = int(trace.events_dropped)
     return out
+
+
+def _closed_loop_stats(
+    state: SimState, params: SimParams, n_done: float, dur_s: float
+) -> dict:
+    """Overload / graceful-degradation statistics (docs/closed-loop.md).
+
+    With the closed loop off every counter is zero and the ratios are
+    NaN — the keys are always present so summaries stay uniform.
+
+    * ``retry_amplification`` — offers presented per distinct pipeline
+      offered; 1.0 means no client re-offers, >1 is the retry storm.
+    * ``time_to_drain_s`` — seconds from the last fault until the
+      backlog first returned to its pre-fault level (NaN: no fault, or
+      never drained).
+    * ``metastable`` — the backlog had NOT recovered within
+      ``params.metastable_window_ticks`` after the last fault (window 0
+      = "by the end of the run"): the signature of a retry storm that
+      outlives its trigger.
+    """
+    offered = int(state.offered_total)
+    unique = int(state.offered_unique)
+    admitted = int(state.admitted_total)
+    last_fault = int(state.last_fault_tick)
+    drain = int(state.drain_tick)
+    had_fault = last_fault < int(INF_TICK)
+    drained = drain < int(INF_TICK)
+    window = params.metastable_window_ticks
+    if not had_fault:
+        metastable = False
+    elif window > 0:
+        metastable = (not drained) or (drain - last_fault > window)
+    else:
+        metastable = not drained
+    return {
+        "offered": offered,
+        "admitted": admitted,
+        "shed": int(state.shed_total),
+        "deferred": int(state.deferred_total),
+        "client_retries": int(state.client_retry_events),
+        "offered_load_per_s": offered / dur_s,
+        "admitted_fraction": admitted / offered if offered else float("nan"),
+        "retry_amplification": offered / unique if unique else float("nan"),
+        "time_to_drain_s": (drain - last_fault) / TICKS_PER_SECOND
+        if had_fault and drained
+        else float("nan"),
+        "metastable": bool(metastable),
+    }
+
+
+def _jain(x) -> float:
+    """Jain's fairness index (Σx)²/(n·Σx²) over nonnegative shares —
+    1.0 = perfectly even, →1/n as one element dominates. NaN for an
+    empty or all-zero vector."""
+    x = np.asarray(x, np.float64)
+    x = x[np.isfinite(x)]
+    if x.size == 0:
+        return float("nan")
+    s2 = float(np.sum(x * x))
+    if s2 <= 0:
+        return float("nan")
+    return float(np.sum(x)) ** 2 / (x.size * s2)
 
 
 def _slo_attainment(params, prio, arrival, completion, done) -> dict:

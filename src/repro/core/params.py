@@ -188,6 +188,43 @@ class SimParams:
     # NaN by metrics.summarize).
     slo_latency_s: tuple[float, ...] = (0.0, 0.0, 0.0)
 
+    # ---- closed-loop clients + admission control (all zero-default = off) --
+    # Client concurrency cap: at most this many of a lane's pipelines may
+    # be outstanding (admitted and unfinished) at once; excess arrivals
+    # wait at the client and are re-offered after ``client_think_ticks``.
+    # 0 = open loop (every arrival is offered immediately).
+    client_max_inflight: int = 0
+    # Think time before a concurrency-deferred arrival is re-offered.
+    client_think_ticks: int = 0
+    # Client-side retry budget for admission REJECTs (distinct from the
+    # server-side ``max_retries`` above, which governs fault-killed
+    # pipelines). 0 = a reject is a permanent shed (pipeline FAILED).
+    client_max_retries: int = 0
+    # Client backoff base: a rejected offer with ``attempt`` prior tries
+    # returns at ``tick + client_backoff_ticks * 2**attempt`` (capped).
+    client_backoff_ticks: int = 0
+    # Admission policy ahead of the scheduler (core/admission.py
+    # registry): "admit_all" | "queue_threshold" | "token_bucket" |
+    # "codel", or any registered custom policy.
+    admission_policy: str = "admit_all"
+    # queue_threshold: max admitted-and-waiting pipelines; offers beyond
+    # the limit are REJECTED (shed / client-retried).
+    admit_queue_limit: int = 0
+    # token_bucket: sustained admission rate (per simulated second) and
+    # burst capacity in tokens; offers beyond the bucket are DEFERRED
+    # until tokens accrue.
+    admit_rate_per_s: float = 0.0
+    admit_burst: float = 0.0
+    # codel: target queue delay (oldest admitted-waiting sojourn, ticks)
+    # and how long the delay must stay above target before offers are
+    # REJECTED (CoDel-style overload detection).
+    codel_target_ticks: int = 0
+    codel_interval_ticks: int = 0
+    # Metastability detection window: the run is flagged metastable when
+    # the backlog has not returned to its pre-fault level within this
+    # many ticks after the last fault (0 = "by end of run").
+    metastable_window_ticks: int = 0
+
     # ---- engine -------------------------------------------------------------
     engine: str = "event"              # "event" (lane-major core) | "python"
     max_containers: int = 64
@@ -241,6 +278,32 @@ class SimParams:
             or self.outage_mtbf_ticks > 0
             or self.straggler_prob > 0
         )
+
+    @property
+    def client_loop_active(self) -> bool:
+        """True when any client-model knob is switched on (concurrency
+        cap, think time, or client-side retry-on-reject)."""
+        return (
+            self.client_max_inflight > 0
+            or self.client_think_ticks > 0
+            or self.client_max_retries > 0
+            or self.client_backoff_ticks > 0
+        )
+
+    @property
+    def admission_active(self) -> bool:
+        """True when a non-trivial admission policy is configured."""
+        return (
+            self.admission_policy.replace("-", "_").lower() != "admit_all"
+        )
+
+    @property
+    def closed_loop_active(self) -> bool:
+        """True when the engine needs the closed-loop client/admission
+        pass. With every knob at its zero default the pass is compiled
+        out entirely and the engine is the identical XLA program
+        (digest-pinned in tests/captures/trace_off_digests.json)."""
+        return self.client_loop_active or self.admission_active
 
     @property
     def pool_cpus(self) -> float:

@@ -10,7 +10,7 @@ path. See docs/scenarios.md for each family's story and knobs.
 Three layers:
 
 * family functions (``diurnal``/``bursty``/``heavy_tail``/
-  ``priority_skew``/``spot_churn``) — one trace each;
+  ``priority_skew``/``spot_churn``/``retry_storm``) — one trace each;
 * ``scenario_lane_batch`` — n_lanes independent draws of one family
   (per-lane seeds), the fleet Monte-Carlo shape;
 * ``scenario_fleet`` — the same, ingested: returns ``(workloads,
@@ -19,7 +19,7 @@ Three layers:
 >>> from repro.core import SimParams
 >>> from repro.core.scenarios import get_scenario, list_scenarios
 >>> list_scenarios()
-['bursty', 'diurnal', 'heavy_tail', 'priority_skew', 'spot_churn']
+['bursty', 'diurnal', 'heavy_tail', 'priority_skew', 'retry_storm', 'spot_churn']
 >>> fn = get_scenario("diurnal")
 >>> recs = fn(SimParams(duration=0.5), seed=0)
 >>> len(recs) > 0
@@ -37,6 +37,8 @@ from .families import (
     diurnal,
     heavy_tail,
     priority_skew,
+    retry_storm,
+    retry_storm_params,
     spot_churn,
     spot_churn_params,
 )
@@ -48,6 +50,7 @@ SCENARIOS: dict[str, ScenarioFn] = {
     "bursty": bursty,
     "heavy_tail": heavy_tail,
     "priority_skew": priority_skew,
+    "retry_storm": retry_storm,
     "spot_churn": spot_churn,
 }
 
@@ -140,6 +143,8 @@ __all__ = [
     "bursty",
     "heavy_tail",
     "priority_skew",
+    "retry_storm",
+    "retry_storm_params",
     "spot_churn",
     "spot_churn_params",
 ]

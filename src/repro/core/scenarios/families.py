@@ -411,7 +411,105 @@ def spot_churn_params(
     )
 
 
+def retry_storm(
+    params: SimParams,
+    *,
+    seed: int = 0,
+    surge_factor: float = 4.0,
+    surge_start_frac: float = 0.25,
+    surge_duration_frac: float = 0.35,
+    interactive_frac: float = 0.5,
+) -> list[dict[str, Any]]:
+    """Overload surge — the arrival tape half of a retry storm.
+
+    Steady Poisson arrivals at the base rate, except for a surge window
+    (``surge_start_frac`` to ``surge_start_frac + surge_duration_frac``
+    of the horizon) where the rate jumps to ``surge_factor`` times the
+    base — an incident tape: a launch, a backfill, a thundering herd
+    after an outage. Half the traffic is INTERACTIVE by default, so
+    admission policies have a latency-sensitive class to protect. The
+    storm itself comes from the closed loop (docs/closed-loop.md): pair
+    this family with :func:`retry_storm_params`, which turns on
+    client-side retries (the amplification mechanism) plus a pool
+    outage mid-surge, and choose an admission policy to see whether the
+    backlog drains or goes metastable. The CI overload smoke
+    (benchmarks/run.py ``--overload-smoke``) asserts both outcomes.
+
+    >>> from repro.core import SimParams
+    >>> recs = retry_storm(SimParams(duration=0.5), seed=5)
+    >>> recs == retry_storm(SimParams(duration=0.5), seed=5)
+    True
+    >>> all(0.0 <= r["arrival_s"] < 0.5 for r in recs)
+    True
+    """
+    rng = np.random.default_rng(seed)
+    frac = float(np.clip(interactive_frac, 0.0, 1.0))
+    probs = ((1.0 - frac) * 0.6, (1.0 - frac) * 0.4, frac)
+    base = _base_rate_per_s(params)
+    surge = max(float(surge_factor), 1.0)
+    t0 = params.duration * float(np.clip(surge_start_frac, 0.0, 1.0))
+    t1 = min(
+        t0 + params.duration * max(float(surge_duration_frac), 0.0),
+        params.duration,
+    )
+
+    def rate(t: float) -> float:
+        return base * surge if t0 <= t < t1 else base
+
+    arrivals = _thinned_arrivals(
+        rng, rate, base * surge, params.duration, _max_arrivals(params)
+    )
+    return _records(rng, params, arrivals, probs=probs)
+
+
+def retry_storm_params(
+    params: SimParams,
+    *,
+    outage_mtbf_s: float = 0.3,
+    outage_duration_s: float = 0.05,
+    max_retries: int = 2,
+    base_backoff_s: float = 0.001,
+    client_max_retries: int = 4,
+    client_backoff_s: float = 0.002,
+    client_max_inflight: int = 0,
+    client_think_s: float = 0.002,
+    admission_policy: str = "admit_all",
+    admit_queue_limit: int = 0,
+    metastable_window_s: float = 0.0,
+) -> SimParams:
+    """The closed-loop-knob half of the ``retry_storm`` scenario.
+
+    Returns ``params`` with client-side retries on (rejected offers come
+    back after a capped exponential backoff — the amplification
+    mechanism), a pool-outage schedule that strikes mid-surge, a modest
+    server-side retry budget for the fault kills, and the chosen
+    admission policy. The default ``admit_all`` is the control arm: the
+    storm hits the scheduler unfiltered. Swap in ``queue_threshold``
+    (with ``admit_queue_limit``) or any registered policy
+    (docs/closed-loop.md) for the treatment arm. Window 0 means
+    metastability is judged "by the end of the run".
+    """
+    return params.replace(
+        outage_mtbf_ticks=outage_mtbf_s * TICKS_PER_SECOND,
+        outage_duration_ticks=outage_duration_s * TICKS_PER_SECOND,
+        max_retries=max_retries,
+        base_backoff_ticks=max(int(base_backoff_s * TICKS_PER_SECOND), 1),
+        client_max_retries=client_max_retries,
+        client_backoff_ticks=max(
+            int(client_backoff_s * TICKS_PER_SECOND), 1
+        ),
+        client_max_inflight=client_max_inflight,
+        client_think_ticks=max(int(client_think_s * TICKS_PER_SECOND), 1)
+        if client_max_inflight > 0
+        else 0,
+        admission_policy=admission_policy,
+        admit_queue_limit=admit_queue_limit,
+        metastable_window_ticks=int(metastable_window_s * TICKS_PER_SECOND),
+    )
+
+
 __all__ = [
     "diurnal", "bursty", "heavy_tail", "priority_skew",
     "spot_churn", "spot_churn_params",
+    "retry_storm", "retry_storm_params",
 ]

@@ -167,6 +167,28 @@ class SimState(NamedTuple):
     wasted_ticks: jax.Array       # [] int32 Σ elapsed ticks of killed work
     pool_down_s: jax.Array        # [] f32 ∫ #down-pools dt (pool-seconds)
 
+    # ---- closed loop (client model + admission control) ------------------
+    # NOTE: appended AFTER the chaos schema; the digest tools hash the
+    # pre-closed-loop prefix as the complement of CLOSED_LOOP_FIELDS, so
+    # the PR-6/7 captures in tests/captures/ stay valid verbatim.
+    pipe_offered: jax.Array       # [MP] bool — admitted and not yet finished
+    pipe_presented: jax.Array     # [MP] bool — ever offered to admission
+    pipe_client_attempts: jax.Array  # [MP] int32 client-side retry count
+    offered_total: jax.Array      # [] int32 offers presented (re-offers count)
+    offered_unique: jax.Array     # [] int32 distinct pipelines ever offered
+    admitted_total: jax.Array     # [] int32 offers admitted
+    shed_total: jax.Array         # [] int32 offers REJECTed by admission
+    deferred_total: jax.Array     # [] int32 offers deferred (client or policy)
+    client_retry_events: jax.Array  # [] int32 rejects turned into client retries
+    offered_prio: jax.Array       # [3] int32 per-priority offers
+    admitted_prio: jax.Array      # [3] int32 per-priority admissions
+    admit_tokens: jax.Array       # [] f32 token-bucket level
+    admit_last_tick: jax.Array    # [] int32 last token-bucket refill tick
+    codel_above_since: jax.Array  # [] int32 first tick delay exceeded target
+    last_fault_tick: jax.Array    # [] int32 most recent crash/outage tick
+    prefault_backlog: jax.Array   # [] int32 WAITING count at the first fault
+    drain_tick: jax.Array         # [] int32 backlog-drained tick post-fault
+
     @property
     def max_containers(self) -> int:
         return self.ctr_status.shape[0]
@@ -189,6 +211,31 @@ CHAOS_FIELDS = (
     "fault_kills",
     "wasted_ticks",
     "pool_down_s",
+)
+
+
+# the closed-loop fields, in declaration order — everything NOT in
+# CHAOS_FIELDS or CLOSED_LOOP_FIELDS predates both layers, so the digest
+# tools can keep hashing the legacy prefix (and the chaos captures hash
+# everything but this tuple) without re-recording.
+CLOSED_LOOP_FIELDS = (
+    "pipe_offered",
+    "pipe_presented",
+    "pipe_client_attempts",
+    "offered_total",
+    "offered_unique",
+    "admitted_total",
+    "shed_total",
+    "deferred_total",
+    "client_retry_events",
+    "offered_prio",
+    "admitted_prio",
+    "admit_tokens",
+    "admit_last_tick",
+    "codel_above_since",
+    "last_fault_tick",
+    "prefault_backlog",
+    "drain_tick",
 )
 
 
@@ -276,6 +323,24 @@ def init_state(params: SimParams) -> SimState:
         fault_kills=jnp.asarray(0, i32),
         wasted_ticks=jnp.asarray(0, i32),
         pool_down_s=jnp.asarray(0.0, f32),
+        pipe_offered=jnp.zeros((MP,), bool),
+        pipe_presented=jnp.zeros((MP,), bool),
+        pipe_client_attempts=jnp.zeros((MP,), i32),
+        offered_total=jnp.asarray(0, i32),
+        offered_unique=jnp.asarray(0, i32),
+        admitted_total=jnp.asarray(0, i32),
+        shed_total=jnp.asarray(0, i32),
+        deferred_total=jnp.asarray(0, i32),
+        client_retry_events=jnp.asarray(0, i32),
+        offered_prio=jnp.zeros((3,), i32),
+        admitted_prio=jnp.zeros((3,), i32),
+        # the token bucket starts full (burst capacity)
+        admit_tokens=jnp.asarray(params.admit_burst, f32),
+        admit_last_tick=jnp.asarray(0, i32),
+        codel_above_since=jnp.asarray(INF_TICK, i32),
+        last_fault_tick=jnp.asarray(INF_TICK, i32),
+        prefault_backlog=jnp.asarray(-1, i32),
+        drain_tick=jnp.asarray(INF_TICK, i32),
     )
 
 
@@ -409,6 +474,7 @@ def seconds(ticks: jax.Array) -> jax.Array:
 __all__ = [
     "INF_TICK",
     "CHAOS_FIELDS",
+    "CLOSED_LOOP_FIELDS",
     "FaultTrace",
     "Workload",
     "SimState",

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.parallel.compat import shard_map
 
+from . import metrics
 from .engine import _fleet_compiled, _quiet_partial_donation
 from .params import SimParams
 from .state import INF_TICK, SimState, Workload
@@ -276,7 +277,7 @@ def fleet_run(
     >>> int(states.done_count.shape[0])
     2
     >>> sorted(fleet_summary(states, p))[:2]
-    ['bytes_moved_gb_mean', 'cache_hit_gb_mean']
+    ['admitted_fraction_mean', 'admitted_mean']
     """
     if (seeds is None) == (workloads is None):
         raise ValueError(
@@ -434,6 +435,28 @@ def fleet_summary(states: SimState, params: SimParams, traces=None) -> dict:
         ),
         "pool_down_s_mean": float(np.asarray(states.pool_down_s).mean()),
     }
+    # ---- closed loop / overload (fleet means, zero when the loop is off) --
+    offered = np.asarray(states.offered_total, dtype=np.float64)
+    admitted = np.asarray(states.admitted_total, dtype=np.float64)
+    out.update(
+        {
+            "offered_mean": float(offered.mean()),
+            "admitted_mean": float(admitted.mean()),
+            "shed_mean": float(np.asarray(states.shed_total).mean()),
+            "deferred_mean": float(np.asarray(states.deferred_total).mean()),
+            "client_retries_mean": float(
+                np.asarray(states.client_retry_events).mean()
+            ),
+            "admitted_fraction_mean": float(
+                (admitted[offered > 0] / offered[offered > 0]).mean()
+            )
+            if np.any(offered > 0)
+            else float("nan"),
+            # Jain's index over per-lane completed work: how evenly the
+            # fleet's lanes were served (docs/closed-loop.md)
+            "fairness_jain_done": metrics._jain(done),
+        }
+    )
     if traces is not None:
         out["events_dropped_total"] = int(
             sum(t.events_dropped for t in traces)

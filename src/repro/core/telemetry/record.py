@@ -42,7 +42,7 @@ import numpy as np
 
 from ..params import SimParams
 from ..scheduler import SchedDecision, decision_provenance
-from ..state import SimState, Workload
+from ..state import INF_TICK, SimState, Workload
 from ..types import ContainerStatus, PipeStatus
 from .schema import RECORD_WIDTH, TRACE_STEP_EVENTS, EventKind
 
@@ -77,6 +77,9 @@ def step_record_count(max_pipelines: int, max_containers: int,
             n += 2 * params.num_pools           # POOL_DOWN + POOL_UP
         if params.faults_active:
             n += max_pipelines                  # RETRY
+        if params.closed_loop_active:
+            # ADMIT_REJECT + CLIENT_RETRY + SHED (docs/closed-loop.md)
+            n += 3 * max_pipelines
     return n
 
 
@@ -273,6 +276,27 @@ def record_step(
         a_parts.append(st1.pipe_retries)
         b_parts.append(st1.pipe_release)
         off += MP
+    if params.closed_loop_active:
+        # the closed-loop pass runs before the st1 snapshot, so its
+        # transitions show up as pre -> st1 deltas: a bumped client
+        # attempt counter is a CLIENT_RETRY; a fresh FAILED that never
+        # started (first_start still INF) can only be an admission shed.
+        client_retried = st1.pipe_client_attempts > pre.pipe_client_attempts
+        shed_now = (
+            (st1.pipe_status == int(PipeStatus.FAILED))
+            & (pre.pipe_status != int(PipeStatus.FAILED))
+            & (st1.pipe_first_start == INF_TICK)
+        )
+        zeros_mp = jnp.zeros((MP,), i32)
+        mask_parts += [client_retried | shed_now, client_retried, shed_now]
+        kind_parts += [np.full(MP, int(EventKind.ADMIT_REJECT)),
+                       np.full(MP, int(EventKind.CLIENT_RETRY)),
+                       np.full(MP, int(EventKind.SHED))]
+        pipe_parts += [pipes, pipes, pipes]
+        pool_parts += [neg1_mp, neg1_mp, neg1_mp]
+        a_parts += [wl.prio, st1.pipe_client_attempts, wl.prio]
+        b_parts += [zeros_mp, st1.pipe_release, zeros_mp]
+        off += 3 * MP
     assert off == n
 
     mask = jnp.concatenate(mask_parts) & active

@@ -47,6 +47,9 @@ Payloads per kind (``op`` / ``a`` / ``b``)
  POOL_UP           -1                     0                       0
  TIMEOUT           -1                     container slot          priority
  RETRY             -1                     attempt number          release tick
+ ADMIT_REJECT      -1                     priority                0
+ CLIENT_RETRY      -1                     attempt number          release tick
+ SHED              -1                     priority                0
 ================  =====================  ======================  =================
 
 Within one engine step, records appear in the fixed order arrivals ->
@@ -56,7 +59,12 @@ chronologically, so a lane's record array is time-ordered as stored.
 The chaos-layer kinds (FAULT, TIMEOUT, POOL_DOWN, POOL_UP, RETRY,
 emitted only when the matching fault knobs are on — see docs/faults.md)
 extend that order at the end of each step: faults -> timeouts ->
-pool-downs -> pool-ups -> retries.
+pool-downs -> pool-ups -> retries. The closed-loop kinds (ADMIT_REJECT,
+CLIENT_RETRY, SHED, emitted only when the closed-loop knobs are on —
+see docs/closed-loop.md) follow last: admit-rejects -> client-retries
+-> sheds. ADMIT_REJECT fires for every admission rejection; each is
+also either a CLIENT_RETRY (budget left, re-offered with backoff) or a
+SHED (budget exhausted, pipeline FAILED).
 """
 from __future__ import annotations
 
@@ -81,6 +89,9 @@ class EventKind(enum.IntEnum):
     POOL_UP = 12        # pool recovered from its outage
     TIMEOUT = 13        # container killed at its wall-clock deadline
     RETRY = 14          # faulted/timed-out pipeline re-queued with backoff
+    ADMIT_REJECT = 15   # offer rejected by the admission policy
+    CLIENT_RETRY = 16   # rejected offer re-queued by the client (backoff)
+    SHED = 17           # rejected offer permanently shed (client budget out)
 
 
 KIND_NAMES = tuple(k.name.lower() for k in EventKind)

@@ -1,0 +1,323 @@
+"""Overload-layer guarantees (docs/closed-loop.md).
+
+Four properties the closed-loop/admission subsystem stands on:
+
+* **Off is free**: with every client and admission knob at its zero
+  default, the closed-loop fields of the final state are deterministic
+  init values — combined with the pinned-field digests of
+  tests/test_telemetry.py, a default run is bitwise what it was before
+  the layer existed.
+* **One semantics**: the fused lane-major engine and the Python
+  reference agree exactly on every offer/admit/shed/defer counter,
+  client attempt, and final pipeline status under every built-in
+  admission policy, with and without chaos underneath.
+* **The client retry contract**: rejected offers return at
+  ``tick + client_backoff_ticks * 2**attempt`` (capped) exactly, and an
+  exhausted budget sheds the pipeline as FAILED at the reject tick.
+* **Honest accounting**: ``admit_all`` with no rejects can never show
+  retry amplification; empty priority buckets report NaN, never a
+  crash; Jain's index obeys its textbook extremes.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (
+    SimParams,
+    fleet_run,
+    fleet_summary,
+    generate_workload,
+    run,
+)
+from repro.core.metrics import _jain
+from repro.core.state import CLOSED_LOOP_FIELDS, INF_TICK
+from repro.core.telemetry.schema import (
+    COL_A,
+    COL_B,
+    COL_PIPE,
+    COL_TICK,
+    EventKind,
+)
+
+CLOSED_LOOP = dict(
+    client_max_inflight=6,
+    client_think_ticks=30,
+    client_max_retries=3,
+    client_backoff_ticks=40,
+    admission_policy="queue_threshold",
+    admit_queue_limit=4,
+    metastable_window_ticks=400,
+)
+
+
+def _params(seed=0, algo="priority", duration=0.04, **extra):
+    kw = dict(
+        duration=duration,
+        seed=seed,
+        scheduling_algo=algo,
+        num_pools=1 if algo == "naive" else 2,
+        waiting_ticks_mean=400.0,
+        op_base_seconds_mean=0.005,
+        op_base_seconds_sigma=1.0,
+        max_pipelines=32,
+        max_containers=32,
+    )
+    kw.update(extra)
+    return SimParams(**kw)
+
+
+CL_COMPARE = list(CLOSED_LOOP_FIELDS) + [
+    "pipe_status",
+    "pipe_completion",
+    "done_count",
+    "failed_count",
+]
+
+
+def _assert_closed_loop_equal(a, b, ctx=""):
+    for f in CL_COMPARE:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)),
+            np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: field {f}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Off is free.
+# ---------------------------------------------------------------------------
+def test_closed_loop_off_state_is_pristine():
+    """A default run leaves every closed-loop field at its init value —
+    the structural half of the pinned-digest guarantee (the digest
+    families hash the complement of CLOSED_LOOP_FIELDS, so these fields
+    being inert is what keeps the PR-6/7 captures verbatim-valid)."""
+    res = run(_params())
+    state = res.state
+    inf_fields = {"codel_above_since", "last_fault_tick", "drain_tick"}
+    for f in CLOSED_LOOP_FIELDS:
+        a = np.asarray(getattr(state, f))
+        if f in inf_fields:
+            assert (a == INF_TICK).all(), f
+        elif f == "prefault_backlog":
+            assert (a == -1).all(), f
+        else:
+            assert not a.any(), f"{f} changed in a closed-loop-off run"
+    s = res.summary()
+    assert s["offered"] == s["shed"] == s["client_retries"] == 0
+    assert np.isnan(s["retry_amplification"])
+    assert np.isnan(s["time_to_drain_s"])
+    assert s["metastable"] is False
+
+
+# ---------------------------------------------------------------------------
+# One semantics: fused == Python reference under every policy.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "knobs",
+    [
+        dict(client_max_inflight=4, client_think_ticks=50),
+        dict(admission_policy="queue_threshold", admit_queue_limit=3,
+             client_max_retries=3, client_backoff_ticks=40),
+        dict(admission_policy="token_bucket", admit_rate_per_s=2_000.0,
+             admit_burst=4.0),
+        dict(admission_policy="codel", codel_target_ticks=300,
+             codel_interval_ticks=150, client_max_retries=2,
+             client_backoff_ticks=30),
+        dict(outage_mtbf_ticks=1_200.0, outage_duration_ticks=300.0,
+             max_retries=3, base_backoff_ticks=40, **CLOSED_LOOP),
+    ],
+    ids=["client_gate", "queue_threshold", "token_bucket", "codel",
+         "all_plus_chaos"],
+)
+@pytest.mark.parametrize("algo", ["priority", "naive"])
+def test_event_equals_python_closed_loop(knobs, algo):
+    params = _params(seed=5, algo=algo, **knobs)
+    wl = generate_workload(params)
+    r_event = run(params, workload=wl, engine="event")
+    r_python = run(params, workload=wl, engine="python")
+    assert int(r_event.state.offered_total) > 0, "config too quiet"
+    _assert_closed_loop_equal(
+        r_event.state, r_python.state, ctx=f"{algo}/{sorted(knobs)}"
+    )
+
+
+@settings(
+    max_examples=10,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    seed=st.integers(0, 2**16),
+    algo=st.sampled_from(["naive", "priority", "priority_pool"]),
+    policy=st.sampled_from(
+        ["admit_all", "queue_threshold", "token_bucket", "codel"]
+    ),
+    inflight=st.sampled_from([0, 4]),
+    retries=st.integers(0, 3),
+)
+def test_event_equals_python_closed_loop_property(
+    seed, algo, policy, inflight, retries
+):
+    params = _params(
+        seed=seed,
+        algo=algo,
+        admission_policy=policy,
+        admit_queue_limit=3 if policy == "queue_threshold" else 0,
+        admit_rate_per_s=1_500.0 if policy == "token_bucket" else 0.0,
+        admit_burst=3.0 if policy == "token_bucket" else 0.0,
+        codel_target_ticks=250 if policy == "codel" else 0,
+        codel_interval_ticks=125 if policy == "codel" else 0,
+        client_max_inflight=inflight,
+        client_think_ticks=40 if inflight else 0,
+        client_max_retries=retries,
+        client_backoff_ticks=35 if retries else 0,
+    )
+    wl = generate_workload(params)
+    r_event = run(params, workload=wl, engine="event")
+    r_python = run(params, workload=wl, engine="python")
+    _assert_closed_loop_equal(
+        r_event.state, r_python.state,
+        ctx=f"{algo}/{policy}/s{seed}/i{inflight}/r{retries}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# The client retry contract.
+# ---------------------------------------------------------------------------
+def test_client_backoff_schedule_exact():
+    """Every CLIENT_RETRY record's release tick obeys
+    tick + max(min(client_backoff_ticks * 2**(attempt-1), 2**30), 1) —
+    the recorded attempt is the post-increment count."""
+    params = _params(
+        seed=11,
+        admission_policy="queue_threshold",
+        admit_queue_limit=2,
+        client_max_retries=4,
+        client_backoff_ticks=37,
+    )
+    res = run(params, trace=True, trace_capacity=8192)
+    assert res.trace.events_dropped == 0
+    retries = res.trace.of_kind(EventKind.CLIENT_RETRY)
+    assert len(retries) > 0, "config too quiet: no client retries recorded"
+    base = params.client_backoff_ticks
+    for row in retries:
+        tick, attempt, release = (
+            int(row[COL_TICK]), int(row[COL_A]), int(row[COL_B])
+        )
+        assert attempt >= 1
+        want = tick + max(min(base * 2 ** (attempt - 1), 2**30), 1)
+        assert release == want, (
+            f"CLIENT_RETRY at {tick}, attempt {attempt}: "
+            f"release {release} != {want}"
+        )
+    # per-pipe attempts are strictly increasing (re-offer ordering)
+    by_pipe = {}
+    for row in retries:
+        by_pipe.setdefault(int(row[COL_PIPE]), []).append(int(row[COL_A]))
+    for pipe, attempts in by_pipe.items():
+        assert attempts == sorted(attempts), f"pipe {pipe}: {attempts}"
+        assert len(set(attempts)) == len(attempts), f"pipe {pipe}: {attempts}"
+
+
+def test_client_retry_budget_contract():
+    """With a client retry budget, rejects are re-offered (retry events,
+    amplification > 1); with client_max_retries=0 every reject is a
+    permanent shed — the pipeline FAILS without ever starting."""
+    gate = dict(admission_policy="queue_threshold", admit_queue_limit=2)
+    lenient = run(
+        _params(seed=4, client_max_retries=5, client_backoff_ticks=40, **gate)
+    ).summary()
+    strict_res = run(_params(seed=4, client_max_retries=0, **gate))
+    strict = strict_res.summary()
+    assert lenient["shed"] > 0, "config too quiet: no rejects"
+    assert lenient["client_retries"] > 0
+    assert lenient["retry_amplification"] > 1.0
+    assert strict["client_retries"] == 0
+    assert strict["retry_amplification"] == 1.0
+    assert strict["failed"] >= strict["shed"] > 0
+    # a shed pipeline never started: completion stamped, first_start INF
+    st = strict_res.state
+    shed_mask = (
+        (np.asarray(st.pipe_status) == 6)  # FAILED
+        & (np.asarray(st.pipe_first_start) == INF_TICK)
+    )
+    assert shed_mask.sum() == strict["shed"]
+    assert (np.asarray(st.pipe_completion)[shed_mask] < INF_TICK).all()
+
+
+def test_admit_all_never_amplifies():
+    """The control-arm invariant of the overload comparisons: without an
+    admission gate there are no rejects, so no client re-offers — the
+    concurrency gate alone (deferred arrivals were never offered) keeps
+    retry_amplification at exactly 1.0."""
+    s = run(
+        _params(seed=2, waiting_ticks_mean=100.0,
+                client_max_inflight=4, client_think_ticks=50)
+    ).summary()
+    assert s["offered"] > 0
+    assert s["deferred"] > 0, "config too quiet: gate never engaged"
+    assert s["shed"] == 0
+    assert s["client_retries"] == 0
+    assert s["retry_amplification"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Drain / metastability detection.
+# ---------------------------------------------------------------------------
+def test_drain_and_metastable_definitions_cohere():
+    """With window 0, metastable is exactly "faulted and never drained":
+    the flag and time_to_drain_s can never disagree."""
+    params = _params(
+        seed=7,
+        outage_mtbf_ticks=1_500.0,
+        outage_duration_ticks=300.0,
+        max_retries=3,
+        base_backoff_ticks=40,
+        **{**CLOSED_LOOP, "metastable_window_ticks": 0},
+    )
+    s = run(params).summary()
+    assert s["faults_injected"] > 0, "config too quiet: no faults"
+    assert s["metastable"] == bool(np.isnan(s["time_to_drain_s"]))
+    if not np.isnan(s["time_to_drain_s"]):
+        assert s["time_to_drain_s"] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Honest accounting: empty buckets, fairness extremes, fleet means.
+# ---------------------------------------------------------------------------
+def test_empty_priority_buckets_report_nan():
+    """A run where nothing finishes (and nothing is offered) must
+    summarise cleanly: every per-priority latency/admission statistic is
+    NaN, never an empty-percentile crash or divide-by-zero."""
+    s = run(
+        _params(duration=0.002, op_base_seconds_mean=0.05)
+    ).summary()
+    assert s["done"] == 0
+    assert np.isnan(s["p99_latency_s"])
+    assert np.isnan(s["fairness_jain_latency"])
+    assert np.isnan(s["fairness_jain_admission"])
+    for name, blk in s["per_priority"].items():
+        assert blk["done"] == 0, name
+        assert np.isnan(blk["mean_latency_s"]), name
+        assert np.isnan(blk["p99_latency_s"]), name
+        assert np.isnan(blk["admitted_fraction"]), name
+
+
+def test_jain_index_extremes():
+    assert _jain(np.full(8, 3.7)) == pytest.approx(1.0)
+    assert _jain(np.array([1.0, 0.0, 0.0, 0.0])) == pytest.approx(0.25)
+    assert np.isnan(_jain(np.array([])))
+    assert np.isnan(_jain(np.zeros(4)))
+    # non-finite entries are dropped, not propagated
+    assert _jain(np.array([2.0, 2.0, np.nan, np.inf])) == pytest.approx(1.0)
+
+
+def test_fleet_summary_carries_overload_means():
+    params = _params(seed=1, **CLOSED_LOOP)
+    states = fleet_run(params, seeds=[0, 1, 2, 3])
+    fs = fleet_summary(states, params)
+    assert fs["offered_mean"] > 0
+    assert 0.0 < fs["admitted_fraction_mean"] <= 1.0
+    assert 0.0 < fs["fairness_jain_done"] <= 1.0
+    for k in ("shed_mean", "deferred_mean", "client_retries_mean"):
+        assert np.isfinite(fs[k]), k

@@ -23,7 +23,7 @@ def test_docs_directory_complete():
     """The documented docs map: every page README links into exists."""
     for page in ("architecture.md", "trace-format.md",
                  "scheduler-authoring.md", "scenarios.md",
-                 "observability.md"):
+                 "observability.md", "faults.md", "closed-loop.md"):
         assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
 
 
@@ -56,6 +56,14 @@ def test_sweep_doctests():
     from repro.core import sweep
 
     _run_doctests(sweep)
+
+
+def test_admission_doctests():
+    """The policy-registry and AdmissionView examples backing
+    docs/closed-loop.md stay runnable."""
+    from repro.core import admission
+
+    _run_doctests(admission)
 
 
 def test_telemetry_doctests():

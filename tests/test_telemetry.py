@@ -62,11 +62,18 @@ def _digest(state, fields=None) -> str:
     # recorded before the chaos layer appended its SimState fields, and
     # with every fault knob at its zero default the legacy fields are
     # bitwise unchanged (test_faults.py asserts the new fields are
-    # deterministic zeros). Chaos digests pass fields=state._fields.
+    # deterministic zeros). The closed-loop layer (PR: admission
+    # control) appended another field block under the same contract —
+    # test_closed_loop.py pins its fields to deterministic zeros when
+    # the loop is off — so each capture generation hashes the complement
+    # of every LATER schema extension: the recorded hex strings stay
+    # verbatim-valid forever. Chaos digests pass the chaos-era field
+    # list explicitly (see test_states_match_chaos_capture).
     if fields is None:
-        from repro.core.state import CHAOS_FIELDS
+        from repro.core.state import CHAOS_FIELDS, CLOSED_LOOP_FIELDS
 
-        fields = [f for f in state._fields if f not in CHAOS_FIELDS]
+        skip = set(CHAOS_FIELDS) | set(CLOSED_LOOP_FIELDS)
+        fields = [f for f in state._fields if f not in skip]
     h = hashlib.sha256()
     for f in fields:
         a = np.ascontiguousarray(np.asarray(getattr(state, f)))
@@ -164,11 +171,59 @@ def test_chaos_states_match_capture(algo, path):
         out = fleet_run(params, FLEET_SEEDS, shard=None, **kw)
         return out[0] if trace else out
 
+    # the chaos captures hashed the full schema OF THEIR ERA — i.e.
+    # everything up to and including CHAOS_FIELDS but none of the
+    # closed-loop fields appended later
+    from repro.core.state import CLOSED_LOOP_FIELDS
+
+    for trace in (False, True):
+        state = run_path(trace)
+        chaos_era = [
+            f for f in state._fields if f not in CLOSED_LOOP_FIELDS
+        ]
+        assert _digest(state, fields=chaos_era) == want, (
+            f"{algo}/chaos/{path} trace={trace}: faults-on state diverged "
+            "from the recorded capture"
+        )
+
+
+# mirrors tools/record_telemetry_capture.py:CLOSED_LOOP — admission
+# control + closed-loop clients layered on top of the chaos grid
+_CLOSED_LOOP = dict(
+    client_max_inflight=6,
+    client_think_ticks=30,
+    client_max_retries=3,
+    client_backoff_ticks=40,
+    admission_policy="queue_threshold",
+    admit_queue_limit=4,
+    metastable_window_ticks=400,
+)
+
+
+@pytest.mark.parametrize("algo", ["naive", "priority_pool"])
+@pytest.mark.parametrize("path", ["run", "fleet"])
+def test_closed_loop_states_match_capture(algo, path):
+    """Closed-loop-ON runs are bitwise-reproducible: every SimState
+    field (admission/client counters included) hashes to the recorded
+    capture, with and without the trace recorder."""
+    digests = _capture("digests_closed_loop")
+    want = digests[f"{algo}/closed_loop/{path}"]
+    params = _params(algo, dp=True).replace(
+        seed=7, **_CHAOS, **_CLOSED_LOOP
+    )
+
+    def run_path(trace):
+        kw = dict(trace=True, trace_capacity=4096) if trace else {}
+        if path == "run":
+            return run(params, **kw).state
+        out = fleet_run(params, FLEET_SEEDS, shard=None, **kw)
+        return out[0] if trace else out
+
     for trace in (False, True):
         state = run_path(trace)
         assert _digest(state, fields=state._fields) == want, (
-            f"{algo}/chaos/{path} trace={trace}: faults-on state diverged "
-            "from the recorded capture"
+            f"{algo}/closed_loop/{path} trace={trace}: closed-loop state "
+            "diverged from the recorded capture"
         )
 
 

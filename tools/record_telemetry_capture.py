@@ -16,8 +16,19 @@ Two digest families live in the capture:
   bitwise what they were before the chaos layer existed (and the new
   fields are deterministic zeros, asserted separately by
   tests/test_faults.py).
-* ``digests_chaos`` — a faults-ON grid, hashing ALL fields: the
-  reproducibility pin for the chaos layer itself.
+* ``digests_chaos`` — a faults-ON grid, hashing the chaos-era field
+  list (``SimState._fields`` minus ``state.CLOSED_LOOP_FIELDS``, i.e.
+  everything that existed when these digests were recorded): the
+  reproducibility pin for the chaos layer itself, verbatim-valid
+  across later schema growth by the same complement trick.
+* ``digests_closed_loop`` — a closed-loop-ON grid (admission control +
+  client retries + faults), hashing ALL fields: the reproducibility
+  pin for the overload layer.
+
+Re-running this tool PRESERVES previously recorded families verbatim
+(they are pinned forever; the tests prove today's engine still matches
+them) and only records families missing from the capture file. Delete
+the file to re-record from scratch on a new machine class.
 
 Digests are only comparable on the machine class that recorded them
 (same backend, same arch): the capture file records both and the test
@@ -95,9 +106,18 @@ def state_digest(state, fields=None) -> str:
 
 def legacy_fields():
     """The pre-fault SimState field list the faults-off digests hash."""
-    from repro.core.state import CHAOS_FIELDS, SimState
+    from repro.core.state import CHAOS_FIELDS, CLOSED_LOOP_FIELDS, SimState
 
-    return [f for f in SimState._fields if f not in CHAOS_FIELDS]
+    skip = set(CHAOS_FIELDS) | set(CLOSED_LOOP_FIELDS)
+    return [f for f in SimState._fields if f not in skip]
+
+
+def chaos_era_fields():
+    """The field list of the chaos-capture era: everything before the
+    closed-loop block was appended."""
+    from repro.core.state import CLOSED_LOOP_FIELDS, SimState
+
+    return [f for f in SimState._fields if f not in CLOSED_LOOP_FIELDS]
 
 
 def run_grid() -> dict[str, str]:
@@ -128,16 +148,53 @@ def run_grid() -> dict[str, str]:
 def run_chaos_grid() -> dict[str, str]:
     from repro.core import fleet_run, run
 
+    fields = chaos_era_fields()
     digests: dict[str, str] = {}
     for algo in CHAOS_SCHEDULERS:
         params = capture_params(algo, dp=True).replace(seed=7, **CHAOS)
         tag = f"{algo}/chaos"
+        digests[f"{tag}/run"] = state_digest(run(params).state, fields)
+        digests[f"{tag}/fleet"] = state_digest(
+            fleet_run(params, FLEET_SEEDS, shard=None), fields
+        )
+        print(f"captured {tag}", flush=True)
+    return digests
+
+
+CLOSED_LOOP = dict(
+    client_max_inflight=6,
+    client_think_ticks=30,
+    client_max_retries=3,
+    client_backoff_ticks=40,
+    admission_policy="queue_threshold",
+    admit_queue_limit=4,
+    metastable_window_ticks=400,
+)
+CLOSED_LOOP_SCHEDULERS = ["naive", "priority_pool"]
+
+
+def run_closed_loop_grid() -> dict[str, str]:
+    from repro.core import fleet_run, run
+
+    digests: dict[str, str] = {}
+    for algo in CLOSED_LOOP_SCHEDULERS:
+        params = capture_params(algo, dp=True).replace(
+            seed=7, **CHAOS, **CLOSED_LOOP
+        )
+        tag = f"{algo}/closed_loop"
         digests[f"{tag}/run"] = state_digest(run(params).state)
         digests[f"{tag}/fleet"] = state_digest(
             fleet_run(params, FLEET_SEEDS, shard=None)
         )
         print(f"captured {tag}", flush=True)
     return digests
+
+
+GRIDS = {
+    "digests": run_grid,
+    "digests_chaos": run_chaos_grid,
+    "digests_closed_loop": run_closed_loop_grid,
+}
 
 
 def main() -> None:
@@ -148,14 +205,23 @@ def main() -> None:
         "machine": platform.machine(),
         "n_devices": jax.local_device_count(),
         "fleet_seeds": FLEET_SEEDS,
-        "digests": run_grid(),
-        "digests_chaos": run_chaos_grid(),
     }
+    if CAPTURE.exists():
+        # recorded digest families are pinned forever: keep them
+        # verbatim and only fill in families this tool grew since
+        old = json.loads(CAPTURE.read_text())
+        payload.update(
+            {k: old[k] for k in GRIDS if k in old}
+        )
+    for family, grid in GRIDS.items():
+        if family not in payload:
+            payload[family] = grid()
     CAPTURE.parent.mkdir(parents=True, exist_ok=True)
     CAPTURE.write_text(json.dumps(payload, indent=2) + "\n")
     print(
-        f"wrote {CAPTURE} ({len(payload['digests'])} trace-off + "
-        f"{len(payload['digests_chaos'])} chaos configs)"
+        f"wrote {CAPTURE} ("
+        + ", ".join(f"{len(payload[k])} {k}" for k in GRIDS)
+        + ")"
     )
 
 
