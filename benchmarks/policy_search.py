@@ -1,0 +1,203 @@
+"""Policy-search benchmarks (docs/policy-search.md).
+
+Two entry points, both recorded into ``BENCH_fleet.json``:
+
+* ``search_smoke`` — a tiny-budget CEM run (≤16 candidates, ONE
+  scenario family) that rides the CI bench-smoke job. It asserts the
+  search machinery end to end: every named baseline in the grid is
+  weakly dominated by some Pareto-front member (the baselines ride in
+  every generation's candidate block, so a front that fails this has a
+  dominance or NaN-guard bug, not a search-quality problem), and it
+  reports candidates/s throughput for the ``search_rows`` block.
+* ``acceptance_search`` — the PR's acceptance run: a 64-candidate CEM
+  over TWO scenario families (bursty + heavy_tail lanes round-robined
+  on a deliberately small 4-CPU box with cloud bursting enabled, so
+  the premium overflow decouples cost from raw utilisation). Run
+  twice from the same seed and asserted byte-identical, it must
+  return a front containing a champion that weakly dominates every
+  named baseline on (mean latency, utilisation, cost_dollars); the
+  run's candidate history is what ``benchmarks.run`` records under
+  ``search_history``.
+
+All objectives are minimised — see ``repro.search.grid.OBJECTIVES``
+for why utilisation counts as footprint rather than merit here.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SimParams
+from repro.search import cem_search, weakly_dominates
+from repro.search.grid import scenario_factory
+
+# the search arena: a SATURATING 4-CPU box — the horizon is generous
+# enough that every baseline finishes every pipeline, so the censored
+# latency estimator reduces to true latency and the utilisation/cost
+# spread measures pure efficiency (cache-miss rescans, preemption
+# restarts, cloud-overflow premium: with cloud bursting on, overflow
+# pays a 1.5x premium, which keeps cost a separate axis from raw
+# utilisation). In an overloaded arena the dominance target is
+# geometrically unreachable: whoever completes least anchors the
+# utilisation envelope while whoever completes most anchors the
+# latency envelope, and no single policy can do both.
+SEARCH_PARAMS = dict(
+    seed=0,
+    scheduling_algo="policy",
+    max_pipelines=24,
+    max_containers=32,
+    duration=0.2,
+    waiting_ticks_mean=500.0,
+    op_base_seconds_mean=0.002,
+    num_pools=2,
+    total_cpus=4,
+    total_ram_gb=8,
+    cache_gb_per_pool=4.0,
+    scan_ticks_per_gb=100.0,
+    cold_start_ticks=40,
+    container_warm_ticks=2_000,
+    cloud_scaling=True,
+)
+
+
+def _arena() -> SimParams:
+    return SimParams.from_dict(dict(SEARCH_PARAMS))
+
+
+def _assert_front_dominates_baselines(res) -> None:
+    """Every named baseline must be weakly dominated by some front
+    member (on all objective columns — the baselines themselves sit in
+    the candidate pool, so this checks the Pareto/NaN machinery)."""
+    for name, brow in zip(res.baseline_names, res.baseline_objectives):
+        covered = any(
+            weakly_dominates(frow, brow) for frow in res.pareto_objectives
+        )
+        assert covered, (
+            f"no Pareto-front member weakly dominates baseline {name!r} "
+            f"({brow.tolist()})"
+        )
+
+
+def _row(name: str, res, wall_s: float, n_candidates: int) -> dict:
+    return {
+        "search": name,
+        "candidates": n_candidates,
+        "evaluations": res.evaluations,
+        "wall_s": round(wall_s, 3),
+        "candidates_per_s": round(n_candidates / max(wall_s, 1e-9), 2),
+        "lane_evals_per_s": round(res.evaluations / max(wall_s, 1e-9), 1),
+        "front_size": int(len(res.pareto_objectives)),
+        "champion": res.champion is not None,
+    }
+
+
+def search_smoke(print_rows: bool = True) -> list[dict]:
+    """CI smoke: ≤16 candidates over ONE scenario family."""
+    generations, population = 1, 12  # 12 candidates: 6 baselines + 6 samples
+    make = scenario_factory(["bursty"], _arena(), 4, seed=7)
+    t0 = time.time()
+    res = cem_search(
+        make, seed=3, generations=generations, population=population,
+        rungs=(0.5, 1.0),
+    )
+    wall = time.time() - t0
+    n_cand = generations * population
+    assert n_cand <= 16, "smoke budget is <= 16 candidates"
+    _assert_front_dominates_baselines(res)
+    assert res.pareto_objectives.shape[0] >= 1, "empty Pareto front"
+    row = _row("cem_smoke", res, wall, n_cand)
+    if print_rows:
+        print(row)
+    return [row]
+
+
+def _history_block(res) -> dict:
+    """The compact candidate-history artifact committed to
+    BENCH_fleet.json: per generation the full-fidelity survivor
+    policies + objectives (the rows that fed the front and the elite
+    refit), plus the judgement baselines, front, and champion. The
+    byte-exact full record (every rung's scores) stays in
+    ``SearchResult.to_json()`` for the determinism tests."""
+    gens = []
+    for g in res.history:
+        full = g["rungs"][-1]
+        gens.append(
+            {
+                "generation": g["generation"],
+                "best_score": g["best_score"],
+                "survivors": g["survivors"],
+                "elites": g["elites"],
+                "policies": [g["policies"][i] for i in g["survivors"]],
+                "objectives": full["objectives"],
+                "scores": full["scores"],
+                "mean": g["mean"],
+                "std": g["std"],
+            }
+        )
+    return {
+        "seed": res.seed,
+        "objectives": list(res.objectives),
+        "evaluations": res.evaluations,
+        "baselines": {
+            n: [float(v) for v in row]
+            for n, row in zip(res.baseline_names, res.baseline_objectives)
+        },
+        "generations": gens,
+        "pareto_objectives": res.pareto_objectives.tolist(),
+        "pareto_policies": res.pareto_policies.tolist(),
+        "champion": res.champion,
+        "meta": res.meta,
+    }
+
+
+def acceptance_search(print_rows: bool = True) -> tuple[list[dict], dict]:
+    """The acceptance run: 64 candidates, 2 scenario families, run
+    TWICE and asserted bitwise-reproducible; returns ``(search_rows,
+    search_history)`` for BENCH_fleet.json."""
+    generations, population = 4, 16  # 4 x 16 = 64 candidates
+    make = scenario_factory(["bursty", "heavy_tail"], _arena(), 4, seed=7)
+
+    def one():
+        t0 = time.time()
+        r = cem_search(
+            make, seed=3, generations=generations, population=population,
+            rungs=(0.5, 1.0),
+        )
+        return r, time.time() - t0
+
+    res, wall = one()
+    res2, _ = one()
+    assert res.to_json() == res2.to_json(), (
+        "same-seed acceptance search is not bitwise-reproducible"
+    )
+    _assert_front_dominates_baselines(res)
+    assert res.champion is not None, (
+        "no front member weakly dominates every named baseline on "
+        "(mean latency, utilisation, cost_dollars)"
+    )
+    # the champion's acceptance triple, spelled out for the record
+    tri = np.asarray(res.champion["objectives"])[[0, 2, 3]]
+    base_tri = res.baseline_objectives[:, [0, 2, 3]]
+    assert all(weakly_dominates(tri, b) for b in base_tri)
+    row = _row("cem_acceptance", res, wall, generations * population)
+    row["champion_objectives"] = [
+        float(v) for v in res.champion["objectives"]
+    ]
+    if print_rows:
+        print(row)
+        print(
+            "champion (lat, util, cost):", [float(v) for v in tri],
+            "vs baseline envelope:",
+            [float(v) for v in base_tri.min(axis=0)],
+        )
+    return [row], _history_block(res)
+
+
+def main(print_rows: bool = True) -> tuple[list[dict], dict]:
+    rows, history = acceptance_search(print_rows=print_rows)
+    return rows, history
+
+
+if __name__ == "__main__":
+    main()

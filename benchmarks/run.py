@@ -43,6 +43,8 @@ def write_fleet_json(
     smoke: bool,
     phase_breakdown: dict | None = None,
     scenario_rows: list[dict] | None = None,
+    search_rows: list[dict] | None = None,
+    search_history: dict | None = None,
 ) -> dict:
     """Persist the fleet-engine rows; returns the validated payload.
 
@@ -56,7 +58,10 @@ def write_fleet_json(
     both feed EXPERIMENTS.md §Scheduler-Perf. ``scenario_rows``
     (``engine_throughput.scenario_fleet_bench``) track fused/sharded
     throughput per scenario family — realistic-skew numbers for future
-    binning/engine PRs, not just seed-batch variance.
+    binning/engine PRs, not just seed-batch variance. ``search_rows``
+    (``benchmarks.policy_search``) track policy-search throughput in
+    candidates/s, and ``search_history`` is the acceptance run's
+    candidate-history artifact (docs/policy-search.md).
     """
     path = BENCH_JSON_SMOKE if smoke else BENCH_JSON
     fleet_rows = [r for r in rows if "fleet_engine" in r]
@@ -98,6 +103,10 @@ def write_fleet_json(
         payload["phase_breakdown"] = phase_breakdown
     if scenario_rows is not None:
         payload["scenario_rows"] = scenario_rows
+    if search_rows is not None:
+        payload["search_rows"] = search_rows
+    if search_history is not None:
+        payload["search_history"] = search_history
     path.write_text(json.dumps(payload, indent=2) + "\n")
     # read-back validation: well-formed JSON with the tracked metrics
     loaded = json.loads(path.read_text())
@@ -129,6 +138,20 @@ def write_fleet_json(
             for key in ("scenario", "fleet_engine", "wall_s_min",
                         "ticks_per_s"):
                 assert key in r, f"missing {key} in {r}"
+    if search_rows is not None:
+        assert loaded["search_rows"], "no search rows recorded"
+        for r in loaded["search_rows"]:
+            for key in ("search", "candidates", "evaluations",
+                        "candidates_per_s", "front_size", "champion"):
+                assert key in r, f"missing {key} in {r}"
+    if search_history is not None:
+        sh = loaded["search_history"]
+        for key in ("seed", "objectives", "generations", "baselines",
+                    "pareto_objectives", "champion", "evaluations"):
+            assert key in sh, f"missing {key} in search_history"
+        assert sh["champion"] is not None, (
+            "acceptance search_history recorded without a champion"
+        )
     print(f"wrote {path} "
           f"(speedup vs vmap baseline: fused "
           f"{loaded['speedup_fused_vs_vmap']}, sharded "
@@ -484,7 +507,10 @@ def main() -> None:
             rows += engine_throughput.closed_loop_overhead_bench(smoke=True)
         for r in rows:
             print(r)
-        loaded = write_fleet_json(rows, smoke=True)
+        from benchmarks import policy_search
+
+        search_rows = policy_search.search_smoke()
+        loaded = write_fleet_json(rows, smoke=True, search_rows=search_rows)
         _write_smoke_perfetto()
         _chaos_smoke()
         _overload_smoke()
@@ -618,8 +644,15 @@ def main() -> None:
         breakdown = engine_throughput.phase_breakdown()
         print("phase breakdown (us/event):", breakdown["us_per_event"])
         print("phase shares:", breakdown["share"])
+
+        print("== policy_search (docs/policy-search.md acceptance) ==")
+        from benchmarks import policy_search
+
+        search_rows, search_history = policy_search.acceptance_search()
         write_fleet_json(rows, smoke=False, phase_breakdown=breakdown,
-                         scenario_rows=scenario_rows)
+                         scenario_rows=scenario_rows,
+                         search_rows=search_rows,
+                         search_history=search_history)
 
     print("== kernels ==")
     from benchmarks import kernels_bench

@@ -25,11 +25,15 @@ from .faults import (
     fault_trace_to_records,
     generate_fault_trace,
 )
-from .metrics import completion_table, summarize
+from .metrics import completion_table, fleet_lane_stats, summarize
 from .params import SimParams, load_params
+from .policy import DEFAULT_POINTS, N_POLICY_PARAMS, PolicyParams
 from .scheduler import (
     SchedDecision,
+    get_policy_point,
+    has_policy_point,
     mask_down_pools,
+    policy_points,
     register_vector_scheduler,
     register_vector_scheduler_family,
     register_vector_scheduler_init,
@@ -42,7 +46,14 @@ from .state import (
     container_schedule,
     init_state,
 )
-from .sweep import fleet_run, fleet_summary, make_workload_batch, pad_lanes
+from .sweep import (
+    attach_policies,
+    fleet_run,
+    fleet_summary,
+    make_workload_batch,
+    pad_lanes,
+    policy_grid_workloads,
+)
 from . import telemetry
 from .telemetry import (
     EventKind,
@@ -127,8 +138,17 @@ __all__ = [
     "list_admission_policies",
     "fleet_run",
     "fleet_summary",
+    "fleet_lane_stats",
     "make_workload_batch",
     "pad_lanes",
+    "attach_policies",
+    "policy_grid_workloads",
+    "PolicyParams",
+    "N_POLICY_PARAMS",
+    "DEFAULT_POINTS",
+    "get_policy_point",
+    "has_policy_point",
+    "policy_points",
     "telemetry",
     "TraceEvents",
     "Span",

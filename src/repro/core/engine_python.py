@@ -293,6 +293,167 @@ def _priority_like_py(sch: Scheduler, pool_mode: str):
     return suspends, assignments
 
 
+def _policy_like_py(sch: Scheduler, pol) -> tuple:
+    """numpy mirror of the parameterised policy family
+    (``scheduler._policy_family``), f32 op-for-op — the reference the
+    fused engine's dynamic "policy" scheduler is parity-tested against
+    (tests/test_search.py). ``pol`` is a ``PolicyParams``; the knob
+    semantics and association order follow the vector implementation
+    exactly (lead-key composition, want sizing, preemption commit)."""
+    params = sch.params
+    f32 = np.float32
+    K = params.max_assignments_per_tick
+    total_cpu = sch.total_cpus
+    total_ram = sch.total_ram_gb
+    chunk_cpu = f32(pol.chunk_frac) * total_cpu
+    chunk_ram = f32(pol.chunk_frac) * total_ram
+    cap_cpu = f32(pol.cap_frac) * total_cpu
+    cap_ram = f32(pol.cap_frac) * total_ram
+    eps = f32(EPS)
+
+    preempt_on = f32(pol.preempt) > 0.5
+    excl_on = f32(pol.exclusive) > 0.5
+    grab_on = f32(pol.grab_all) > 0.5
+    gate_on = f32(pol.ram_gate) > 0.5
+    multi_on = f32(pol.multi_pool) > 0.5
+    pin_on = f32(pol.cache_pin) > 0.5
+    size_w, prio_w = f32(pol.size_weight), f32(pol.prio_weight)
+    age_w, loc_b = f32(pol.age_weight), f32(pol.locality_bonus)
+
+    suspends: list[Suspension] = []
+    assignments: list[Assignment] = []
+    free_cpu = sch.pool_cpu_free.copy()
+    free_ram = sch.pool_ram_free.copy()
+    live = dict(sch.running)  # pid -> Container, shrinks as we preempt
+    idle0 = not sch.running
+    rejects = [
+        pid
+        for pid in sch.waiting_pids()
+        if sch.pipelines[pid].failed_before
+        and (
+            not gate_on
+            or f32(sch.pipelines[pid].last_ram_gb) >= cap_ram - eps
+        )
+    ]
+    sch.data["rejects"] = rejects
+    tried: set[int] = set(rejects)
+    assigned = False
+
+    def lead(pid):
+        # same composition order as the vector lead key: (a + b) - c
+        p = sch.pipelines[pid]
+        return f32(
+            f32(size_w * f32(p.num_ops))
+            + f32(age_w * f32(sch.entered[pid]))
+        ) - f32(prio_w * f32(int(p.priority)))
+
+    def pool_select(f_cpu, f_ram, pid):
+        score = f_cpu / np.maximum(sch.pool_cpu_cap, eps) + (
+            f_ram / np.maximum(sch.pool_ram_cap, eps)
+        )
+        row = sch.cache_bytes[:, pid]
+        bonus = np.where(row > 0, loc_b, f32(0.0))
+        best = int(np.argmax(score + bonus))
+        if pin_on and row.max() > 0:
+            best = int(np.argmax(row))
+        return best if multi_on else 0
+
+    for _ in range(K):
+        cands = [pid for pid in sch.waiting_pids() if pid not in tried]
+        if not cands:
+            break
+        pid = min(
+            cands,
+            key=lambda pid: (
+                lead(pid),
+                -int(sch.pipelines[pid].priority),
+                sch.entered[pid],
+                pid,
+            ),
+        )
+        tried.add(pid)
+        p = sch.pipelines[pid]
+        if p.failed_before:
+            want_cpu = np.minimum(f32(pol.retry_mult) * f32(p.last_cpus), cap_cpu)
+            want_ram = np.minimum(
+                f32(pol.retry_mult) * f32(p.last_ram_gb), cap_ram
+            )
+        elif p.last_ram_gb > 0.0:
+            want_cpu, want_ram = f32(p.last_cpus), f32(p.last_ram_gb)
+        else:
+            want_cpu, want_ram = chunk_cpu, chunk_ram
+
+        pool = pool_select(free_cpu, free_ram, pid)
+        if grab_on:
+            want_cpu = sch.pool_cpu_cap[pool]
+            want_ram = sch.pool_ram_cap[pool]
+        fits = free_cpu[pool] >= want_cpu - eps and free_ram[pool] >= want_ram - eps
+
+        if excl_on:
+            # naive mode: idle cluster, one assignment, no fits test
+            if idle0 and not assigned:
+                assignments.append(Assignment(p, pool, want_cpu, want_ram))
+                free_cpu[pool] -= want_cpu
+                free_ram[pool] -= want_ram
+                assigned = True
+            continue
+
+        if fits:
+            assignments.append(Assignment(p, pool, want_cpu, want_ram))
+            free_cpu[pool] -= want_cpu
+            free_ram[pool] -= want_ram
+            assigned = True
+            continue
+
+        # preemption path, knob-gated
+        if not preempt_on or not (f32(int(p.priority)) > f32(pol.preempt_min_prio)):
+            continue
+        thresh = f32(int(p.priority)) - f32(pol.victim_prio_gap)
+        victims = [
+            c
+            for c in live.values()
+            if f32(int(sch.pipelines[c.pipe].priority)) < thresh
+        ]
+        if not victims:
+            continue
+        victims.sort(
+            key=lambda c: (int(sch.pipelines[c.pipe].priority), -c.start, c.slot)
+        )
+        v = victims[0]
+        f_cpu2 = free_cpu.copy()
+        f_ram2 = free_ram.copy()
+        f_cpu2[v.pool] += f32(v.cpus)
+        f_ram2[v.pool] += f32(v.ram)
+        pool2 = v.pool if multi_on else pool
+        if f_cpu2[pool2] >= want_cpu - eps and f_ram2[pool2] >= want_ram - eps:
+            suspends.append(Suspension(sch.pipelines[v.pipe]))
+            del live[v.pipe]
+            free_cpu, free_ram = f_cpu2, f_ram2
+            assignments.append(Assignment(p, pool2, want_cpu, want_ram))
+            free_cpu[pool2] -= want_cpu
+            free_ram[pool2] -= want_ram
+            assigned = True
+    return suspends, assignments
+
+
+@register_scheduler_init(key="policy")
+def _policy_init(sch: Scheduler) -> None:
+    pass
+
+
+@register_scheduler(key="policy")
+def _policy(sch: Scheduler, failures, new):
+    vec = sch.data.get("policy")
+    if vec is None:
+        raise ValueError(
+            "scheduler 'policy' needs a workload with a policy vector "
+            "attached; see sweep.attach_policies"
+        )
+    from .policy import PolicyParams
+
+    return _policy_like_py(sch, PolicyParams.from_vector(vec))
+
+
 @register_scheduler_init(key="priority")
 def _priority_init(sch: Scheduler) -> None:
     pass
@@ -417,6 +578,10 @@ def run_python_engine(params: SimParams, wl: Workload):
     horizon = params.horizon_ticks
     pipelines = pipelines_from_workload(wl)
     sch = Scheduler(params, pipelines)
+    if wl.policy is not None:
+        # the dynamic "policy" scheduler reads its PolicyParams vector
+        # from the workload, same as the vector engine
+        sch.data["policy"] = np.asarray(wl.policy, np.float32)
     algo = get_python_scheduler(params.scheduling_algo)
     get_python_scheduler_init(params.scheduling_algo)(sch)
 

@@ -28,12 +28,14 @@ from repro.kernels.sched_select import masked_lex_argmin
 from .algorithm import register_scheduler, register_scheduler_init
 from .engine_python import Scheduler, _priority_like_py
 from .params import SimParams
+from .policy import DEFAULT_POINTS
 from .scheduler import (
     EPS,
     decision_loop,
     empty_decision,
     get_vector_scheduler,
     onehot_set,
+    policy_family_make,
     register_vector_scheduler_family,
 )
 from .state import INF_TICK, SimState, Workload
@@ -115,8 +117,14 @@ def _sjf_like(early_exit: bool = False):
     return sjf
 
 
-# ``_sjf_like`` IS the family: make(early_exit) -> scheduler
-register_vector_scheduler_family("sjf")(_sjf_like)
+# sjf is a point of the parameterised policy family (25 % chunks,
+# op-count lead key, no preemption) — registered through the unified
+# builder so searches can seed from it; ``_sjf_like`` stays registered
+# as the independent oracle for the identity test wall.
+register_vector_scheduler_family("sjf", params=DEFAULT_POINTS["sjf"])(
+    policy_family_make
+)
+register_vector_scheduler_family("sjf_ref")(_sjf_like)
 sjf_vector = get_vector_scheduler("sjf")
 
 

@@ -230,6 +230,78 @@ def _cache_hit_rate(state: SimState) -> float:
     return hit / total if total > 0 else 0.0
 
 
+def fleet_lane_stats(
+    states: SimState, params: SimParams, arrival=None
+) -> dict[str, np.ndarray]:
+    """Per-lane fleet statistics as ``[F]`` numpy arrays (the policy
+    search objectives; ``repro.search.grid`` consumes this).
+
+    ``arrival`` is the batch's ``[F, MP]`` arrival table, copied to host
+    BEFORE the ``fleet_run`` call — the engine donates (consumes) the
+    workload batch, so latency can't be derived from it afterwards.
+    Without it, latency columns are NaN.
+
+    Empty lanes (nothing finished — shed, overloaded, or padding) report
+    NaN latency, never a divide-by-zero or an empty-mean warning; the
+    NaN rides into Pareto ranking as +inf (worst), per the
+    ``repro.search.pareto`` contract.
+
+    The ``censored_*`` latency columns are the search objectives: every
+    ARRIVED pipeline contributes — completed ones their true latency,
+    unfinished ones the lower bound ``horizon - arrival`` (a censored
+    observation). Completed-only means reward a policy for ignoring
+    work (serve two easy pipelines fast, strand the queue, report a
+    tiny "mean latency"); censoring makes stranded work visible, so an
+    admission-starved policy can't dominate a search grid.
+    """
+    status = np.asarray(states.pipe_status)  # [F, MP]
+    completion = np.asarray(states.pipe_completion, np.float64)
+    done_mask = status == int(PipeStatus.DONE)
+    done = done_mask.sum(axis=1)  # [F]
+    dur_s = params.duration
+
+    F = status.shape[0]
+    mean_lat = np.full((F,), np.nan)
+    p99_lat = np.full((F,), np.nan)
+    cens_mean = np.full((F,), np.nan)
+    cens_p99 = np.full((F,), np.nan)
+    if arrival is not None:
+        arrival = np.asarray(arrival, np.float64)
+        arrived = arrival < float(INF_TICK)  # [F, MP] real (in-horizon) slots
+        horizon = float(params.horizon_ticks)
+        lat_s = (completion - arrival) / TICKS_PER_SECOND
+        cens_s = (
+            np.where(done_mask, completion, horizon) - arrival
+        ) / TICKS_PER_SECOND
+        for i in range(F):
+            lane = lat_s[i][done_mask[i]]
+            if lane.size:
+                mean_lat[i] = lane.mean()
+                p99_lat[i] = np.percentile(lane, 99)
+            clane = cens_s[i][arrived[i]]
+            if clane.size:
+                cens_mean[i] = clane.mean()
+                cens_p99[i] = np.percentile(clane, 99)
+
+    cap_cpu_s = np.sum(np.asarray(states.pool_cpu_cap), axis=-1) * dur_s
+    util_cpu = np.sum(np.asarray(states.util_cpu_s), axis=-1)
+    return {
+        "done": done.astype(np.int64),
+        "failed": (status == int(PipeStatus.FAILED)).sum(axis=1),
+        "throughput_per_s": done / dur_s,
+        "mean_latency_s": mean_lat,
+        "p99_latency_s": p99_lat,
+        "censored_mean_latency_s": cens_mean,
+        "censored_p99_latency_s": cens_p99,
+        "cpu_utilization": np.where(
+            cap_cpu_s > 0, util_cpu / np.maximum(cap_cpu_s, 1e-12), 0.0
+        ),
+        "cost_dollars": np.asarray(states.cost_dollars, np.float64),
+        "oom_events": np.asarray(states.oom_events, np.int64),
+        "preempt_events": np.asarray(states.preempt_events, np.int64),
+    }
+
+
 def completion_table(state: SimState, wl: Workload) -> np.ndarray:
     """[MP, 4] array: (arrival, completion, status, priority) for analysis."""
     return np.stack(
@@ -243,4 +315,4 @@ def completion_table(state: SimState, wl: Workload) -> np.ndarray:
     )
 
 
-__all__ = ["summarize", "completion_table"]
+__all__ = ["summarize", "completion_table", "fleet_lane_stats"]

@@ -1,0 +1,161 @@
+"""Parameterised scheduler policies: every built-in scheduler is one
+point in a flat f32 knob vector (the policy-search substrate).
+
+The paper pitches Eudoxia as "a cheap mechanism for developers to
+evaluate different scheduling algorithms"; the Bauplan follow-up
+(PAPERS.md, arXiv 2505.13750-adjacent) closes the loop by *searching*
+over policies with the simulator as the oracle. That search needs a
+continuous policy space in which the hand-written schedulers are
+particular points — this module defines that space.
+
+:class:`PolicyParams` lifts every hard-coded knob of the decision loop
+in ``scheduler.py`` / ``extra_schedulers.py`` into one flat vector:
+chunk sizing, the OOM-retry multiplier and cap, the sjf-vs-fifo queue
+ordering weights, preemption thresholds, and the pool-selection
+(cache-affinity / locality-bonus) rules. ``DEFAULT_POINTS`` maps each
+registered named scheduler to its exact point; the family
+implementation (``scheduler._policy_family``) evaluated at that point
+is bitwise-identical to the named scheduler (tests/test_policy_family.py
+asserts final-state equality across engines, fleets and shardings; the
+48-config digest grid in tests/captures/ stays verbatim-valid).
+
+Everything here is plain numpy/python — no jax import — so the search
+package, the compiled schedulers and the Python reference engine all
+share one definition without circular imports.
+
+>>> from repro.core.policy import DEFAULT_POINTS, PolicyParams
+>>> DEFAULT_POINTS["priority"].chunk_frac
+0.1
+>>> PolicyParams.from_vector(DEFAULT_POINTS["sjf"].to_vector()) == \
+DEFAULT_POINTS["sjf"]
+True
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class PolicyParams(NamedTuple):
+    """One scheduling policy as a flat f32 knob vector.
+
+    Field order IS the vector layout (``to_vector``/``from_vector``);
+    the compiled family and the Python mirror index it positionally.
+    Boolean knobs are encoded as floats with an ``> 0.5`` threshold so
+    the whole vector lives in one dtype and gradient-free searches can
+    sample it uniformly.
+    """
+
+    # ---- allocation sizing (paper §4.1.2) ---------------------------------
+    chunk_frac: float = 0.10    # fresh-arrival grant, fraction of total
+    cap_frac: float = 0.50      # allocation cap fraction (also the
+    #                             OOM-reject threshold when ram_gate is on)
+    retry_mult: float = 2.0     # OOM-retry multiplier on the last grant
+    # ---- queue ordering (sjf-vs-fifo mixing) ------------------------------
+    # The waiting queue is ordered by a lexicographic key whose LEAD
+    # component is  size_weight*n_ops + age_weight*entered
+    # - prio_weight*prio  (f32), followed by the classic
+    # (priority desc, entered asc, pid asc) tie-break. All-zero weights
+    # reproduce the paper's priority order exactly; size_weight=1 with
+    # the rest zero reproduces sjf's (n_ops, -prio, entered) order.
+    size_weight: float = 0.0
+    prio_weight: float = 0.0
+    age_weight: float = 0.0
+    # ---- preemption -------------------------------------------------------
+    preempt: float = 1.0            # > 0.5: preemption enabled
+    preempt_min_prio: float = 0.0   # preemptor must have prio STRICTLY above
+    victim_prio_gap: float = 0.0    # victim prio must be < preemptor - gap
+    # ---- pool selection (data plane) --------------------------------------
+    multi_pool: float = 0.0     # > 0.5: score-based pool choice (else pool 0)
+    cache_pin: float = 0.0      # > 0.5: pin to the pool caching parent data
+    locality_bonus: float = 0.0  # pool-score bonus for pools holding data
+    # ---- naive-mode switches ----------------------------------------------
+    exclusive: float = 0.0      # > 0.5: only assign to an idle cluster,
+    #                             at most one assignment per decision
+    grab_all: float = 0.0       # > 0.5: grant the chosen pool's full caps
+    ram_gate: float = 1.0       # > 0.5: reject only OOMs at the RAM cap
+    #                             (off: any prior OOM is rejected — naive)
+
+    def to_vector(self) -> np.ndarray:
+        """The flat f32 vector the engines consume (``wl.policy``)."""
+        return np.asarray(self, dtype=np.float32)
+
+    @classmethod
+    def from_vector(cls, vec) -> "PolicyParams":
+        vec = np.asarray(vec, dtype=np.float32).reshape(-1)
+        if vec.shape[0] != N_POLICY_PARAMS:
+            raise ValueError(
+                f"policy vector must have {N_POLICY_PARAMS} entries "
+                f"({', '.join(cls._fields)}), got {vec.shape[0]}"
+            )
+        return cls(*(float(v) for v in vec))
+
+
+N_POLICY_PARAMS = len(PolicyParams._fields)
+
+
+# ---------------------------------------------------------------------------
+# The named schedulers as policy points. Evaluating the parameterised
+# family at each point is bitwise-identical to the named scheduler
+# (the identity suite in tests/test_policy_family.py is the proof).
+# ---------------------------------------------------------------------------
+DEFAULT_POINTS: dict[str, PolicyParams] = {
+    # one pool, everything to the queue head, only on an idle cluster;
+    # a pipeline that OOMed with all resources is rejected outright
+    "naive": PolicyParams(
+        preempt=0.0, exclusive=1.0, grab_all=1.0, ram_gate=0.0,
+    ),
+    # 10% chunks, OOM doubling capped at 50%, preemption, single pool
+    "priority": PolicyParams(),
+    # ditto on the most-free pool
+    "priority_pool": PolicyParams(multi_pool=1.0),
+    # priority_pool pinned to the pool caching the pipe's parent outputs
+    "cache_aware": PolicyParams(multi_pool=1.0, cache_pin=1.0),
+    # priority_pool with a small locality bonus on the pool score
+    "locality_pool": PolicyParams(multi_pool=1.0, locality_bonus=1e-3),
+    # smallest-job-first: 25% chunks, no preemption, op-count lead key
+    "sjf": PolicyParams(
+        chunk_frac=0.25, size_weight=1.0, preempt=0.0,
+    ),
+}
+
+
+# search-space box per knob (lo, hi), in PolicyParams field order —
+# the normalised [0, 1]^P cube the CEM driver samples maps through this
+POLICY_BOUNDS: dict[str, tuple[float, float]] = {
+    "chunk_frac": (0.02, 0.60),
+    "cap_frac": (0.10, 1.00),
+    "retry_mult": (1.0, 4.0),
+    "size_weight": (0.0, 2.0),
+    "prio_weight": (0.0, 2.0),
+    "age_weight": (0.0, 1e-3),
+    "preempt": (0.0, 1.0),
+    "preempt_min_prio": (0.0, 2.0),
+    "victim_prio_gap": (0.0, 2.0),
+    "multi_pool": (0.0, 1.0),
+    "cache_pin": (0.0, 1.0),
+    "locality_bonus": (0.0, 0.05),
+    "exclusive": (0.0, 1.0),
+    "grab_all": (0.0, 1.0),
+    "ram_gate": (0.0, 1.0),
+}
+assert tuple(POLICY_BOUNDS) == PolicyParams._fields
+
+
+def policy_bounds() -> tuple[np.ndarray, np.ndarray]:
+    """``(lo, hi)`` f32 vectors of the search box, field order."""
+    lo = np.asarray([POLICY_BOUNDS[f][0] for f in PolicyParams._fields],
+                    np.float32)
+    hi = np.asarray([POLICY_BOUNDS[f][1] for f in PolicyParams._fields],
+                    np.float32)
+    return lo, hi
+
+
+__all__ = [
+    "PolicyParams",
+    "N_POLICY_PARAMS",
+    "DEFAULT_POINTS",
+    "POLICY_BOUNDS",
+    "policy_bounds",
+]

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.kernels.sched_select import masked_lex_argmin
 
 from .params import SimParams
+from .policy import DEFAULT_POINTS, N_POLICY_PARAMS, PolicyParams
 from .state import INF_TICK, SimState, Workload
 from .types import ContainerStatus, PipeStatus, Priority
 
@@ -366,6 +367,233 @@ def _priority_like(pool_mode: str, early_exit: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# THE PARAMETERISED SCHEDULER FAMILY (policy search substrate).
+#
+# One decision loop generalising every built-in: the hard-coded knobs of
+# ``naive_scheduler`` / ``_priority_like`` / ``extra_schedulers._sjf_like``
+# become the flat f32 :class:`repro.core.policy.PolicyParams` vector.
+# Evaluated at a named scheduler's ``DEFAULT_POINTS`` entry the family
+# makes BITWISE-identical decisions (the zero-weight lead key is a
+# constant and narrows nothing; disabled preemption passes every carry
+# through; a zero locality bonus adds +0.0 to a nonnegative pool score;
+# f32 images of the small-int priorities compare exactly), so the final
+# states — and the 48-config digest grid in tests/captures/ — are
+# preserved verbatim. tests/test_policy_family.py asserts this identity
+# against the legacy implementations above, which remain as oracles.
+#
+# Two modes:
+#   * static point (named schedulers): the point's floats are baked
+#     into the jaxpr as constants — ``register_vector_scheduler_family
+#     (key, params=point)`` wires the registry;
+#   * dynamic (key ``"policy"``): the vector is read from
+#     ``wl.policy``, so a vmapped fleet evaluates a different candidate
+#     policy per lane in ONE compiled program (repro.search).
+# ---------------------------------------------------------------------------
+def _policy_pool_select(pol: PolicyParams, free_cpu, free_ram,
+                        sim: SimState, pipe_c):
+    """Knob-driven pool selection generalising :func:`_pool_select`.
+
+    ``multi_pool`` off reproduces "single" (pool 0); on, the most-free
+    score rule with ``locality_bonus`` added where the pipe has cached
+    data ("free" at bonus 0, "locality" at 1e-3) and ``cache_pin``
+    overriding to the best caching pool when one exists ("cache")."""
+    score = free_cpu / jnp.maximum(sim.pool_cpu_cap, EPS) + (
+        free_ram / jnp.maximum(sim.pool_ram_cap, EPS)
+    )
+    row = sim.cache_bytes[:, pipe_c]  # [NP] bytes of this pipe's data
+    bonus = jnp.where(row > 0, jnp.float32(pol.locality_bonus),
+                      jnp.float32(0.0))
+    best = jnp.argmax(score + bonus)
+    use_cache = (pol.cache_pin > 0.5) & (jnp.max(row) > 0)
+    pool = jnp.where(use_cache, jnp.argmax(row), best)
+    return jnp.where(pol.multi_pool > 0.5, pool, 0).astype(jnp.int32)
+
+
+def _policy_family(early_exit: bool, static_policy: PolicyParams | None):
+    """Build the parameterised scheduler (see the block comment above).
+
+    ``static_policy`` is a :class:`PolicyParams` of python floats (the
+    named-scheduler points) or None, which reads the traced vector from
+    ``wl.policy`` — the per-lane axis policy-grid fleets vmap over."""
+
+    def scheduler(
+        sched_state: Any, sim: SimState, wl: Workload, params: SimParams
+    ):
+        if static_policy is not None:
+            pol = PolicyParams(
+                *(jnp.float32(v) for v in static_policy)
+            )
+        else:
+            if wl.policy is None:
+                raise ValueError(
+                    "scheduler 'policy' needs a workload with a policy "
+                    "vector attached; see repro.search.attach_policies / "
+                    "sweep.policy_grid_workloads"
+                )
+            vec = wl.policy.astype(jnp.float32)
+            pol = PolicyParams(*(vec[i] for i in range(N_POLICY_PARAMS)))
+
+        K = params.max_assignments_per_tick
+        total_cpu = jnp.sum(sim.pool_cpu_cap)
+        total_ram = jnp.sum(sim.pool_ram_cap)
+        chunk_cpu = pol.chunk_frac * total_cpu
+        chunk_ram = pol.chunk_frac * total_ram
+        cap_cpu = pol.cap_frac * total_cpu
+        cap_ram = pol.cap_frac * total_ram
+
+        preempt_on = pol.preempt > 0.5
+        excl_on = pol.exclusive > 0.5
+        grab_on = pol.grab_all > 0.5
+        gate_on = pol.ram_gate > 0.5
+
+        dec = empty_decision(params)
+        live0 = sim.ctr_status == int(ContainerStatus.RUNNING)
+        idle0 = ~jnp.any(live0)
+        waiting0 = sim.pipe_status == int(PipeStatus.WAITING)
+        # OOM fail-back: at the RAM cap already (ram_gate on), or any
+        # prior OOM at all (ram_gate off — the naive rule: it held every
+        # resource, doubling is impossible)
+        over_cap = sim.pipe_last_ram >= cap_ram - EPS
+        reject = waiting0 & sim.pipe_fail_flag & jnp.where(
+            gate_on, over_cap, True
+        )
+        dec = dec._replace(reject=reject)
+
+        # fused-selection keys, hoisted out of the decision loop. The
+        # f32 lead key mixes sjf-vs-fifo ordering; at all-zero weights
+        # it is constantly +0.0 (every term is a product with +0.0 over
+        # nonnegative finite operands) and the narrowing sweep passes
+        # the mask through untouched.
+        prio_f = wl.prio.astype(jnp.float32)
+        lead = (
+            pol.size_weight * wl.n_ops.astype(jnp.float32)
+            + pol.age_weight * sim.pipe_entered.astype(jnp.float32)
+            - pol.prio_weight * prio_f
+        )
+        head_keys = (lead, -wl.prio, sim.pipe_entered)
+        victim_keys = (sim.ctr_prio, -sim.ctr_start)
+        ctr_prio_f = sim.ctr_prio.astype(jnp.float32)
+        base_mask = waiting0 & ~reject
+
+        def step(k, carry):
+            dec, free_cpu, free_ram, live, tried, assigned = carry
+            mask = base_mask & ~tried
+            pipe = masked_lex_argmin(mask, head_keys)
+            valid = pipe >= 0
+            pipe_c = jnp.maximum(pipe, 0)
+
+            failed = sim.pipe_fail_flag[pipe_c]
+            seen = sim.pipe_last_ram[pipe_c] > 0.0
+            want_cpu = jnp.where(
+                failed,
+                jnp.minimum(pol.retry_mult * sim.pipe_last_cpus[pipe_c],
+                            cap_cpu),
+                jnp.where(seen, sim.pipe_last_cpus[pipe_c], chunk_cpu),
+            )
+            want_ram = jnp.where(
+                failed,
+                jnp.minimum(pol.retry_mult * sim.pipe_last_ram[pipe_c],
+                            cap_ram),
+                jnp.where(seen, sim.pipe_last_ram[pipe_c], chunk_ram),
+            )
+
+            pool = _policy_pool_select(pol, free_cpu, free_ram, sim, pipe_c)
+            # naive's grab-everything grant: the chosen pool's full caps
+            want_cpu = jnp.where(grab_on, sim.pool_cpu_cap[pool], want_cpu)
+            want_ram = jnp.where(grab_on, sim.pool_ram_cap[pool], want_ram)
+
+            fits = (free_cpu[pool] >= want_cpu - EPS) & (
+                free_ram[pool] >= want_ram - EPS
+            )
+
+            # ---- preemption path: gated by the policy knobs -------------
+            can_preempt = (
+                valid & ~fits & preempt_on
+                & (prio_f[pipe_c] > pol.preempt_min_prio)
+            )
+            victim = masked_lex_argmin(
+                live & (ctr_prio_f < prio_f[pipe_c] - pol.victim_prio_gap),
+                victim_keys,
+            )
+            has_victim = can_preempt & (victim >= 0)
+            victim_c = jnp.maximum(victim, 0)
+            vpool = sim.ctr_pool[victim_c]
+            free_cpu2 = jnp.where(
+                has_victim,
+                onehot_add(free_cpu, vpool, sim.ctr_cpus[victim_c]),
+                free_cpu,
+            )
+            free_ram2 = jnp.where(
+                has_victim,
+                onehot_add(free_ram, vpool, sim.ctr_ram[victim_c]),
+                free_ram,
+            )
+            live2 = jnp.where(
+                has_victim, onehot_set(live, victim_c, False), live
+            )
+            pool2_multi = jnp.where(
+                has_victim,
+                vpool,
+                _policy_pool_select(pol, free_cpu2, free_ram2, sim, pipe_c),
+            ).astype(jnp.int32)
+            pool2 = jnp.where(pol.multi_pool > 0.5, pool2_multi, pool)
+            fits2 = (free_cpu2[pool2] >= want_cpu - EPS) & (
+                free_ram2[pool2] >= want_ram - EPS
+            )
+
+            do_norm = valid & (fits | (has_victim & fits2))
+            # exclusive (naive) mode: idle cluster, one assignment, no
+            # fits test — the grant is the full pool anyway
+            do_excl = valid & idle0 & ~assigned
+            do = jnp.where(excl_on, do_excl, do_norm)
+            use_pool = jnp.where(fits, pool, pool2)
+            commit_victim = has_victim & ~fits & fits2
+            suspend = jnp.where(
+                commit_victim,
+                onehot_set(dec.suspend, victim_c, True),
+                dec.suspend,
+            )
+            free_cpu3 = jnp.where(commit_victim, free_cpu2, free_cpu)
+            free_ram3 = jnp.where(commit_victim, free_ram2, free_ram)
+            live3 = jnp.where(commit_victim, live2, live)
+
+            free_cpu4 = jnp.where(
+                do, onehot_add(free_cpu3, use_pool, -want_cpu), free_cpu3
+            )
+            free_ram4 = jnp.where(
+                do, onehot_add(free_ram3, use_pool, -want_ram), free_ram3
+            )
+            dec = dec._replace(
+                suspend=suspend,
+                assign_pipe=onehot_set(
+                    dec.assign_pipe, k, jnp.where(do, pipe_c, -1)
+                ),
+                assign_pool=onehot_set(dec.assign_pool, k, use_pool),
+                assign_cpus=onehot_set(dec.assign_cpus, k, want_cpu),
+                assign_ram=onehot_set(dec.assign_ram, k, want_ram),
+            )
+            assigned = assigned | do
+            tried = jnp.where(valid, onehot_set(tried, pipe_c, True), tried)
+            return (dec, free_cpu4, free_ram4, live3, tried, assigned), valid
+
+        tried0 = jnp.zeros((params.max_pipelines,), bool)
+        carry0 = (
+            dec, sim.pool_cpu_free, sim.pool_ram_free, live0, tried0,
+            jnp.bool_(False),
+        )
+        dec, *_ = decision_loop(step, K, carry0, early_exit)
+        return sched_state, dec
+
+    return scheduler
+
+
+def policy_family_make(point: PolicyParams | None, early_exit: bool):
+    """Family factory for the registry: ``make(early_exit)`` with the
+    policy point partially applied (``functools.partial``-friendly)."""
+    return _policy_family(early_exit, point)
+
+
+# ---------------------------------------------------------------------------
 # Vector-scheduler registry (the compiled lane-major core). The
 # Python-API registry (paper Listing 4 decorators) lives in
 # ``algorithm.py``.
@@ -388,6 +616,11 @@ SchedulerFamily = Callable[[bool], VectorScheduler]
 _VECTOR_FAMILIES: dict[str, SchedulerFamily] = {}
 _VECTOR_INITS: dict[str, Callable[[SimParams], Any]] = {}
 _BUILT: dict[tuple[str, bool], VectorScheduler] = {}
+# scheduler key -> the PolicyParams point it sits at in the policy
+# space (the ``params=`` registry axis). Only schedulers registered
+# with a point appear; the dynamic "policy" family reads its vector
+# from the workload instead and is deliberately absent.
+_POLICY_POINTS: dict[str, PolicyParams] = {}
 # early-exit overrides installed via the deprecated fleet-registry shim;
 # kept separate so (re-)registering a plain scheduler cannot clobber
 # them — registration order stays irrelevant, as under the old dual
@@ -418,16 +651,55 @@ def register_vector_scheduler(key: str):
     return deco
 
 
-def register_vector_scheduler_family(key: str):
-    """Register a scheduler family ``make(early_exit: bool) -> fn``."""
+def register_vector_scheduler_family(
+    key: str, params: PolicyParams | None = None
+):
+    """Register a scheduler family ``make(early_exit: bool) -> fn``.
 
-    def deco(make: SchedulerFamily) -> SchedulerFamily:
+    With ``params=`` (the policy-search axis) the decorated factory is
+    instead called ``make(params, early_exit)`` — pass
+    :func:`policy_family_make` to place a named scheduler at a
+    :class:`PolicyParams` point of the parameterised family — and the
+    point is recorded for :func:`get_policy_point`, so searches can seed
+    populations from (and compare against) every named scheduler.
+    """
+
+    def deco(make) -> SchedulerFamily:
         k = _norm(key)
-        _VECTOR_FAMILIES[k] = make
+        if params is not None:
+            _VECTOR_FAMILIES[k] = functools.partial(make, params)
+            _POLICY_POINTS[k] = params
+        else:
+            _VECTOR_FAMILIES[k] = make
+            _POLICY_POINTS.pop(k, None)
         _invalidate(k)
         return make
 
     return deco
+
+
+def get_policy_point(key: str) -> PolicyParams:
+    """The :class:`PolicyParams` point scheduler ``key`` sits at.
+
+    Raises ``KeyError`` for schedulers registered without ``params=``
+    (custom schedulers, the dynamic "policy" family itself).
+    """
+    k = _norm(key)
+    if k not in _POLICY_POINTS:
+        raise KeyError(
+            f"scheduler {key!r} has no registered policy point; "
+            f"pointed schedulers: {sorted(_POLICY_POINTS)}"
+        )
+    return _POLICY_POINTS[k]
+
+
+def has_policy_point(key: str) -> bool:
+    return _norm(key) in _POLICY_POINTS
+
+
+def policy_points() -> dict[str, PolicyParams]:
+    """All named schedulers with a policy point (search baselines)."""
+    return dict(_POLICY_POINTS)
 
 
 def register_vector_scheduler_init(key: str):
@@ -501,20 +773,44 @@ def get_fleet_vector_scheduler(key: str) -> VectorScheduler:
     return get_vector_scheduler(key, early_exit=True)
 
 
-register_vector_scheduler("naive")(naive_scheduler)
-register_vector_scheduler_family("priority")(
+# The named schedulers ARE points of the parameterised family: each
+# registers through `policy_family_make` at its DEFAULT_POINTS entry
+# (bitwise-identical to the legacy implementations — see the family
+# block comment). The legacy implementations stay registered under
+# `*_ref` keys as independent oracles for the identity test wall; the
+# sjf pair registers from extra_schedulers.py.
+register_vector_scheduler_family("naive", params=DEFAULT_POINTS["naive"])(
+    policy_family_make
+)
+register_vector_scheduler_family(
+    "priority", params=DEFAULT_POINTS["priority"]
+)(policy_family_make)
+register_vector_scheduler_family(
+    "priority_pool", params=DEFAULT_POINTS["priority_pool"]
+)(policy_family_make)
+register_vector_scheduler_family(
+    "cache_aware", params=DEFAULT_POINTS["cache_aware"]
+)(policy_family_make)
+register_vector_scheduler_family(
+    "locality_pool", params=DEFAULT_POINTS["locality_pool"]
+)(policy_family_make)
+# the dynamic family: per-lane vectors from ``wl.policy`` (vmapped
+# policy grids — repro.search evaluates candidate populations with it)
+register_vector_scheduler_family("policy")(
+    functools.partial(policy_family_make, None)
+)
+
+register_vector_scheduler("naive_ref")(naive_scheduler)
+register_vector_scheduler_family("priority_ref")(
     functools.partial(_priority_like, "single")
 )
-register_vector_scheduler_family("priority_pool")(
+register_vector_scheduler_family("priority_pool_ref")(
     functools.partial(_priority_like, "free")
 )
-# The data-plane families are `_priority_like` too, so they register
-# here (their Python twins live in extra_schedulers.py); the sjf family
-# is registered from extra_schedulers.py.
-register_vector_scheduler_family("cache_aware")(
+register_vector_scheduler_family("cache_aware_ref")(
     functools.partial(_priority_like, "cache")
 )
-register_vector_scheduler_family("locality_pool")(
+register_vector_scheduler_family("locality_pool_ref")(
     functools.partial(_priority_like, "locality")
 )
 
@@ -557,6 +853,10 @@ __all__ = [
     "select_next_pipe",
     "select_victim",
     "naive_scheduler",
+    "policy_family_make",
+    "get_policy_point",
+    "has_policy_point",
+    "policy_points",
     "priority_scheduler",
     "priority_pool_scheduler",
     "cache_aware_scheduler",

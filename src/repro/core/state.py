@@ -64,6 +64,11 @@ class Workload(NamedTuple):
     #    bits instead of re-reducing f32 arrays in engine-specific order)
     # ---- chaos layer: pre-materialised fault events (None = faults off) --
     faults: "FaultTrace | None" = None
+    # ---- policy search: flat PolicyParams f32 vector consumed by the
+    # dynamic "policy" scheduler family (None = named schedulers only).
+    # Riding the Workload (not SimParams) puts it on the vmapped fleet
+    # axis, so a policy-grid fleet evaluates one candidate per lane.
+    policy: "jax.Array | None" = None  # [N_POLICY_PARAMS] f32
 
     @property
     def max_pipelines(self) -> int:

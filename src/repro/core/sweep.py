@@ -106,6 +106,99 @@ def pad_lanes(wls: Workload, n_lanes: int) -> Workload:
     return padded
 
 
+def attach_policies(wls: Workload, policies) -> Workload:
+    """Attach :class:`~repro.core.policy.PolicyParams` vectors to a
+    workload batch for the dynamic ``"policy"`` scheduler family.
+
+    ``policies`` is ``[F, P]`` (one policy per lane), a single ``[P]``
+    vector broadcast to every lane, or a ``PolicyParams`` /sequence of
+    them. The vectors ride the workload pytree, so ``pad_lanes``,
+    ``bin_lanes_by_density`` and device sharding treat them like any
+    other per-lane leaf — lane ``i`` always simulates under policy
+    ``i``, whatever the binning or sharding.
+
+    >>> import numpy as np
+    >>> from repro.core import SimParams, make_workload_batch
+    >>> from repro.core.policy import DEFAULT_POINTS
+    >>> from repro.core.sweep import attach_policies
+    >>> p = SimParams(max_pipelines=8, max_ops_per_pipeline=4)
+    >>> wls = attach_policies(make_workload_batch(p, [0, 1]),
+    ...                       DEFAULT_POINTS["sjf"])
+    >>> wls.policy.shape
+    (2, 15)
+    """
+    from .policy import N_POLICY_PARAMS, PolicyParams
+
+    if isinstance(policies, PolicyParams):
+        policies = policies.to_vector()
+    elif isinstance(policies, (list, tuple)) and policies and isinstance(
+        policies[0], PolicyParams
+    ):
+        policies = np.stack([p.to_vector() for p in policies])
+    pol = jnp.asarray(policies, jnp.float32)
+    F = wls.arrival.shape[0]
+    if pol.ndim == 1:
+        pol = jnp.broadcast_to(pol, (F, pol.shape[0]))
+    if pol.shape != (F, N_POLICY_PARAMS):
+        raise ValueError(
+            f"policies must be [{F}, {N_POLICY_PARAMS}] (one PolicyParams "
+            f"vector per lane) or a single [{N_POLICY_PARAMS}] vector, "
+            f"got {pol.shape}"
+        )
+    return wls._replace(policy=pol)
+
+
+def policy_grid_workloads(
+    wls: Workload, policies
+) -> tuple[Workload, int, int]:
+    """Tile a scenario batch across a policy grid on the fleet axis.
+
+    ``wls`` is an ``[S, ...]`` scenario batch (e.g. from
+    ``scenario_fleet``), ``policies`` a ``[C, P]`` candidate grid (or a
+    sequence of ``PolicyParams``). Returns ``(grid_wls, C, S)`` where
+    ``grid_wls`` is the ``[C*S, ...]`` batch whose lane ``c*S + s``
+    runs scenario ``s`` under candidate ``c`` — one ``fleet_run`` with
+    ``scheduler_key="policy"`` evaluates the whole grid, sharded and
+    lane-binned like any other fleet.
+
+    >>> import numpy as np
+    >>> from repro.core import SimParams, make_workload_batch
+    >>> from repro.core.policy import DEFAULT_POINTS
+    >>> from repro.core.sweep import policy_grid_workloads
+    >>> p = SimParams(max_pipelines=8, max_ops_per_pipeline=4)
+    >>> grid, C, S = policy_grid_workloads(
+    ...     make_workload_batch(p, [0, 1, 2]),
+    ...     [DEFAULT_POINTS["priority"], DEFAULT_POINTS["sjf"]])
+    >>> grid.arrival.shape, (C, S)
+    ((6, 8), (2, 3))
+    >>> grid.policy.shape
+    (6, 15)
+    """
+    from .policy import N_POLICY_PARAMS, PolicyParams
+
+    if isinstance(policies, (list, tuple)) and policies and isinstance(
+        policies[0], PolicyParams
+    ):
+        policies = np.stack([p.to_vector() for p in policies])
+    pol = jnp.asarray(policies, jnp.float32)
+    if pol.ndim != 2 or pol.shape[1] != N_POLICY_PARAMS:
+        raise ValueError(
+            f"policies must be a [C, {N_POLICY_PARAMS}] grid, got "
+            f"{pol.shape}"
+        )
+    if wls.policy is not None:
+        raise ValueError(
+            "scenario batch already carries policy vectors; build the "
+            "grid from a policy-free batch"
+        )
+    C = int(pol.shape[0])
+    S = int(wls.arrival.shape[0])
+    tiled = jax.tree.map(
+        lambda x: jnp.tile(x, (C,) + (1,) * (x.ndim - 1)), wls
+    )
+    return tiled._replace(policy=jnp.repeat(pol, S, axis=0)), C, S
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -328,6 +421,12 @@ def fleet_run(
                 f"trace_capacity must be positive, got {trace_capacity}"
             )
     wls = workloads if seeds is None else make_workload_batch(params, seeds)
+    if scheduler_key.replace("-", "_").lower() == "policy" and wls.policy is None:
+        raise ValueError(
+            "scheduler 'policy' needs per-lane PolicyParams vectors on "
+            "the workload batch; attach them with attach_policies(wls, "
+            "policies) or build a grid with policy_grid_workloads"
+        )
     if params.fault_trace_active and wls.faults is None:
         # trace/scenario batches carry no fault traces of their own;
         # derive the per-lane chaos schedule from params.seed so replays
@@ -473,9 +572,11 @@ def _fleet_hit_rate(states: SimState) -> float:
 
 
 __all__ = [
+    "attach_policies",
     "fleet_run",
     "fleet_summary",
     "make_workload_batch",
+    "policy_grid_workloads",
     "workload_batch_from_traces",
     "pad_lanes",
     "bin_lanes_by_density",

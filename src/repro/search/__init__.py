@@ -1,0 +1,51 @@
+"""Fleet-scale scheduling-policy search on top of the fused engine.
+
+The paper frames Eudoxia as "a cheap mechanism for developers to
+evaluate different scheduling algorithms"; the Bauplan follow-up
+(PAPERS.md) closes the loop by *searching* policy space with the
+simulator as the oracle. This package is that loop:
+
+* :mod:`repro.search.space` — the normalised policy box
+  (:class:`~repro.core.policy.PolicyParams` bounds) with threaded-key
+  sampling;
+* :mod:`repro.search.pareto` — NaN-guarded dominance and Pareto fronts;
+* :mod:`repro.search.grid` — one ``fleet_run`` per evaluation: the
+  fleet axis spans policy candidates × scenario lanes (vmapped, device-
+  sharded, lane-binned like any other fleet);
+* :mod:`repro.search.driver` — a gradient-free CEM driver with
+  successive-halving rungs, pure-numpy elite selection, and a recorded
+  candidate-history artifact.
+
+Reproducibility contract (docs/policy-search.md): all randomness flows
+from one ``jax.random.PRNGKey(seed)`` threaded by ``fold_in``; scenario
+batches are rebuilt bitwise-identically from fixed seeds per rung
+(``fleet_run`` donates its input); elite selection is ``np.lexsort``
+with an index tie-break. Same seed ⇒ identical candidate history and
+Pareto front, on or off device sharding.
+"""
+from .driver import (
+    SearchResult,
+    cem_search,
+    elite_select,
+    halving_lane_counts,
+    scalarize,
+)
+from .grid import OBJECTIVES, evaluate_policies, scenario_factory
+from .pareto import dominates, pareto_front, sanitize, weakly_dominates
+from .space import PolicySpace
+
+__all__ = [
+    "OBJECTIVES",
+    "PolicySpace",
+    "SearchResult",
+    "cem_search",
+    "dominates",
+    "elite_select",
+    "evaluate_policies",
+    "halving_lane_counts",
+    "pareto_front",
+    "sanitize",
+    "scalarize",
+    "scenario_factory",
+    "weakly_dominates",
+]

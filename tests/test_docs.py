@@ -23,7 +23,8 @@ def test_docs_directory_complete():
     """The documented docs map: every page README links into exists."""
     for page in ("architecture.md", "trace-format.md",
                  "scheduler-authoring.md", "scenarios.md",
-                 "observability.md", "faults.md", "closed-loop.md"):
+                 "observability.md", "faults.md", "closed-loop.md",
+                 "policy-search.md"):
         assert (REPO / "docs" / page).exists(), f"docs/{page} missing"
 
 
@@ -73,3 +74,21 @@ def test_telemetry_doctests():
 
     _run_doctests(decode)
     _run_doctests(export)
+
+
+def test_policy_doctests():
+    """The PolicyParams space examples backing docs/policy-search.md
+    stay runnable."""
+    from repro.core import policy
+
+    _run_doctests(policy)
+
+
+def test_search_doctests():
+    """The search-stack examples (Pareto dominance, PolicySpace
+    sampling, halving rungs) stay runnable."""
+    from repro.search import driver, pareto, space
+
+    _run_doctests(pareto)
+    _run_doctests(space)
+    _run_doctests(driver)

@@ -1,0 +1,192 @@
+"""The parameterised-scheduler identity wall.
+
+Every named scheduler is now ONE POINT in the ``PolicyParams`` space
+(``repro.core.policy.DEFAULT_POINTS``), executed by the unified
+``_policy_family`` step. These tests pin the refactor's contract: at
+its default point the family is **bitwise identical** to the legacy
+decision loop it replaced — per named scheduler, with the data plane
+on and off, on the single-sim path, the fused fleet path, and the
+device-sharded fleet path — and the dynamic per-lane ``"policy"``
+scheduler reproduces the same states from the point *vectors*.
+
+The legacy loops stay registered as ``<name>_ref`` oracles purely so
+this wall can keep comparing against the original code, not a
+re-derivation of it.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    SimParams,
+    fleet_run,
+    generate_workload,
+    run,
+)
+from repro.core.policy import DEFAULT_POINTS, N_POLICY_PARAMS, PolicyParams
+from repro.core.scheduler import get_policy_point, has_policy_point, policy_points
+from repro.core.sweep import attach_policies, make_workload_batch
+
+NAMED = sorted(DEFAULT_POINTS)  # the six built-in schedulers
+
+DATA_PLANE = dict(
+    cache_gb_per_pool=4.0,
+    scan_ticks_per_gb=50.0,
+    cold_start_ticks=40,
+    container_warm_ticks=2_000,
+)
+
+
+def _params(algo: str, dp: bool, seed: int = 0) -> SimParams:
+    return SimParams(
+        duration=0.05,
+        seed=seed,
+        scheduling_algo=algo,
+        num_pools=2,
+        waiting_ticks_mean=400.0,
+        op_base_seconds_mean=0.004,
+        op_base_seconds_sigma=1.0,
+        op_ram_gb_mean=2.0,
+        max_pipelines=32,
+        max_containers=32,
+        **(DATA_PLANE if dp else {}),
+    )
+
+
+def _assert_states_bitwise(a, b, ctx=""):
+    """EVERY array leaf equal — both sides run the same fused engine,
+    so the family refactor owes exact, not approximate, agreement."""
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=ctx
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry surface
+# ---------------------------------------------------------------------------
+def test_policy_points_registry():
+    pts = policy_points()
+    assert set(NAMED) <= set(pts)
+    for name in NAMED:
+        assert has_policy_point(name)
+        pt = get_policy_point(name)
+        assert isinstance(pt, PolicyParams)
+        vec = pt.to_vector()
+        assert vec.shape == (N_POLICY_PARAMS,)
+        # vector-level round trip is bitwise (f32 quantisation applies
+        # once: python floats like 0.1 land on the nearest f32)
+        rt = PolicyParams.from_vector(vec).to_vector()
+        np.testing.assert_array_equal(rt, vec, err_msg=name)
+    assert not has_policy_point("policy")  # the dynamic family has no point
+
+
+# ---------------------------------------------------------------------------
+# Identity: named scheduler == legacy oracle, single-sim path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dp", [False, True], ids=["plain", "data_plane"])
+@pytest.mark.parametrize("algo", NAMED)
+def test_named_equals_legacy_run(algo, dp):
+    params = _params(algo, dp)
+    wl = generate_workload(params)
+    got = run(params, workload=wl, engine="event")
+    want = run(
+        params.replace(scheduling_algo=f"{algo}_ref"),
+        workload=wl,
+        engine="event",
+    )
+    _assert_states_bitwise(got.state, want.state, ctx=f"run/{algo}/dp={dp}")
+
+
+# ---------------------------------------------------------------------------
+# Identity: fused fleet and device-sharded fleet paths
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shard", [None, "auto"], ids=["fused", "sharded"])
+@pytest.mark.parametrize("dp", [False, True], ids=["plain", "data_plane"])
+@pytest.mark.parametrize("algo", NAMED)
+def test_named_equals_legacy_fleet(algo, dp, shard):
+    params = _params(algo, dp)
+    seeds = [0, 1, 2, 3]
+    got = fleet_run(
+        params, workloads=make_workload_batch(params, seeds), shard=shard
+    )
+    want = fleet_run(
+        params.replace(scheduling_algo=f"{algo}_ref"),
+        workloads=make_workload_batch(params, seeds),
+        shard=shard,
+    )
+    _assert_states_bitwise(
+        got, want, ctx=f"fleet/{algo}/dp={dp}/shard={shard}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Identity: the DYNAMIC family fed the point vector == the named build
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shard", [None, "auto"], ids=["fused", "sharded"])
+@pytest.mark.parametrize("algo", ["priority", "cache_aware", "sjf"])
+def test_dynamic_vector_equals_named_fleet(algo, shard):
+    params = _params(algo, dp=True)
+    seeds = [0, 1, 2, 3]
+    named = fleet_run(
+        params, workloads=make_workload_batch(params, seeds), shard=shard
+    )
+    dyn_wls = attach_policies(
+        make_workload_batch(params, seeds), DEFAULT_POINTS[algo]
+    )
+    dyn = fleet_run(
+        params.replace(scheduling_algo="policy"),
+        workloads=dyn_wls,
+        shard=shard,
+    )
+    _assert_states_bitwise(dyn, named, ctx=f"dyn/{algo}/shard={shard}")
+
+
+def test_mixed_policy_lanes_match_named_lanes():
+    """A fleet mixing per-lane policy VECTORS (priority on lanes 0/2,
+    sjf on lanes 1/3) reproduces each lane's named-scheduler state."""
+    params = _params("priority", dp=True)
+    seeds = [0, 1, 2, 3]
+    pol = np.stack(
+        [
+            DEFAULT_POINTS[n].to_vector()
+            for n in ("priority", "sjf", "priority", "sjf")
+        ]
+    )
+    mixed = fleet_run(
+        params.replace(scheduling_algo="policy"),
+        workloads=attach_policies(make_workload_batch(params, seeds), pol),
+    )
+    for algo, lanes in (("priority", [0, 2]), ("sjf", [1, 3])):
+        named = fleet_run(
+            params.replace(scheduling_algo=algo),
+            workloads=make_workload_batch(params, seeds),
+        )
+        for f in ("pipe_status", "pipe_completion", "done_count",
+                  "preempt_events", "util_cpu_s", "cost_dollars"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(mixed, f))[lanes],
+                np.asarray(getattr(named, f))[lanes],
+                err_msg=f"mixed/{algo}/{f}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# Guards
+# ---------------------------------------------------------------------------
+def test_policy_key_requires_vectors():
+    params = _params("priority", dp=False).replace(scheduling_algo="policy")
+    with pytest.raises(ValueError, match="policy"):
+        fleet_run(params, workloads=make_workload_batch(params, [0, 1]))
+
+
+def test_attach_policies_validates_shape():
+    params = _params("priority", dp=False)
+    wls = make_workload_batch(params, [0, 1])
+    with pytest.raises(ValueError):
+        attach_policies(wls, np.zeros((3, N_POLICY_PARAMS), np.float32))
+    with pytest.raises(ValueError):
+        attach_policies(wls, np.zeros((2, N_POLICY_PARAMS + 1), np.float32))
